@@ -1,0 +1,255 @@
+"""Numpy logistic-regression runners reproducing the paper's Section 4
+experimental protocol (the paper's own implementation is numpy, see §4.1).
+
+All runners share the protocol:
+  * stochastic gradient of  f(x) = mean log(1+exp(-b a^T x)) + lam/2 |x|^2
+  * stepsizes eta_t = gamma / (lam (t + a))           (Table 2)
+  * final estimate  x_bar = sum w_t x_t / S_T,  w_t = (t + a)^2  (Thm 2.4)
+  * per-step transmitted bits per the paper's accounting (Appendix B)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core import encoding
+from repro.data.synthetic import LogRegData, logreg_loss_np
+
+
+@dataclasses.dataclass
+class RunResult:
+    name: str
+    losses: list  # (step, f(x_bar or x)) pairs
+    bits_per_step: float
+    wall_s: float
+
+    @property
+    def final_loss(self) -> float:
+        return self.losses[-1][1]
+
+
+def _topk(u: np.ndarray, k: int) -> np.ndarray:
+    out = np.zeros_like(u)
+    idx = np.argpartition(np.abs(u), -k)[-k:]
+    out[idx] = u[idx]
+    return out
+
+
+def _randk(u: np.ndarray, k: int, rng) -> np.ndarray:
+    out = np.zeros_like(u)
+    idx = rng.choice(u.size, size=k, replace=False)
+    out[idx] = u[idx]
+    return out
+
+
+def _qsgd_quantize(g: np.ndarray, s: int, rng) -> np.ndarray:
+    norm = np.linalg.norm(g)
+    if norm == 0:
+        return g
+    r = np.abs(g) / norm * s
+    lo = np.floor(r)
+    up = rng.random(g.shape) < (r - lo)
+    return norm * np.sign(g) * (lo + up) / s
+
+
+def _sgrad(data: LogRegData, x: np.ndarray, i: int) -> np.ndarray:
+    ai = data.A[i]
+    bi = data.b[i]
+    z = -bi * float(ai @ x)
+    sig = 1.0 / (1.0 + np.exp(-z))
+    return -(bi * sig) * ai + data.lam * x
+
+
+def run_memsgd(
+    data: LogRegData,
+    T: int,
+    k: int,
+    comp: str = "top",  # top | rand
+    gamma: float = 2.0,
+    a: Optional[float] = None,
+    seed: int = 0,
+    eval_every: Optional[int] = None,
+    weighted_avg: bool = True,
+) -> RunResult:
+    """Paper Algorithm 1 on logistic regression."""
+    rng = np.random.default_rng(seed)
+    d = data.d
+    if a is None:
+        a = d / k  # paper Table 2 (epsilon)
+    x = np.zeros(d)
+    m = np.zeros(d)
+    xbar = np.zeros(d)
+    wsum = 0.0
+    eval_every = eval_every or max(1, T // 20)
+    losses = []
+    t0 = time.time()
+    for t in range(T):
+        eta = gamma / (data.lam * (t + a))
+        i = rng.integers(data.n)
+        g = _sgrad(data, x, i)
+        u = m + eta * g
+        gt = _topk(u, k) if comp == "top" else _randk(u, k, rng)
+        x = x - gt
+        m = u - gt
+        w = (t + a) ** 2
+        xbar += w * x
+        wsum += w
+        if (t + 1) % eval_every == 0 or t == T - 1:
+            xe = xbar / wsum if weighted_avg else x
+            losses.append((t + 1, logreg_loss_np(data, xe)))
+    return RunResult(
+        name=f"memsgd_{comp}{k}(a={a:.0f})",
+        losses=losses,
+        bits_per_step=encoding.sparse_bits(d, k),
+        wall_s=time.time() - t0,
+    )
+
+
+def run_sgd(
+    data: LogRegData, T: int, gamma: float = 2.0, a: float = 1.0,
+    seed: int = 0, eval_every: Optional[int] = None,
+    weighted_avg: bool = True,
+) -> RunResult:
+    """Vanilla SGD (k = d, dense communication)."""
+    rng = np.random.default_rng(seed)
+    d = data.d
+    x = np.zeros(d)
+    xbar = np.zeros(d)
+    wsum = 0.0
+    eval_every = eval_every or max(1, T // 20)
+    losses = []
+    t0 = time.time()
+    for t in range(T):
+        eta = gamma / (data.lam * (t + a))
+        i = rng.integers(data.n)
+        x = x - eta * _sgrad(data, x, i)
+        w = (t + a) ** 2
+        xbar += w * x
+        wsum += w
+        if (t + 1) % eval_every == 0 or t == T - 1:
+            xe = xbar / wsum if weighted_avg else x
+            losses.append((t + 1, logreg_loss_np(data, xe)))
+    return RunResult(
+        name="sgd",
+        losses=losses,
+        bits_per_step=encoding.dense_bits(d),
+        wall_s=time.time() - t0,
+    )
+
+
+def run_qsgd(
+    data: LogRegData, T: int, bits: int, gamma0: float = 0.2,
+    seed: int = 0, eval_every: Optional[int] = None,
+    sparse_aware: bool = False,
+) -> RunResult:
+    """QSGD baseline (Alistarh et al.) with s = 2^bits levels and the
+    Bottou stepsize used for the comparison in paper §4.3."""
+    rng = np.random.default_rng(seed)
+    d = data.d
+    s = 2**bits
+    x = np.zeros(d)
+    eval_every = eval_every or max(1, T // 20)
+    losses = []
+    t0 = time.time()
+    d_eff = d
+    if sparse_aware:
+        d_eff = max(1, int((data.A != 0).sum(axis=1).mean()))
+    for t in range(T):
+        eta = gamma0 / (1 + gamma0 * data.lam * t)
+        i = rng.integers(data.n)
+        g = _qsgd_quantize(_sgrad(data, x, i), s, rng)
+        x = x - eta * g
+        if (t + 1) % eval_every == 0 or t == T - 1:
+            losses.append((t + 1, logreg_loss_np(data, x)))
+    return RunResult(
+        name=f"qsgd_{bits}bit",
+        losses=losses,
+        bits_per_step=encoding.qsgd_bits(d_eff, s),
+        wall_s=time.time() - t0,
+    )
+
+
+def run_memsgd_bottou(
+    data: LogRegData, T: int, k: int, gamma0: float = 0.2, seed: int = 0,
+    eval_every: Optional[int] = None,
+) -> RunResult:
+    """Mem-SGD with the same Bottou stepsize (paper §4.3 comparison)."""
+    rng = np.random.default_rng(seed)
+    d = data.d
+    x = np.zeros(d)
+    m = np.zeros(d)
+    eval_every = eval_every or max(1, T // 20)
+    losses = []
+    t0 = time.time()
+    for t in range(T):
+        eta = gamma0 / (1 + gamma0 * data.lam * t)
+        i = rng.integers(data.n)
+        u = m + eta * _sgrad(data, x, i)
+        gt = _topk(u, k)
+        x = x - gt
+        m = u - gt
+        if (t + 1) % eval_every == 0 or t == T - 1:
+            losses.append((t + 1, logreg_loss_np(data, x)))
+    return RunResult(
+        name=f"memsgd_top{k}_bottou",
+        losses=losses,
+        bits_per_step=encoding.sparse_bits(d, k),
+        wall_s=time.time() - t0,
+    )
+
+
+def reference_optimum(data: LogRegData, iters: int = 2000) -> float:
+    """f* via full gradient descent (L-smooth => eta = 1/L works)."""
+    L = 0.25 * float((data.A**2).sum(axis=1).max()) + data.lam
+    x = np.zeros(data.d)
+    eta = 1.0 / L
+    for _ in range(iters):
+        z = -data.b * (data.A @ x)
+        sig = 1.0 / (1.0 + np.exp(-z))
+        g = -(data.A * (data.b * sig)[:, None]).mean(axis=0) + data.lam * x
+        x = x - eta * g
+    return logreg_loss_np(data, x)
+
+
+def run_parallel_memsgd_sim(
+    data: LogRegData, T_per_worker: int, k: int, n_workers: int,
+    eta: float = 0.05, seed: int = 0, staleness: bool = True,
+) -> RunResult:
+    """PARALLEL-MEM-SGD (Algorithm 2) simulation of the multicore
+    experiment (paper §4.4).
+
+    TPU adaptation note (DESIGN.md): the paper's lock-free shared-memory
+    race has no TPU analogue, so we SIMULATE the Hogwild-style execution:
+    workers take turns applying their sparse updates to the shared iterate,
+    each computing its gradient on a stale snapshot (the iterate as of its
+    previous turn) — the same staleness pattern a lock-free run exhibits,
+    with W-step-old reads."""
+    rng = np.random.default_rng(seed)
+    d = data.d
+    x = np.zeros(d)
+    mems = np.zeros((n_workers, d))
+    snapshots = np.zeros((n_workers, d))  # stale views
+    losses = []
+    t0 = time.time()
+    eval_every = max(1, T_per_worker // 10)
+    for t in range(T_per_worker):
+        for w in range(n_workers):
+            xw = snapshots[w] if staleness and t > 0 else x
+            i = rng.integers(data.n)
+            g = _sgrad(data, xw, i)
+            u = mems[w] + eta * g
+            gt = _topk(u, k)
+            x = x - gt  # sparse write into the shared iterate
+            mems[w] = u - gt
+            snapshots[w] = x.copy()
+        if (t + 1) % eval_every == 0 or t == T_per_worker - 1:
+            losses.append((t + 1, logreg_loss_np(data, x)))
+    return RunResult(
+        name=f"parallel_mem_top{k}_W{n_workers}",
+        losses=losses,
+        bits_per_step=encoding.sparse_bits(d, k) * n_workers,
+        wall_s=time.time() - t0,
+    )

@@ -1,0 +1,60 @@
+"""Regenerate the EXPERIMENTS.md roofline table from the dry-run JSONs.
+
+Run:  PYTHONPATH=src python -m benchmarks.roofline_report [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str, tag: str = "", include_opt: bool = False) -> list:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*_{mesh}*.json"))):
+        if "_opt" in os.path.basename(path) and not include_opt:
+            continue  # perf-iteration artifacts (§Perf), not baselines
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("mesh") != mesh:
+            continue
+        rows.append(rec)
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])
+                             if r["shape"] in SHAPE_ORDER else 99))
+    return rows
+
+
+def fmt_md(rows: list) -> str:
+    out = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant |"
+        " useful | peak GiB/dev | fits 16G |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        peak = (r.get("peak_memory_bytes") or 0) / 2**30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3g} "
+            f"| {r['memory_s']:.3g} | {r['collective_s']:.3g} "
+            f"| **{r['dominant']}** | {r['useful_ratio']:.2f} "
+            f"| {peak:.1f} | {'yes' if peak <= 16 else 'NO'} |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    rows = load(args.mesh)
+    print(fmt_md(rows))
+    print(f"\n{len(rows)} rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,266 @@
+"""Benchmark harness — one function per paper figure/table.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = the
+figure-specific headline number). Artifacts (full loss curves) are written
+to experiments/bench/*.json.
+
+  fig2_convergence   paper Fig. 2 — Mem-SGD top-k/rand-k vs SGD, delay
+                     ablation, theoretical stepsizes + weighted averaging
+  fig3_qsgd          paper Fig. 3 — Mem-SGD vs QSGD, convergence + bits
+  fig4_multicore     paper Fig. 4 — PARALLEL-MEM-SGD scaling (simulated)
+  table_comm         communication-volume table for the 10 assigned archs
+  kernel_topk        Pallas kernel wall-time (interpret mode) vs oracle
+
+Fast mode (default) uses reduced n/T; ``--full`` approaches paper scale.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+
+
+def _emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def _save(name: str, payload: dict):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+
+
+# ---------------------------------------------------------------------------
+
+
+def fig2_convergence(full: bool = False):
+    from benchmarks.logreg_runners import (
+        reference_optimum,
+        run_memsgd,
+        run_sgd,
+    )
+    from repro.data import make_epsilon_like
+
+    n, d = (400_000, 2_000) if full else (4_000, 200)
+    T = 4 * n if full else 3 * n
+    data = make_epsilon_like(n=n, d=d, seed=0)
+    fstar = reference_optimum(data)
+    rows = {}
+    runs = [
+        ("sgd", lambda: run_sgd(data, T, gamma=2.0, a=1.0)),
+        ("top1", lambda: run_memsgd(data, T, k=max(1, d // 2000), comp="top")),
+        ("top_k2", lambda: run_memsgd(data, T, k=max(2, 2 * d // 2000),
+                                      comp="top")),
+        ("rand1", lambda: run_memsgd(data, T, k=max(1, d // 2000),
+                                     comp="rand")),
+        ("top1_no_delay", lambda: run_memsgd(data, T, k=max(1, d // 2000),
+                                             comp="top", a=1.0)),
+    ]
+    for label, fn in runs:
+        r = fn()
+        subopt = r.final_loss - fstar
+        rows[label] = {
+            "losses": r.losses, "subopt": subopt,
+            "bits_per_step": r.bits_per_step, "fstar": fstar,
+        }
+        _emit(f"fig2_{label}", r.wall_s / max(1, T) * 1e6,
+              f"subopt={subopt:.3e}")
+    _save("fig2_convergence", rows)
+    # paper claims to validate (EXPERIMENTS.md):
+    # (1) top-k with memory converges comparably to SGD
+    ok1 = rows["top1"]["subopt"] < 5 * max(rows["sgd"]["subopt"], 1e-4)
+    # (2) 'without delay' (a=1) is clearly worse than a = d/k
+    ok2 = rows["top1_no_delay"]["subopt"] > rows["top1"]["subopt"]
+    _emit("fig2_claims", 0.0, f"memory_matches_sgd={ok1};delay_matters={ok2}")
+    return rows
+
+
+def fig3_qsgd(full: bool = False):
+    from benchmarks.logreg_runners import (
+        reference_optimum,
+        run_memsgd_bottou,
+        run_qsgd,
+    )
+    from repro.data import make_epsilon_like
+
+    n, d = (400_000, 2_000) if full else (4_000, 200)
+    T = 2 * n
+    data = make_epsilon_like(n=n, d=d, seed=1)
+    fstar = reference_optimum(data)
+    rows = {}
+    k1 = max(1, d // 2000)
+    runs = [
+        ("mem_top1", lambda: run_memsgd_bottou(data, T, k=k1, gamma0=0.5)),
+        ("qsgd_2bit", lambda: run_qsgd(data, T, bits=2, gamma0=0.5)),
+        ("qsgd_4bit", lambda: run_qsgd(data, T, bits=4, gamma0=0.5)),
+        ("qsgd_8bit", lambda: run_qsgd(data, T, bits=8, gamma0=0.5)),
+    ]
+    for label, fn in runs:
+        r = fn()
+        subopt = r.final_loss - fstar
+        total_mb = r.bits_per_step * T / 8 / 1e6
+        rows[label] = {
+            "losses": r.losses, "subopt": subopt,
+            "bits_per_step": r.bits_per_step, "total_MB": total_mb,
+        }
+        _emit(f"fig3_{label}", r.wall_s / max(1, T) * 1e6,
+              f"subopt={subopt:.3e};totalMB={total_mb:.2f}")
+    # paper claim: Mem-SGD transmits ~2 orders of magnitude fewer bits than
+    # QSGD while converging to comparable accuracy (vs 4/8-bit)
+    ratio = rows["qsgd_4bit"]["bits_per_step"] / rows["mem_top1"]["bits_per_step"]
+    _emit("fig3_claims", 0.0, f"bits_ratio_vs_4bit={ratio:.1f}")
+    _save("fig3_qsgd", rows)
+    return rows
+
+
+def fig4_multicore(full: bool = False):
+    from benchmarks.logreg_runners import run_parallel_memsgd_sim
+    from repro.data import make_epsilon_like
+
+    n, d = (40_000, 500) if full else (4_000, 200)
+    data = make_epsilon_like(n=n, d=d, seed=2)
+    target_T = 2 * n if full else n
+    rows = {}
+    for W in (1, 2, 4, 8):
+        r = run_parallel_memsgd_sim(
+            data, T_per_worker=target_T // W, k=max(1, d // 100),
+            n_workers=W, eta=0.05,
+        )
+        rows[f"W{W}"] = {"losses": r.losses, "final": r.final_loss}
+        _emit(f"fig4_W{W}", r.wall_s / max(1, target_T) * 1e6,
+              f"final={r.final_loss:.5f}")
+    # claim: with the SAME total gradient budget split over W workers
+    # (stale reads included), convergence barely degrades
+    degr = rows["W8"]["final"] - rows["W1"]["final"]
+    _emit("fig4_claims", 0.0, f"degradation_W8_vs_W1={degr:.2e}")
+    _save("fig4_multicore", rows)
+    return rows
+
+
+def table_comm(full: bool = False):
+    """Per-step per-worker communication for every assigned architecture:
+    Mem-SGD sparse message vs dense all-reduce (the paper's headline d/k)."""
+    from repro.configs import ARCH_IDS, get_config
+    from repro.core.distributed import SyncConfig, message_bytes
+    from repro.launch.sharding import sync_col_axes
+    from repro.models import build_model
+
+    rows = {}
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        model = build_model(cfg)
+        t0 = time.time()
+        shapes = model.param_shapes()
+        cols = sync_col_axes(shapes)
+        sparse = message_bytes(SyncConfig(ratio=1e-3), shapes, cols)
+        dense = message_bytes(SyncConfig(strategy="dense"), shapes, cols)
+        hier = message_bytes(
+            SyncConfig(ratio=1e-3, strategy="hierarchical", pod_axis="pod",
+                       pod_ratio=1e-3), shapes, cols)
+        rows[arch] = {
+            "dense_MB": dense / 1e6,
+            "memsgd_MB": sparse / 1e6,
+            "hier_MB": hier / 1e6,
+            "reduction": dense / sparse,
+        }
+        _emit(f"comm_{arch}", (time.time() - t0) * 1e6,
+              f"dense={dense/1e6:.1f}MB;memsgd={sparse/1e6:.3f}MB;"
+              f"x{dense/sparse:.0f}")
+    _save("table_comm", rows)
+    return rows
+
+
+def kernel_topk(full: bool = False):
+    """Wall-time of the Pallas kernels (interpret mode on CPU — not a TPU
+    perf number; correctness-path throughput + derived contraction)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import fused_memsgd_update, row_topk
+
+    R, C, k = (256, 4096, 16) if full else (64, 1024, 8)
+    x = jax.random.normal(jax.random.PRNGKey(0), (R, C))
+    m = jax.random.normal(jax.random.PRNGKey(1), (R, C))
+    v, i = row_topk(x, k)  # warmup/compile
+    t0 = time.time()
+    n = 10
+    for _ in range(n):
+        v, i = row_topk(x, k)
+    jax.block_until_ready(v)
+    us1 = (time.time() - t0) / n * 1e6
+    nm, vv, ii = fused_memsgd_update(m, x, 0.1, k)
+    t0 = time.time()
+    for _ in range(n):
+        nm, vv, ii = fused_memsgd_update(m, x, 0.1, k)
+    jax.block_until_ready(nm)
+    us2 = (time.time() - t0) / n * 1e6
+    dense = jnp.zeros_like(x).at[jnp.arange(R)[:, None], i].set(v)
+    resid = float(jnp.sum((x - dense) ** 2) / jnp.sum(x**2))
+    _emit("kernel_row_topk", us1, f"residual_frac={resid:.4f}")
+    _emit("kernel_fused_memsgd", us2, f"k/C={k/C:.4f}")
+    return {"topk_us": us1, "fused_us": us2}
+
+
+def remark23_ultra(full: bool = False):
+    """Remark 2.3 ultra-sparsification: transmit on average LESS THAN ONE
+    coordinate per step (k < 1) and still converge (with memory)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import compression as C
+    from repro.core.memsgd import memsgd_flat
+    from repro.core.theory import theoretical_shift, theorem_stepsize
+    from repro.optim import apply_updates
+
+    d = 64
+    target = jnp.ones(d)
+    rows = {}
+    for k in (0.5, 1.0, 4.0):
+        a = theoretical_shift(d, max(k, 0.5), alpha=5.0)
+        tx = memsgd_flat(C.random_coordinate(k), theorem_stepsize(1.0, a), d,
+                         seed=1)
+        w = jnp.zeros(d)
+        s = tx.init(w)
+        T = 30_000 if full else 8_000
+        t0 = time.time()
+        for _ in range(T):
+            u, s = tx.update(w - target, s)
+            w = apply_updates(w, u)
+        err = float(jnp.linalg.norm(w - target))
+        rows[f"k{k}"] = err
+        _emit(f"ultra_k{k}", (time.time() - t0) / T * 1e6,
+              f"err={err:.4f};avg_coords_per_step={k}")
+    _save("remark23_ultra", rows)
+    return rows
+
+
+BENCHES = {
+    "fig2_convergence": fig2_convergence,
+    "fig3_qsgd": fig3_qsgd,
+    "fig4_multicore": fig4_multicore,
+    "table_comm": table_comm,
+    "kernel_topk": kernel_topk,
+    "remark23_ultra": remark23_ultra,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale datasets (slow)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    for name in names:
+        BENCHES[name](full=args.full)
+
+
+if __name__ == "__main__":
+    main()

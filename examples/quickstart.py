@@ -1,0 +1,41 @@
+"""Quickstart: Mem-SGD (the paper's Algorithm 1) in 30 lines.
+
+Compresses each gradient to its top-0.1% coordinates with error feedback
+and still converges — the point of the paper.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import constant_eta, leaf_compressor_from_ratio, memsgd
+from repro.optim import apply_updates
+
+# a toy regression task: params {w, b}, data y = x @ w* + b*
+key = jax.random.PRNGKey(0)
+w_star = jax.random.normal(key, (64, 8))
+X = jax.random.normal(jax.random.fold_in(key, 1), (512, 64))
+Y = X @ w_star + 0.3
+
+params = {"w": jnp.zeros((64, 8)), "b": jnp.zeros((8,))}
+
+
+def loss_fn(p, x, y):
+    pred = x @ p["w"] + p["b"]
+    return jnp.mean((pred - y) ** 2)
+
+
+# Mem-SGD: top-k compression (k = 1% of each tensor) + error feedback.
+tx = memsgd(leaf_compressor_from_ratio(0.01), constant_eta(0.05))
+state = tx.init(params)
+
+for step in range(600):
+    grads = jax.grad(loss_fn)(params, X, Y)
+    updates, state = tx.update(grads, state)
+    params = apply_updates(params, updates)
+    if step % 100 == 0:
+        print(f"step {step:4d}  loss {loss_fn(params, X, Y):.5f}")
+
+final = float(loss_fn(params, X, Y))
+print(f"final loss {final:.5f}  (only 1% of coordinates communicated/step)")
+assert final < 0.01

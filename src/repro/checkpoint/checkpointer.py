@@ -1,0 +1,112 @@
+"""Pytree checkpointing to .npz (offline-friendly; no orbax dependency).
+
+Layout: one ``step_<N>.npz`` per checkpoint with '/'-joined tree paths as
+array keys, plus a tiny JSON sidecar for metadata. Keeps the last
+``max_to_keep`` checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _set_in(tree: dict, key: str, value):
+    parts = key.split("/")
+    node = tree
+    for p in parts[:-1]:
+        node = node.setdefault(p, {})
+    node[parts[-1]] = value
+
+
+class Checkpointer:
+    def __init__(self, directory: str, max_to_keep: int = 3):
+        self.dir = directory
+        self.max_to_keep = max_to_keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}.npz")
+
+    def save(self, step: int, tree, metadata: Optional[dict] = None) -> str:
+        flat = _flatten(tree)
+        path = self._path(step)
+        np.savez(path, **flat)
+        meta = dict(metadata or {}, step=step)
+        with open(path + ".json", "w") as f:
+            json.dump(meta, f)
+        self._gc()
+        return path
+
+    def steps(self) -> list:
+        out = []
+        for f in os.listdir(self.dir):
+            m = re.match(r"step_(\d+)\.npz$", f)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, step: Optional[int] = None,
+                like: Any = None) -> tuple:
+        """Returns (tree, metadata). If ``like`` is given, the restored
+        arrays are reshaped into the same treedef (strict match)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = self._path(step)
+        data = np.load(path)
+        meta = {}
+        if os.path.exists(path + ".json"):
+            with open(path + ".json") as f:
+                meta = json.load(f)
+        if like is not None:
+            flat_like = _flatten(like)
+            missing = set(flat_like) - set(data.files)
+            extra = set(data.files) - set(flat_like)
+            if missing or extra:
+                raise ValueError(
+                    f"checkpoint mismatch: missing={sorted(missing)[:5]} "
+                    f"extra={sorted(extra)[:5]}"
+                )
+            leaves_with_path = jax.tree_util.tree_flatten_with_path(like)
+            keys = [
+                "/".join(
+                    str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                    for p in path_
+                )
+                for path_, _ in leaves_with_path[0]
+            ]
+            leaves = [data[k] for k in keys]
+            return jax.tree_util.tree_unflatten(leaves_with_path[1], leaves), meta
+        tree: dict = {}
+        for k in data.files:
+            _set_in(tree, k, data[k])
+        return tree, meta
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[: -self.max_to_keep]:
+            for suffix in (".npz", ".npz.json"):
+                p = os.path.join(self.dir, f"step_{s:08d}{suffix}")
+                if os.path.exists(p):
+                    os.remove(p)

@@ -1,0 +1,57 @@
+"""Architecture config registry.
+
+``get_config(arch_id)`` returns the full production ``ModelConfig``;
+``get_smoke_config(arch_id)`` the reduced same-family variant (<=2 layers,
+d_model <= 512, <= 4 experts) used by the CPU smoke tests.
+
+Assigned architectures (public pool, source in each module):
+  rwkv6-3b, qwen1.5-4b, yi-9b, musicgen-medium, qwen3-moe-30b-a3b,
+  qwen3-4b, internvl2-26b, granite-3-8b, recurrentgemma-9b,
+  granite-moe-3b-a800m
+plus the paper's own workload: logreg (logistic regression, Section 4).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES
+
+ARCH_IDS = (
+    "rwkv6-3b",
+    "qwen1.5-4b",
+    "yi-9b",
+    "musicgen-medium",
+    "qwen3-moe-30b-a3b",
+    "qwen3-4b",
+    "internvl2-26b",
+    "granite-3-8b",
+    "recurrentgemma-9b",
+    "granite-moe-3b-a800m",
+)
+
+
+def _module(arch_id: str):
+    mod = arch_id.replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in ARCH_IDS:
+        raise ValueError(f"unknown arch {arch_id!r}; options: {ARCH_IDS}")
+    return _module(arch_id).config()
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    if arch_id not in ARCH_IDS:
+        raise ValueError(f"unknown arch {arch_id!r}; options: {ARCH_IDS}")
+    return _module(arch_id).smoke_config()
+
+
+__all__ = [
+    "ModelConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "ARCH_IDS",
+    "get_config",
+    "get_smoke_config",
+]

@@ -1,0 +1,105 @@
+"""Model / run configuration dataclasses.
+
+One ``ModelConfig`` instance per assigned architecture lives in
+``repro/configs/<arch_id>.py``; each exposes ``config()`` (full size, used
+only via the dry-run) and ``smoke_config()`` (reduced: <=2 layers,
+d_model<=512, <=4 experts — runnable on CPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int  # per-expert FFN hidden size
+    aux_loss_weight: float = 0.01
+    router_jitter: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    head_dim: int = 64
+    lora_rank_decay: int = 64  # low-rank size for data-dependent decay
+    lora_rank_mix: int = 32  # low-rank size for ddlerp token-shift
+    chunk_size: int = 128  # chunkwise-parallel scan chunk (MXU-friendly)
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    # RecurrentGemma-style: repeating block pattern, e.g. ("rec","rec","attn")
+    pattern: Tuple[str, ...] = ("rec", "rec", "attn")
+    lru_width: Optional[int] = None  # defaults to d_model
+    conv_width: int = 4
+    attn_window: int = 2048
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str  # dense | moe | rwkv | hybrid
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None  # default d_model // n_heads
+    # attention details
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    sliding_window: Optional[int] = None  # set -> sliding-window attention
+    # norms / activations
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # modality: number of stub frontend embedding positions prepended to the
+    # token sequence (audio frames / vision patches). 0 for text-only.
+    n_prefix_embeddings: int = 0
+    moe: Optional[MoEConfig] = None
+    rwkv: Optional[RWKVConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    # numerics
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    vocab_pad_multiple: int = 256
+    # remat policy for the stacked-layer scan: none | full
+    remat: str = "none"
+    source: str = ""  # citation
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return ((self.vocab_size + m - 1) // m) * m
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input shape."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}

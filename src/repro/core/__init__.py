@@ -1,0 +1,50 @@
+"""Core library: the paper's contribution (Mem-SGD) as composable JAX modules.
+
+Public API:
+
+* ``repro.core.compression`` — k-contraction operators (Def. 2.1/2.2).
+* ``repro.core.memory``      — error-feedback memory primitive.
+* ``repro.core.memsgd``      — Algorithm 1 as a GradientTransformation.
+* ``repro.core.distributed`` — PARALLEL-MEM-SGD sparse all-gather sync.
+* ``repro.core.theory``      — Theorem 2.4 stepsizes / averaging / bounds.
+* ``repro.core.encoding``    — communication bit accounting.
+"""
+from repro.core.compression import (
+    Compressor,
+    top_k,
+    rand_k,
+    blockwise_top_k,
+    random_coordinate,
+    identity,
+    make_compressor,
+)
+from repro.core.memory import init_memory, memory_step, tree_memory_step
+from repro.core.memsgd import (
+    memsgd,
+    memsgd_flat,
+    MemSGDState,
+    leaf_compressor_from_ratio,
+    constant_eta,
+)
+from repro.core.distributed import SyncConfig, sparse_sync_gradients, message_bytes
+
+__all__ = [
+    "Compressor",
+    "top_k",
+    "rand_k",
+    "blockwise_top_k",
+    "random_coordinate",
+    "identity",
+    "make_compressor",
+    "init_memory",
+    "memory_step",
+    "tree_memory_step",
+    "memsgd",
+    "memsgd_flat",
+    "MemSGDState",
+    "leaf_compressor_from_ratio",
+    "constant_eta",
+    "SyncConfig",
+    "sparse_sync_gradients",
+    "message_bytes",
+]

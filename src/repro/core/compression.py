@@ -1,0 +1,247 @@
+"""k-contraction compression operators (paper Definitions 2.1 and 2.2).
+
+A k-contraction operator ``comp: R^d -> R^d`` satisfies
+
+    E ||x - comp(x)||^2  <=  (1 - k/d) ||x||^2        (Definition 2.1)
+
+All operators here are implemented in two dual forms:
+
+* ``dense(x)   -> R^d``          — the compressed vector, zeros elsewhere.
+* ``sparse(x)  -> (values, idx)``— the k transmitted (value, index) pairs,
+  which is what actually travels over the interconnect in the distributed
+  runtime (``repro.core.distributed``).
+
+Operators provided
+------------------
+* ``top_k``         — paper Definition 2.2 (largest-|.| coordinates).
+* ``rand_k``        — paper Definition 2.2 (uniform random k-subset).
+* ``blockwise_top_k`` — TPU-native variant: exact top-k_b per VMEM block.
+  Still a k-contraction: per-block top-k_b dominates per-block rand-k_b
+  coordinate-wise in captured mass, and per-block rand-k_b with uniform
+  blocks equals rand_k in expectation, so (4) holds with k = sum_b k_b.
+* ``random_coordinate`` — Remark 2.3 ultra-sparsification: each coordinate
+  kept independently with probability k/d, valid for 0 < k <= 1 (and any
+  0 < k <= d). E||x-comp(x)||^2 = (1-k/d)||x||^2 exactly.
+* ``identity``      — k = d (vanilla SGD), for baselines.
+
+Every operator is a pure jax function usable under jit/vmap/shard_map.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+Array = jax.Array
+SparsePair = Tuple[Array, Array]  # (values (k,), indices (k,) int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    """A k-contraction operator in dense and sparse form.
+
+    Attributes:
+      name: identifier used in configs / logs.
+      k_of: maps vector length d -> number of transmitted coordinates k
+        (static python int; may be fractional semantics for ultra-sparse,
+        in which case ``sparse`` is unavailable and only ``dense`` exists).
+      dense: (x, key) -> compressed dense vector, same shape as x.
+      sparse: (x, key) -> (values, indices) with static size k, or None if
+        the operator has no fixed-size sparse encoding (e.g. ultra-sparse
+        Bernoulli selection has random support size).
+      needs_rng: whether the operator consumes the PRNG key.
+      bits_per_step: (d,) -> transmitted bits per application (for the
+        communication accounting in ``repro.core.encoding``).
+    """
+
+    name: str
+    k_of: Callable[[int], float]
+    dense: Callable[[Array, Optional[Array]], Array]
+    sparse: Optional[Callable[[Array, Optional[Array]], SparsePair]]
+    needs_rng: bool
+
+
+# ---------------------------------------------------------------------------
+# top_k (Definition 2.2)
+# ---------------------------------------------------------------------------
+
+
+def _topk_sparse(x: Array, k: int) -> SparsePair:
+    """(values, indices) of the k largest-magnitude entries of x."""
+    mag = jnp.abs(x)
+    _, idx = jax.lax.top_k(mag, k)
+    vals = jnp.take(x, idx)
+    return vals, idx.astype(jnp.int32)
+
+
+def _densify(x_like: Array, vals: Array, idx: Array) -> Array:
+    return jnp.zeros_like(x_like).at[idx].set(vals, mode="drop")
+
+
+def top_k(k: int) -> Compressor:
+    def dense(x, key=None):
+        vals, idx = _topk_sparse(x, min(k, x.size))
+        return _densify(x, vals, idx)
+
+    def sparse(x, key=None):
+        return _topk_sparse(x, min(k, x.size))
+
+    return Compressor(
+        name=f"top_{k}", k_of=lambda d: min(k, d), dense=dense, sparse=sparse,
+        needs_rng=False,
+    )
+
+
+def top_k_ratio(ratio: float, k_min: int = 1) -> Callable[[int], int]:
+    """k as a fraction of d (used for per-leaf compression of pytrees)."""
+
+    def k_of(d: int) -> int:
+        return max(k_min, min(d, int(round(ratio * d))))
+
+    return k_of
+
+
+# ---------------------------------------------------------------------------
+# rand_k (Definition 2.2)
+# ---------------------------------------------------------------------------
+
+
+def rand_k(k: int) -> Compressor:
+    def sparse(x, key):
+        kk = min(k, x.size)
+        idx = jax.random.choice(key, x.size, shape=(kk,), replace=False)
+        idx = idx.astype(jnp.int32)
+        return jnp.take(x, idx), idx
+
+    def dense(x, key):
+        vals, idx = sparse(x, key)
+        return _densify(x, vals, idx)
+
+    return Compressor(
+        name=f"rand_{k}", k_of=lambda d: min(k, d), dense=dense, sparse=sparse,
+        needs_rng=True,
+    )
+
+
+# ---------------------------------------------------------------------------
+# blockwise top-k (TPU-native; mirrors the Pallas kernel's semantics)
+# ---------------------------------------------------------------------------
+
+
+def blockwise_top_k(k_per_block: int, block: int = 1024) -> Compressor:
+    """Exact top-k_b within each contiguous block of ``block`` entries.
+
+    The Pallas kernel in ``repro.kernels.topk_select`` implements exactly
+    this operator; ``repro.kernels.ref`` is the oracle and this function is
+    the framework-level (pure jnp) form used on CPU and in tests.
+
+    Contraction: for each block b of size B, top-k_b captures at least the
+    mass of a uniform random k_b-subset, whose expected residual is
+    (1 - k_b/B)·||x_b||². Summing over blocks gives Definition 2.1 with
+    k/d = k_b/B.
+    """
+
+    def sparse(x, key=None):
+        d = x.size
+        nb = -(-d // block)  # ceil
+        pad = nb * block - d
+        xp = jnp.pad(x, (0, pad))
+        xb = xp.reshape(nb, block)
+        kk = min(k_per_block, block)
+        _, local_idx = jax.lax.top_k(jnp.abs(xb), kk)  # (nb, kk)
+        vals = jnp.take_along_axis(xb, local_idx, axis=1)
+        gidx = local_idx + (jnp.arange(nb, dtype=jnp.int32) * block)[:, None]
+        # padded positions carry value 0: zero the value and clamp the index
+        # so the scatter in the dense form is a no-op for them.
+        in_range = gidx < d
+        gidx = jnp.where(in_range, gidx, 0)
+        vals = jnp.where(in_range, vals, 0.0)
+        return vals.reshape(-1), gidx.reshape(-1).astype(jnp.int32)
+
+    def dense_simple(x, key=None):
+        vals, idx = sparse(x, key)
+        # ``add`` (not ``set``): padded duplicates at index 0 carry value 0,
+        # and real indices are unique within/across blocks.
+        return jnp.zeros_like(x).at[idx].add(vals)
+
+    return Compressor(
+        name=f"blocktop_{k_per_block}x{block}",
+        k_of=lambda d: min(k_per_block, block) * (-(-d // block)),
+        dense=dense_simple,
+        sparse=sparse,
+        needs_rng=False,
+    )
+
+
+# ---------------------------------------------------------------------------
+# random-coordinate ultra-sparsification (Remark 2.3)
+# ---------------------------------------------------------------------------
+
+
+def random_coordinate(k: float) -> Compressor:
+    """Keep each coordinate independently with probability k/d, 0 < k <= d.
+
+    Valid even for k < 1 (ultra-sparsification): on average fewer than one
+    coordinate is transmitted per step. Support size is random, so only the
+    dense form exists (the distributed runtime uses fixed-size operators).
+    """
+
+    def dense(x, key):
+        p = jnp.minimum(k / x.size, 1.0)
+        keep = jax.random.bernoulli(key, p, shape=x.shape)
+        return jnp.where(keep, x, 0.0)
+
+    return Compressor(
+        name=f"randcoord_{k}", k_of=lambda d: min(k, d), dense=dense, sparse=None,
+        needs_rng=True,
+    )
+
+
+# ---------------------------------------------------------------------------
+# identity (k = d)
+# ---------------------------------------------------------------------------
+
+
+def identity() -> Compressor:
+    def dense(x, key=None):
+        return x
+
+    def sparse(x, key=None):
+        return x, jnp.arange(x.size, dtype=jnp.int32)
+
+    return Compressor(
+        name="identity", k_of=lambda d: d, dense=dense, sparse=sparse,
+        needs_rng=False,
+    )
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def make_compressor(name: str, **kw) -> Compressor:
+    """Factory from string names used in configs.
+
+    Examples: ``top_k(k=10)``, ``rand_k(k=10)``, ``blockwise(k_per_block=2,
+    block=1024)``, ``random_coordinate(k=0.5)``, ``identity``.
+    """
+    table = {
+        "top_k": top_k,
+        "rand_k": rand_k,
+        "blockwise": blockwise_top_k,
+        "random_coordinate": random_coordinate,
+        "identity": identity,
+    }
+    if name not in table:
+        raise ValueError(f"unknown compressor {name!r}; options: {sorted(table)}")
+    return table[name](**kw)
+
+
+def contraction_residual(x: Array, compressed: Array) -> Array:
+    """||x - comp(x)||^2, the LHS of Definition 2.1 (before expectation)."""
+    r = x - compressed
+    return jnp.sum(jnp.square(r))

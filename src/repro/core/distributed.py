@@ -1,0 +1,355 @@
+"""PARALLEL-MEM-SGD on a TPU mesh: per-worker memory + sparse all-gather.
+
+This is the distributed heart of the framework. It runs INSIDE a
+``jax.shard_map`` that is *manual* over the data-parallel mesh axes
+(``('data',)`` or ``('pod', 'data')``) and *auto* (GSPMD) over the
+``model`` axis. Each data-parallel worker:
+
+  1. holds its own error-feedback memory m_w (paper Algorithm 2),
+  2. forms u_w = m_w + eta * g_w for its local gradient g_w,
+  3. selects ROW-BLOCK top-k (values, indices) per tensor (see below),
+  4. exchanges ONLY those pairs via ``jax.lax.all_gather`` over the data
+     axes (k values + k indices per tensor per worker, vs. d dense values
+     for a vanilla all-reduce),
+  5. scatter-adds the W*k received pairs into a dense update and divides
+     by W,
+  6. keeps m_w' = u_w - own_selection.
+
+Row-block top-k (TPU adaptation of the paper's top_k)
+-----------------------------------------------------
+A global top-k over a tensor-parallel parameter would require gathering
+the full tensor across model shards first. Instead we select the top-k_row
+within each ROW, where rows run over all axes EXCEPT a chosen ``col_axis``
+that is NOT model-sharded (the launch layer picks it from the sharding
+rules). Every row then lives entirely inside one model shard: selection is
+shard-local, the (values, indices) arrays inherit the model sharding, and
+the data-axis all-gather never touches the model axis. Row-block top-k is
+a k-contraction (per-row top-k dominates per-row rand-k, which equals
+rand_k in expectation; cf. ``repro.core.compression.blockwise_top_k``), so
+Theorem 2.4 applies unchanged.
+
+Sync strategies
+---------------
+* ``sparse_allgather`` — single-stage gather over all data axes (paper).
+* ``hierarchical``     — beyond-paper: gather + densify + RE-COMPRESS
+  within the pod, then gather the re-compressed summary across pods. The
+  inter-pod bytes drop from W_pod*k to k_pod; the re-compression residual
+  is folded back into the local memory, preserving the error-feedback
+  guarantee (composition of contractions with feedback is again a
+  contraction with feedback).
+* ``dense``            — vanilla data-parallel all-reduce baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SyncConfig:
+    """How gradients are synchronized across the data-parallel axes."""
+
+    strategy: str = "sparse_allgather"  # | "hierarchical" | "dense"
+    ratio: float = 0.001  # per-row k_row = max(k_min, ratio * row_len)
+    k_min: int = 1
+    k_max: Optional[int] = None
+    # hierarchical only: re-compression ratio for the intra-pod mean
+    pod_ratio: Optional[float] = None
+    data_axes: Tuple[str, ...] = ("data",)
+    pod_axis: Optional[str] = None  # set on multi-pod meshes
+    value_dtype: str = "float32"
+    # leaves smaller than this sync densely (norm scales, biases): the
+    # index overhead would exceed the dense message.
+    dense_below: int = 16_384
+    # Row layout for the selection:
+    #  * "flatten": moveaxis + reshape to (R, C). Simple, but merging an
+    #    unsharded leading dim with a model-sharded dim is a reshape GSPMD
+    #    cannot repartition -> involuntary full-tensor all-gathers
+    #    (measured in EXPERIMENTS.md §Perf iteration 1).
+    #  * "batched": keep the native rank; top-k/scatter run batched over
+    #    the leading dims, so every op preserves the tensor's sharding.
+    layout: str = "batched"
+    # pin sync intermediates to the parameter's sharding (A2 experiment;
+    # measured no-op — GSPMD's sort/scatter partitioners replicate anyway)
+    constrain_intermediates: bool = False
+    # Selection/densify implementation:
+    #  * "topk_scatter": jax.lax.top_k + batched scatter-add. XLA's SPMD
+    #    partitioner REPLICATES both sort and scatter across the model
+    #    axis (full-tensor all-gather/all-reduce per leaf — measured in
+    #    §Perf iteration A3's microbenchmarks).
+    #  * "argmax_onehot": k iterations of masked row-argmax + one-hot
+    #    einsum densify — every op partitions cleanly; costs an extra
+    #    O(k * size) elementwise flops (negligible for k <= 64).
+    selection: str = "argmax_onehot"
+    argmax_k_limit: int = 64  # fall back to top_k beyond this
+
+    def k_for(self, row_len: int) -> int:
+        k = max(self.k_min, int(round(self.ratio * row_len)))
+        if self.k_max is not None:
+            k = min(k, self.k_max)
+        return min(k, row_len)
+
+    def pod_k_for(self, row_len: int) -> int:
+        r = self.pod_ratio if self.pod_ratio is not None else self.ratio
+        k = max(self.k_min, int(round(r * row_len)))
+        if self.k_max is not None:
+            k = min(k, self.k_max)
+        return min(k, row_len)
+
+
+def _axis_size(axis_names: Sequence[str]) -> int:
+    n = 1
+    for a in axis_names:
+        n = n * jax.lax.axis_size(a)
+    return n
+
+
+def _to_rows(x: Array, col_axis: int) -> Tuple[Array, tuple]:
+    """Move col_axis last and flatten the rest: (R, C)."""
+    moved = jnp.moveaxis(x, col_axis, -1)
+    shape = moved.shape
+    return moved.reshape(-1, shape[-1]), shape
+
+
+def _from_rows(rows: Array, moved_shape: tuple, col_axis: int) -> Array:
+    return jnp.moveaxis(rows.reshape(moved_shape), -1, col_axis)
+
+
+def _row_topk(u: Array, k: int, constrain=lambda x: x) -> Tuple[Array, Array]:
+    """u: (..., C) -> (vals (..., k), idx (..., k) int32) by |.| per row.
+    Batched over all leading dims (sharding-preserving)."""
+    _, idx = jax.lax.top_k(jnp.abs(u), k)
+    idx = constrain(idx.astype(jnp.int32))
+    vals = constrain(jnp.take_along_axis(u, idx, axis=-1))
+    return vals, idx
+
+
+def _row_topk_argmax(u: Array, k: int, constrain=lambda x: x
+                     ) -> Tuple[Array, Array]:
+    """Partition-safe per-row top-k: k masked-argmax iterations (no sort;
+    GSPMD keeps batch-dim sharding). Ties resolve to the lowest index —
+    identical semantics to the Pallas kernel and its oracle."""
+    absu = jnp.abs(u.astype(jnp.float32))
+    iota = jax.lax.broadcasted_iota(jnp.int32, u.shape, u.ndim - 1)
+    vals = jnp.zeros(u.shape[:-1] + (k,), u.dtype)
+    idxs = jnp.zeros(u.shape[:-1] + (k,), jnp.int32)
+    for t in range(k):
+        j = jnp.argmax(absu, axis=-1).astype(jnp.int32)
+        v = jnp.take_along_axis(u, j[..., None], axis=-1)[..., 0]
+        vals = vals.at[..., t].set(v)
+        idxs = idxs.at[..., t].set(j)
+        absu = jnp.where(iota == j[..., None], -jnp.inf, absu)
+    return vals, idxs
+
+
+def _row_densify_onehot(shape: tuple, vals: Array, idx: Array, dtype,
+                        constrain=lambda x: x) -> Array:
+    """Partition-safe densify: one-hot einsum instead of scatter (XLA's
+    scatter partitioner replicates across the model axis)."""
+    C = shape[-1]
+    iota = jnp.arange(C, dtype=jnp.int32)
+    onehot = (idx[..., None] == iota).astype(dtype)  # (..., k', C)
+    return constrain(
+        jnp.einsum("...kc,...k->...c", onehot, vals.astype(dtype))
+    )
+
+
+def _batch_iotas(shape: tuple) -> tuple:
+    """Broadcastable index grids for every dim except the last."""
+    nd = len(shape)
+    out = []
+    for i, s in enumerate(shape[:-1]):
+        rshape = [1] * nd
+        rshape[i] = s
+        out.append(jnp.arange(s, dtype=jnp.int32).reshape(rshape))
+    return tuple(out)
+
+
+def _row_scatter(shape: tuple, vals: Array, idx: Array, dtype,
+                 constrain=lambda x: x) -> Array:
+    """Scatter-add (..., k') pairs into a dense (..., C) along the last
+    axis, batched over leading dims (sharding-preserving)."""
+    out = jnp.zeros(shape, dtype)
+    return constrain(out.at[(*_batch_iotas(shape), idx)].add(vals))
+
+
+def _gather_pairs(vals, idx, axes):
+    """all_gather over every data axis; concatenated along the last axis:
+    (..., W*k)."""
+    for ax in axes:
+        vals = jax.lax.all_gather(vals, ax, axis=vals.ndim - 1, tiled=True)
+        idx = jax.lax.all_gather(idx, ax, axis=idx.ndim - 1, tiled=True)
+    return vals, idx
+
+
+def _leaf_sparse_sync(u: Array, k_row: int, axes, value_dtype,
+                      constrain=lambda x: x, topk=_row_topk,
+                      densify=None):
+    """u: (..., C). Returns (mean update, own selection, bytes/worker)."""
+    densify = densify or _row_scatter
+    rows = u.size // u.shape[-1]
+    vals, idx = topk(u, k_row, constrain)
+    own = densify(u.shape, vals, idx, u.dtype, constrain)
+    gv, gi = _gather_pairs(vals.astype(value_dtype), idx, axes)
+    gv, gi = constrain(gv), constrain(gi)
+    W = _axis_size(axes)
+    update = (densify(u.shape, gv, gi, value_dtype, constrain)
+              / W).astype(u.dtype)
+    nbytes = rows * k_row * (jnp.dtype(value_dtype).itemsize + 4)
+    return update, own, nbytes
+
+
+def _leaf_hierarchical_sync(u, k_row, k_pod, data_axes, pod_axis, value_dtype,
+                            constrain=lambda x: x, topk=_row_topk,
+                            densify=None):
+    """Two-stage: intra-pod gather -> densify -> re-compress -> inter-pod."""
+    densify = densify or _row_scatter
+    rows = u.size // u.shape[-1]
+    vals, idx = topk(u, k_row, constrain)
+    own = densify(u.shape, vals, idx, u.dtype, constrain)
+    gv, gi = _gather_pairs(vals.astype(value_dtype), idx, data_axes)
+    n_data = _axis_size(data_axes)
+    pod_mean = densify(u.shape, gv, gi, value_dtype, constrain) / n_data
+    pvals, pidx = topk(pod_mean, k_pod, constrain)
+    pod_sel = densify(u.shape, pvals, pidx, value_dtype, constrain)
+    residual = pod_mean - pod_sel  # kept in memory (identical pod-wide)
+    av, ai = _gather_pairs(pvals, pidx, (pod_axis,))
+    n_pods = jax.lax.axis_size(pod_axis)
+    update = (densify(u.shape, av, ai, value_dtype, constrain)
+              / n_pods).astype(u.dtype)
+    itemsize = jnp.dtype(value_dtype).itemsize
+    nbytes = rows * (k_row + k_pod) * (itemsize + 4)
+    return update, own, residual.astype(u.dtype), nbytes
+
+
+def _leaf_dense_sync(u: Array, axes):
+    update = jax.lax.pmean(u, axes if len(axes) > 1 else axes[0])
+    return update, u, u.size * u.dtype.itemsize
+
+
+def sparse_sync_gradients(
+    cfg: SyncConfig,
+    memory_tree,
+    grad_tree,
+    eta: Array,
+    col_axes=None,
+    specs=None,
+    mesh=None,
+):
+    """Full PARALLEL-MEM-SGD gradient exchange on a pytree.
+
+    Must be called inside a shard_map manual over cfg.data_axes (+ pod
+    axis). ``memory_tree`` leaves match ``grad_tree`` shapes (this worker's
+    own memory). ``col_axes``: pytree of ints (or None -> last axis),
+    choosing the NON-model-sharded axis used as the row-block column; from
+    ``repro.launch.sharding.sync_col_axes``.
+
+    Returns (update_tree [SUBTRACT from params], new_memory_tree,
+    bytes_per_worker_per_step [python int]).
+    """
+    value_dtype = jnp.dtype(cfg.value_dtype)
+    all_axes = tuple(cfg.data_axes) + (
+        (cfg.pod_axis,) if cfg.pod_axis else ()
+    )
+
+    def leaf(m, g, col_axis, spec):
+        u_full = m + eta * g.astype(m.dtype)
+        d = u_full.size
+        if cfg.strategy == "dense" or d < cfg.dense_below:
+            upd, own, nbytes = _leaf_dense_sync(u_full, all_axes)
+            return upd, u_full - own, nbytes
+        ca = (col_axis if col_axis is not None else u_full.ndim - 1) % u_full.ndim
+        if cfg.layout == "flatten":
+            u, moved_shape = _to_rows(u_full, ca)
+            unrow = lambda x: _from_rows(x, moved_shape, ca)
+            constrain = lambda x: x
+        else:  # "batched": moveaxis only — every op preserves sharding
+            u = jnp.moveaxis(u_full, ca, -1)
+            unrow = lambda x: jnp.moveaxis(x, -1, ca)
+            if spec is not None and mesh is not None and cfg.constrain_intermediates:
+                # pin every (..., C)- and (..., k)-shaped intermediate to
+                # the parameter's own (permuted) sharding so GSPMD never
+                # falls back to replicating full tensors around the top-k
+                # and scatter ops (§Perf iteration A2).
+                dims = list(spec)
+                dims.append(dims.pop(ca))  # moveaxis(ca, -1)
+                from jax.sharding import NamedSharding, PartitionSpec
+
+                full_s = NamedSharding(mesh, PartitionSpec(*dims))
+                rows_s = NamedSharding(
+                    mesh, PartitionSpec(*dims[:-1], None))
+
+                def constrain(x):
+                    s = full_s if x.shape == u.shape else rows_s
+                    return jax.lax.with_sharding_constraint(x, s)
+
+                u = constrain(u)
+            else:
+                constrain = lambda x: x
+        C = u.shape[-1]
+        use_argmax = (cfg.selection == "argmax_onehot"
+                      and cfg.k_for(C) <= cfg.argmax_k_limit)
+        topk = _row_topk_argmax if use_argmax else _row_topk
+        densify = _row_densify_onehot if use_argmax else _row_scatter
+        if cfg.strategy == "hierarchical" and cfg.pod_axis is not None:
+            upd, own, residual, nbytes = _leaf_hierarchical_sync(
+                u, cfg.k_for(C), cfg.pod_k_for(C), tuple(cfg.data_axes),
+                cfg.pod_axis, value_dtype, constrain, topk, densify,
+            )
+            new_m = (u - own) + residual
+        elif cfg.strategy in ("sparse_allgather", "hierarchical"):
+            upd, own, nbytes = _leaf_sparse_sync(
+                u, cfg.k_for(C), all_axes, value_dtype, constrain, topk,
+                densify,
+            )
+            new_m = u - own
+        else:
+            raise ValueError(f"unknown sync strategy {cfg.strategy!r}")
+        return unrow(upd), unrow(new_m), nbytes
+
+    leaves_g, treedef = jax.tree.flatten(grad_tree)
+    leaves_m = treedef.flatten_up_to(memory_tree)
+    if col_axes is None:
+        leaves_c = [None] * len(leaves_g)
+    else:
+        leaves_c = treedef.flatten_up_to(col_axes)
+    if specs is None:
+        leaves_s = [None] * len(leaves_g)
+    else:
+        leaves_s = treedef.flatten_up_to(specs)
+    ups, mems, total_bytes = [], [], 0
+    for m, g, c, sp in zip(leaves_m, leaves_g, leaves_c, leaves_s):
+        u_, m_, b_ = leaf(m, g, c, sp)
+        ups.append(u_)
+        mems.append(m_)
+        total_bytes += int(b_)
+    return treedef.unflatten(ups), treedef.unflatten(mems), total_bytes
+
+
+def message_bytes(cfg: SyncConfig, params, col_axes=None) -> int:
+    """Static per-worker per-step transmitted bytes for a parameter pytree."""
+    total = 0
+    itemsize = jnp.dtype(cfg.value_dtype).itemsize
+    leaves, treedef = jax.tree.flatten(params)
+    if col_axes is None:
+        caxes = [None] * len(leaves)
+    else:
+        caxes = treedef.flatten_up_to(col_axes)
+    for p, c in zip(leaves, caxes):
+        d = p.size
+        if cfg.strategy == "dense" or d < cfg.dense_below:
+            total += d * 4
+            continue
+        ca = (c if c is not None else p.ndim - 1) % max(p.ndim, 1)
+        C = p.shape[ca] if p.ndim else 1
+        R = d // max(C, 1)
+        if cfg.strategy == "hierarchical" and cfg.pod_axis is not None:
+            total += R * (cfg.k_for(C) + cfg.pod_k_for(C)) * (itemsize + 4)
+        else:
+            total += R * cfg.k_for(C) * (itemsize + 4)
+    return total

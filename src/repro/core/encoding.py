@@ -1,0 +1,46 @@
+"""Communication accounting: bits transmitted per step per scheme.
+
+Reproduces the accounting used in the paper (§4.2, §4.3, Appendix B):
+
+* dense SGD:     32 * d bits (fp32) — or 16*d for bf16.
+* top-k/rand-k:  k * (32 + ceil(log2 d)) bits (value + index).
+* QSGD with s levels (Alistarh et al., Thm 3.2 estimates):
+      min( (log2(s) + 1) * d,  3*s*(s + sqrt(d)) + 32 ) bits.
+* sparse-aware QSGD (RCV1 case): replace d by the gradient's nnz.
+
+These are *accounting* functions (python floats), used by the benchmark
+harness and by the distributed runtime's metrics.
+"""
+from __future__ import annotations
+
+import math
+
+
+def dense_bits(d: int, bits_per_value: int = 32) -> float:
+    return float(bits_per_value * d)
+
+
+def index_bits(d: int) -> int:
+    return max(1, math.ceil(math.log2(max(2, d))))
+
+
+def sparse_bits(d: int, k: float, bits_per_value: int = 32) -> float:
+    """k (value, index) pairs."""
+    return k * (bits_per_value + index_bits(d))
+
+
+def qsgd_bits(d: int, s: int) -> float:
+    """Paper Appendix B formula for s quantization levels."""
+    naive = (math.log2(s) + 1.0) * d
+    elias = 3.0 * s * (s + math.sqrt(d)) + 32.0
+    return min(naive, elias)
+
+
+def memsgd_message_bits(d: int, k: int, bits_per_value: int = 32) -> float:
+    """Bits per worker per step for the distributed sparse all-gather."""
+    return sparse_bits(d, k, bits_per_value)
+
+
+def reduction_factor(d: int, k: float, bits_per_value: int = 32) -> float:
+    """Communication reduction vs dense SGD (the paper's headline d/k gain)."""
+    return dense_bits(d, bits_per_value) / sparse_bits(d, k, bits_per_value)

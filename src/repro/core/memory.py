@@ -1,0 +1,86 @@
+"""Error-feedback memory (the 'Memory' in Mem-SGD).
+
+The memory vector m_t accumulates the information suppressed by the
+compression operator and re-injects it in later steps:
+
+    u_t    = m_t + eta_t * g_t          (gradient scaled at INSERTION time)
+    out_t  = comp_k(u_t)                (what is applied / transmitted)
+    m_{t+1}= u_t - out_t                (residual kept)
+
+This module provides the per-tensor primitive plus pytree-level helpers.
+The per-worker replication used by PARALLEL-MEM-SGD / the distributed
+runtime simply adds a leading worker axis to every leaf (handled in
+``repro.core.distributed``).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression import Compressor
+
+Array = jax.Array
+
+
+class MemoryUpdate(NamedTuple):
+    """Result of one error-feedback compression step on one tensor."""
+
+    applied: Array  # dense comp_k(m + eta*g), same shape as g
+    new_memory: Array  # m' = m + eta*g - applied
+    sparse: Optional[Tuple[Array, Array]]  # (values, indices) if available
+
+
+def memory_step(
+    compressor: Compressor,
+    memory: Array,
+    grad: Array,
+    eta: Array,
+    key: Optional[Array] = None,
+) -> MemoryUpdate:
+    """One Mem-SGD line-4/6 step on a flat tensor (any shape; flattened)."""
+    shape = grad.shape
+    u = memory.reshape(-1) + eta * grad.reshape(-1).astype(memory.dtype)
+    applied_flat = compressor.dense(u, key)
+    sparse = compressor.sparse(u, key) if compressor.sparse is not None else None
+    new_mem = u - applied_flat
+    return MemoryUpdate(
+        applied=applied_flat.reshape(shape),
+        new_memory=new_mem.reshape(shape) if memory.ndim == len(shape) else new_mem,
+        sparse=sparse,
+    )
+
+
+def init_memory(params, dtype=jnp.float32):
+    """Zero memory pytree matching ``params`` (m_0 = 0)."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, dtype=dtype), params)
+
+
+def tree_memory_step(
+    compressor_for_leaf: Callable[[Array], Compressor],
+    memory_tree,
+    grad_tree,
+    eta: Array,
+    key: Optional[Array] = None,
+):
+    """Apply ``memory_step`` to every leaf of a gradient pytree.
+
+    ``compressor_for_leaf`` maps a leaf (by its static shape) to the
+    Compressor to use — this is how the framework expresses per-tensor k
+    (e.g. k = ratio * leaf_size).
+
+    Returns (applied_tree, new_memory_tree).
+    """
+    leaves, treedef = jax.tree.flatten(grad_tree)
+    mem_leaves = treedef.flatten_up_to(memory_tree)
+    if key is not None:
+        keys = list(jax.random.split(key, len(leaves)))
+    else:
+        keys = [None] * len(leaves)
+    applied, new_mem = [], []
+    for g, m, k in zip(leaves, mem_leaves, keys):
+        upd = memory_step(compressor_for_leaf(g), m, g, eta, k)
+        applied.append(upd.applied)
+        new_mem.append(upd.new_memory.reshape(m.shape))
+    return treedef.unflatten(applied), treedef.unflatten(new_mem)

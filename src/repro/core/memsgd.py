@@ -1,0 +1,129 @@
+"""Mem-SGD (Algorithm 1) as a composable GradientTransformation.
+
+The transformation receives RAW gradients and returns the ADDITIVE update
+-comp_k(m + eta*g); the stepsize eta is consumed HERE (at memory-insertion
+time, per the paper — not applied downstream), so Mem-SGD must be the final
+element of an optimizer chain.
+
+Two constructors:
+
+* ``memsgd(compressor, eta_schedule)`` — sequential Algorithm 1 on a
+  parameter pytree with per-leaf compression.
+* ``memsgd_flat(...)`` — operates on a single flat vector (used for the
+  paper's logistic-regression reproduction where x ∈ R^d).
+
+The distributed PARALLEL-MEM-SGD (per-worker memory + sparse all-gather) is
+in ``repro.core.distributed`` and reuses these semantics.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compression as comp_lib
+from repro.core.compression import Compressor
+from repro.core.memory import init_memory, tree_memory_step
+from repro.optim.base import GradientTransformation
+
+Array = jax.Array
+Schedule = Callable[[Array], Array]
+
+
+class MemSGDState(NamedTuple):
+    count: Array  # step t
+    memory: object  # pytree like params
+    rng: Array
+
+
+def constant_eta(eta: float) -> Schedule:
+    return lambda t: jnp.asarray(eta, jnp.float32)
+
+
+def leaf_compressor_from_ratio(ratio: float, block: Optional[int] = None,
+                               mode: str = "top_k") -> Callable:
+    """Per-leaf compressor: k = max(1, round(ratio*size)).
+
+    ``mode`` in {"top_k", "rand_k", "blockwise"}; blockwise uses
+    k_per_block = max(1, round(ratio*block)).
+    """
+
+    def for_leaf(g: Array) -> Compressor:
+        d = g.size
+        if mode == "blockwise":
+            b = block or 1024
+            return comp_lib.blockwise_top_k(max(1, int(round(ratio * b))), b)
+        k = max(1, min(d, int(round(ratio * d))))
+        if mode == "top_k":
+            return comp_lib.top_k(k)
+        if mode == "rand_k":
+            return comp_lib.rand_k(k)
+        raise ValueError(mode)
+
+    return for_leaf
+
+
+def memsgd(
+    compressor_for_leaf: Callable[[Array], Compressor],
+    eta_schedule: Schedule,
+    seed: int = 0,
+    needs_rng: bool = True,
+) -> GradientTransformation:
+    """Sequential Mem-SGD over a parameter pytree (Algorithm 1)."""
+
+    def init(params):
+        return MemSGDState(
+            count=jnp.zeros((), jnp.int32),
+            memory=init_memory(params),
+            rng=jax.random.PRNGKey(seed),
+        )
+
+    def update(grads, state: MemSGDState, params=None, **_):
+        eta = eta_schedule(state.count)
+        if needs_rng:
+            rng, sub = jax.random.split(state.rng)
+        else:
+            rng, sub = state.rng, None
+        applied, new_mem = tree_memory_step(
+            compressor_for_leaf, state.memory, grads, eta, sub
+        )
+        updates = jax.tree.map(lambda a: -a, applied)
+        return updates, MemSGDState(count=state.count + 1, memory=new_mem, rng=rng)
+
+    return GradientTransformation(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Flat-vector variant (paper's setting: x in R^d)
+# ---------------------------------------------------------------------------
+
+
+class FlatMemSGDState(NamedTuple):
+    count: Array
+    memory: Array  # (d,)
+    rng: Array
+
+
+def memsgd_flat(
+    compressor: Compressor, eta_schedule: Schedule, d: int, seed: int = 0
+) -> GradientTransformation:
+    def init(params):
+        del params
+        return FlatMemSGDState(
+            count=jnp.zeros((), jnp.int32),
+            memory=jnp.zeros((d,), jnp.float32),
+            rng=jax.random.PRNGKey(seed),
+        )
+
+    def update(grad, state: FlatMemSGDState, params=None, **_):
+        eta = eta_schedule(state.count)
+        rng, sub = jax.random.split(state.rng)
+        u = state.memory + eta * grad
+        applied = compressor.dense(u, sub if compressor.needs_rng else None)
+        new_mem = u - applied
+        return -applied, FlatMemSGDState(
+            count=state.count + 1, memory=new_mem, rng=rng
+        )
+
+    return GradientTransformation(init, update)

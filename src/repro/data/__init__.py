@@ -1,0 +1,21 @@
+from repro.data.synthetic import (
+    token_batches,
+    LogRegData,
+    make_epsilon_like,
+    make_rcv1_like,
+    logreg_loss_np,
+    logreg_grad_np,
+)
+from repro.data.pipeline import Prefetcher, ShardedBatcher, take
+
+__all__ = [
+    "token_batches",
+    "LogRegData",
+    "make_epsilon_like",
+    "make_rcv1_like",
+    "logreg_loss_np",
+    "logreg_grad_np",
+    "Prefetcher",
+    "ShardedBatcher",
+    "take",
+]

@@ -1,0 +1,71 @@
+"""Input pipeline: host-side batching, device placement, prefetch.
+
+The training driver consumes ``ShardedBatcher`` which yields device-ready
+global batches laid out for the (pod, data, model) mesh: the batch axis is
+sharded over the data axes, everything else replicated.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import queue
+from typing import Callable, Iterator, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+class Prefetcher:
+    """Background-thread prefetch of an iterator (depth-bounded)."""
+
+    def __init__(self, it: Iterator, depth: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._it = it
+        self._done = object()
+        self._thread = threading.Thread(target=self._fill, daemon=True)
+        self._thread.start()
+
+    def _fill(self):
+        try:
+            for item in self._it:
+                self._q.put(item)
+        finally:
+            self._q.put(self._done)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._done:
+            raise StopIteration
+        return item
+
+
+class ShardedBatcher:
+    """Places host batches onto the mesh with batch-axis data sharding."""
+
+    def __init__(self, mesh, it: Iterator[dict], batch_axes=("data",),
+                 prefetch: int = 2):
+        self.mesh = mesh
+        self.batch_axes = batch_axes
+        self._it = Prefetcher(it, prefetch) if prefetch else it
+
+    def _sharding(self, ndim: int) -> NamedSharding:
+        spec = P(self.batch_axes) if ndim >= 1 else P()
+        return NamedSharding(self.mesh, spec)
+
+    def __iter__(self):
+        for batch in self._it:
+            yield {
+                k: jax.device_put(np.asarray(v), self._sharding(np.ndim(v)))
+                for k, v in batch.items()
+            }
+
+
+def take(it: Iterator, n: int):
+    for i, item in enumerate(it):
+        if i >= n:
+            return
+        yield item

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the Mem-SGD compression hot-spot.
+
+* ``topk_select``  — per-row top-k selection (pl.pallas_call + BlockSpec).
+* ``fused_memsgd`` — fused memory update + compression (scalar-prefetch eta).
+* ``ops``          — jitted wrappers (interpret mode on CPU).
+* ``ref``          — pure-jnp oracles.
+"""
+from repro.kernels.ops import (
+    row_topk,
+    fused_memsgd_update,
+    row_topk_ref,
+    fused_memsgd_ref,
+)
+
+__all__ = ["row_topk", "fused_memsgd_update", "row_topk_ref", "fused_memsgd_ref"]

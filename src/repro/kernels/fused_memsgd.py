@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: fused Mem-SGD memory update + compression.
+
+The unfused sequence reads/writes the full (param-sized) tensors three
+times per step (u = m + eta*g; top-k over u; m' = u - selection). At
+k << C the tensors are HBM-bandwidth bound, so fusing them into a single
+pass over each VMEM tile cuts the HBM traffic of the compression stage
+from ~5 R*C transfers (read m, read g, write u, read u, write m') to the
+3 unavoidable ones (read m, read g, write m') — a ~1.7x reduction on the
+memory roofline term of the sync stage.
+
+Per grid step (one (ROW_BLOCK, C) tile resident in VMEM):
+    u     = m + eta * g           # elementwise, VPU
+    v,i   = row_topk(u, k)        # k masked argmax iterations
+    m'    = u zeroed at selected  # elementwise scatter within the tile
+
+eta arrives via scalar prefetch (SMEM) so the same compiled kernel serves
+every step of a stepsize schedule.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.topk_select import DEFAULT_ROW_BLOCK, _topk_loop
+
+Array = jax.Array
+
+
+def _fused_kernel(eta_ref, m_ref, g_ref, newm_ref, vals_ref, idx_ref, *, k: int):
+    eta = eta_ref[0, 0]
+    m = m_ref[...]
+    g = g_ref[...]
+    u = m + eta.astype(m.dtype) * g.astype(m.dtype)
+    vals, idxs = _topk_loop(u, k)
+    Rb = u.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (Rb, k), 0)
+    new_m = u.at[rows, idxs].set(0)
+    newm_ref[...] = new_m
+    vals_ref[...] = vals
+    idx_ref[...] = idxs
+
+
+def fused_memsgd_pallas(
+    m: Array, g: Array, eta, k: int, *,
+    row_block: int = DEFAULT_ROW_BLOCK, interpret: bool = True,
+) -> Tuple[Array, Array, Array]:
+    """(m, g): (R, C); eta scalar. Returns (new_m (R,C), vals (R,k),
+    idx (R,k))."""
+    R, C = m.shape
+    assert m.shape == g.shape
+    assert R % row_block == 0, (R, row_block)
+    grid = (R // row_block,)
+    kernel = functools.partial(_fused_kernel, k=k)
+    eta_arr = jnp.asarray(eta, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),  # eta (SMEM-sized)
+            pl.BlockSpec((row_block, C), lambda i: (i, 0)),
+            pl.BlockSpec((row_block, C), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((row_block, C), lambda i: (i, 0)),
+            pl.BlockSpec((row_block, k), lambda i: (i, 0)),
+            pl.BlockSpec((row_block, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, C), m.dtype),
+            jax.ShapeDtypeStruct((R, k), m.dtype),
+            jax.ShapeDtypeStruct((R, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(eta_arr, m, g)

@@ -1,0 +1,73 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the kernel
+body runs as Python/jnp over the same BlockSpec tiling, which is what the
+tests validate against ``ref.py``. On a real TPU set ``interpret=False``
+(the default flips automatically based on the backend).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.fused_memsgd import fused_memsgd_pallas
+from repro.kernels.topk_select import DEFAULT_ROW_BLOCK, row_topk_pallas
+
+Array = jax.Array
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def _pad_rows(x: Array, row_block: int) -> Tuple[Array, int]:
+    R = x.shape[0]
+    pad = (-R) % row_block
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return x, pad
+
+
+@functools.partial(jax.jit, static_argnames=("k", "row_block", "interpret"))
+def row_topk(x: Array, k: int, row_block: int = DEFAULT_ROW_BLOCK,
+             interpret: Optional[bool] = None) -> Tuple[Array, Array]:
+    """Per-row top-|.|-k of x (R, C) -> (vals (R,k), idx (R,k))."""
+    xp, pad = _pad_rows(x, row_block)
+    vals, idx = row_topk_pallas(
+        xp, k, row_block=row_block, interpret=_auto_interpret(interpret)
+    )
+    if pad:
+        vals, idx = vals[: x.shape[0]], idx[: x.shape[0]]
+    return vals, idx
+
+
+@functools.partial(jax.jit, static_argnames=("k", "row_block", "interpret"))
+def fused_memsgd_update(
+    m: Array, g: Array, eta, k: int, row_block: int = DEFAULT_ROW_BLOCK,
+    interpret: Optional[bool] = None,
+) -> Tuple[Array, Array, Array]:
+    """Fused u = m + eta*g -> top-k -> residual memory.
+
+    Returns (new_m (R,C), vals (R,k), idx (R,k)).
+    """
+    mp, pad = _pad_rows(m, row_block)
+    gp, _ = _pad_rows(g, row_block)
+    new_m, vals, idx = fused_memsgd_pallas(
+        mp, gp, eta, k, row_block=row_block,
+        interpret=_auto_interpret(interpret),
+    )
+    if pad:
+        new_m = new_m[: m.shape[0]]
+        vals, idx = vals[: m.shape[0]], idx[: m.shape[0]]
+    return new_m, vals, idx
+
+
+# re-export oracles for test convenience
+row_topk_ref = ref.row_topk_ref
+fused_memsgd_ref = ref.fused_memsgd_ref

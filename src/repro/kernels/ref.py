@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Semantics contract (shared by kernel and oracle):
+
+* ``row_topk_ref(x, k)`` — per-row top-k by |.|: for each row of x (R, C),
+  the k largest-magnitude entries, returned as (values (R,k), idx (R,k)).
+  Ties broken by LOWEST index (matches the kernel's iterative argmax,
+  which scans from index 0). This is the row-block contraction operator of
+  ``repro.core.distributed`` (a k-contraction; per-row top-k dominates
+  per-row rand-k, which equals rand_k in expectation — Def. 2.1 holds
+  with k/d = k/C).
+
+* ``fused_memsgd_ref(m, g, eta, k)`` — the fused Mem-SGD hot loop:
+      u      = m + eta * g
+      vals,i = row_topk(u, k)
+      m'     = u with the selected entries zeroed
+  returning (m', vals, idx).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def row_topk_ref(x: Array, k: int) -> Tuple[Array, Array]:
+    """Oracle with lowest-index tie-breaking to match the kernel."""
+    # jax.lax.top_k on (|x|, then -index) composite: emulate by biasing
+    # equal magnitudes with a tiny index-dependent epsilon is fragile;
+    # instead replicate the kernel's iterative argmax exactly.
+    R, C = x.shape
+    absx = jnp.abs(x).astype(jnp.float32)
+    neg_inf = jnp.asarray(-jnp.inf, jnp.float32)
+
+    def step(carry, _):
+        vals, idxs, absm, i = carry
+        j = jnp.argmax(absm, axis=1)  # first max (lowest index on ties)
+        v = jnp.take_along_axis(x, j[:, None], axis=1)[:, 0]
+        vals = vals.at[:, i].set(v)
+        idxs = idxs.at[:, i].set(j.astype(jnp.int32))
+        absm = absm.at[jnp.arange(R), j].set(neg_inf)
+        return (vals, idxs, absm, i + 1), None
+
+    vals0 = jnp.zeros((R, k), x.dtype)
+    idxs0 = jnp.zeros((R, k), jnp.int32)
+    (vals, idxs, _, _), _ = jax.lax.scan(
+        step, (vals0, idxs0, absx, 0), None, length=k
+    )
+    return vals, idxs
+
+
+def fused_memsgd_ref(m: Array, g: Array, eta, k: int
+                     ) -> Tuple[Array, Array, Array]:
+    u = m + jnp.asarray(eta, m.dtype) * g.astype(m.dtype)
+    vals, idxs = row_topk_ref(u, k)
+    R = u.shape[0]
+    new_m = u.at[jnp.arange(R)[:, None], idxs].set(0)
+    return new_m, vals, idxs

@@ -1,0 +1,5 @@
+"""Launch layer: meshes, sharding rules, train/serve steps, dry-run.
+
+NOTE: ``repro.launch.dryrun`` sets XLA_FLAGS at import — import it only in
+a dedicated process (``python -m repro.launch.dryrun``).
+"""

@@ -1,0 +1,39 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state. The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import to obtain placeholder devices; smoke tests and benchmarks see the
+single real CPU device.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 per pod (256 chips); 2x16x16 across two pods (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(n_data: int = 4, n_model: int = 2):
+    """Small mesh for multi-device CPU tests (requires forced host devices)."""
+    return jax.make_mesh(
+        (n_data, n_model), ("data", "model"),
+        axis_types=(AxisType.Auto, AxisType.Auto),
+    )
+
+
+def data_axes_of(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a == "data")
+
+
+def pod_axis_of(mesh):
+    return "pod" if "pod" in mesh.axis_names else None
+
+
+def n_chips(mesh) -> int:
+    return int(mesh.devices.size)

@@ -1,0 +1,118 @@
+"""Serving path: prefill + batched single-token decode on the mesh.
+
+``serve_step`` consumes ONE new token per sequence against a KV/state
+cache of ``seq_len`` (the assigned decode shapes) and returns greedy next
+tokens. No shard_map needed: decode is pure model-parallel + batch-parallel
+GSPMD (Mem-SGD is a training-time technique; see DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch import sharding as shd
+
+Array = jax.Array
+
+
+def serve_shardings(model, mesh, batch: int, max_len: int,
+                    cache_dtype=jnp.bfloat16):
+    """NamedSharding pytrees for (params, cache, tokens)."""
+    pshapes = model.param_shapes()
+    pspecs = shd.drop_undivisible(shd.param_specs(pshapes), pshapes, mesh)
+    cshapes = model.cache_shapes(batch, max_len, cache_dtype)
+    cspecs = shd.cache_specs(model.cfg, cshapes)
+    cspecs = shd.drop_undivisible(cspecs, cshapes, mesh)
+    tok_spec = P("data") if batch % mesh.shape["data"] == 0 else P()
+    ns = lambda t: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), t, is_leaf=lambda x: isinstance(x, P)
+    )
+    return ns(pspecs), ns(cspecs), NamedSharding(mesh, tok_spec)
+
+
+def make_serve_step(model, mesh, batch: int, max_len: int,
+                    cache_dtype=jnp.bfloat16, moe_ep: bool = False):
+    """(params, cache, tokens (B,)) -> (next_tokens (B,), new cache)."""
+    pshard, cshard, tshard = serve_shardings(model, mesh, batch, max_len,
+                                             cache_dtype)
+
+    def step(params, cache, tokens):
+        tok = None
+        if moe_ep and model.cfg.moe is not None:
+            tok = shd.set_moe_sharding(
+                NamedSharding(mesh, P(None, "model", None, None)),
+                NamedSharding(mesh, P(None, None, None, None)),
+                pre=None,  # token-pinning measured WORSE (§Perf C2)
+            )
+        try:
+            logits, new_cache = model.decode_step(params, cache, tokens)
+        finally:
+            if tok is not None:
+                shd.reset_moe_sharding(tok)
+        V = model.cfg.vocab_size
+        logits = jnp.where(jnp.arange(logits.shape[-1]) < V, logits, -jnp.inf)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tokens, new_cache
+
+    return (
+        jax.jit(step, in_shardings=(pshard, cshard, tshard),
+                out_shardings=(tshard, cshard), donate_argnums=(1,)),
+        (pshard, cshard, tshard),
+    )
+
+
+def make_prefill_step(model, mesh, shape_cfg, moe_ep: bool = False):
+    """(params, batch) -> last-position logits (B, V_padded)."""
+    pshapes = model.param_shapes()
+    pspecs = shd.drop_undivisible(shd.param_specs(pshapes), pshapes, mesh)
+    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+    B = shape_cfg.global_batch
+    data_ok = B % mesh.shape["data"] == 0
+    bspec = P("data") if data_ok else P()
+    bshard = NamedSharding(mesh, bspec)
+
+    def batch_shardings(batch_tree):
+        return jax.tree.map(lambda _: bshard, batch_tree)
+
+    def step(params, batch):
+        tok = None
+        if moe_ep and model.cfg.moe is not None:
+            n_ax = "data" if data_ok else None
+            tok = shd.set_moe_sharding(
+                NamedSharding(mesh, P(n_ax, "model", None, None)),
+                NamedSharding(mesh, P(n_ax, None, None, None)),
+                pre=None,  # token-pinning measured WORSE (§Perf C2)
+            )
+        try:
+            return model.prefill_logits(params, batch)
+        finally:
+            if tok is not None:
+                shd.reset_moe_sharding(tok)
+
+    return jax.jit(step), pshard, batch_shardings
+
+
+def decode_loop(model, mesh, params, prompts: Array, n_tokens: int,
+                max_len: int, cache_dtype=jnp.bfloat16):
+    """Greedy generation driver: consumes prompts token-by-token (teacher
+    forcing into the cache) then generates ``n_tokens`` greedily."""
+    B, PL = prompts.shape
+    step, (pshard, cshard, tshard) = make_serve_step(
+        model, mesh, B, max_len, cache_dtype
+    )
+    cache = jax.device_put(model.init_cache(B, max_len, cache_dtype), cshard)
+    params = jax.device_put(params, pshard)
+    tok = prompts[:, 0]
+    out = []
+    for t in range(PL - 1):
+        nxt, cache = step(params, cache, tok)
+        tok = prompts[:, t + 1]  # teacher-force the prompt
+    for _ in range(n_tokens):
+        tok, cache = step(params, cache, tok)
+        out.append(tok)
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,287 @@
+"""Sharding rules: parameter PartitionSpecs, sync row axes, activation
+constraints.
+
+Conventions (per pod: mesh ("data", "model"); multi-pod adds leading
+"pod"):
+
+* batch axis          -> ("pod", "data")  [or ("data",)]
+* tensor parallel     -> "model": attention heads / FFN hidden / experts /
+                         vocab, per the rules below
+* per-worker Mem-SGD memory -> leading worker axis over ("pod","data"),
+  remaining axes like the parameter
+* activations         -> batch over data (implicit inside shard_map);
+  optional sequence sharding over "model" for the stacked-layer scan carry
+  (sequence parallelism; enabled by the train driver for long sequences).
+"""
+from __future__ import annotations
+
+import contextvars
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+Array = jax.Array
+
+# rules: leaf-name -> (partition spec dims AFTER the optional stacked-L
+# axis, col_axis for the sparse sync, counted over the SAME trailing dims).
+# spec entries: None or "model". col_axis: index into the trailing dims of
+# a NON-"model" axis whose extent is a sensible row length.
+_RULES = {
+    # embeddings / head: vocab-parallel embed (selection along d_model per
+    # vocab row). Measured better than D-sharded embed by 7.5s/step of
+    # collective time on yi-9b train_4k (§Perf iteration A2a, refuted).
+    "embed": (("model", None), 1),
+    "lm_head": ((None, "model"), 0),
+    # attention
+    "wq": ((None, "model"), 0),
+    "wk": ((None, "model"), 0),
+    "wv": ((None, "model"), 0),
+    "wo": (("model", None), 1),
+    "bq": (("model",), 0),
+    "bk": (("model",), 0),
+    "bv": (("model",), 0),
+    "q_norm": ((None,), 0),
+    "k_norm": ((None,), 0),
+    # dense mlp
+    "w_gate": ((None, "model"), 0),
+    "w_up": ((None, "model"), 0),
+    "w_down": (("model", None), 1),
+    # moe (experts stacked on leading E axis of the trailing dims)
+    "router": ((None, None), 1),
+    "moe/w_gate": (("model", None, None), 2),
+    "moe/w_up": (("model", None, None), 2),
+    "moe/w_down": (("model", None, None), 2),
+    # rwkv time/channel mix
+    "wr": ((None, "model"), 0),
+    "wg": ((None, "model"), 0),
+    "mix_w1": ((None, None), 1),
+    "mix_w2": ((None, None, "model"), 1),
+    "decay_w1": ((None, None), 0),
+    "decay_w2": ((None, "model"), 0),
+    "w0": ((None,), 0),
+    "mu": ((None, None), 1),
+    "mu_base": ((None,), 0),
+    "mu_k": ((None,), 0),
+    "mu_r": ((None,), 0),
+    "bonus": ((None, None), 1),
+    "gn": ((None, None), 1),
+    # griffin recurrent block
+    "w_in": ((None, "model"), 0),
+    "w_gate_in": ((None, "model"), 0),
+    "conv_w": ((None, "model"), 0),
+    "conv_b": (("model",), 0),
+    "w_a": ((None, "model"), 0),
+    "b_a": (("model",), 0),
+    "w_x": ((None, "model"), 0),
+    "b_x": (("model",), 0),
+    "lam": (("model",), 0),
+    "w_out": (("model", None), 1),
+    # griffin mlp
+    "w1": ((None, "model"), 0),
+    "w2": ((None, "model"), 0),
+    "w3": (("model", None), 1),
+    # norms
+    "ln1": ((None,), 0),
+    "ln2": ((None,), 0),
+    "ln_f": ((None,), 0),
+}
+
+
+def _leaf_name(path) -> str:
+    keys = [str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", p))))
+            for p in path]
+    name = keys[-1]
+    if "moe" in keys and name in ("w_gate", "w_up", "w_down"):
+        return f"moe/{name}"
+    return name
+
+
+def _rule_for(path, leaf) -> tuple:
+    name = _leaf_name(path)
+    if name not in _RULES:
+        # default: replicate, col = last axis
+        return (None,) * leaf.ndim, max(0, leaf.ndim - 1)
+    dims, col = _RULES[name]
+    nd = leaf.ndim
+    if nd == len(dims):
+        return dims, col
+    if nd == len(dims) + 1:  # stacked layer axis in front
+        return (None,) + dims, col + 1
+    if nd > len(dims):  # e.g. extra stacking; left-pad with None
+        pad = nd - len(dims)
+        return (None,) * pad + dims, col + pad
+    # fewer dims than the rule (shouldn't happen): replicate
+    return (None,) * nd, max(0, nd - 1)
+
+
+def param_specs(params_shapes) -> object:
+    """Pytree of PartitionSpec matching a parameter pytree (by leaf name)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    specs = [P(*_rule_for(path, leaf)[0]) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def sync_col_axes(params_shapes) -> object:
+    """Pytree of ints: row-block column axis per leaf for the sparse sync."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    cols = [_rule_for(path, leaf)[1] for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, cols)
+
+
+def memory_specs(params_shapes, data_axes) -> object:
+    """Per-worker memory: leading worker axis over the data axes, then the
+    parameter's own spec."""
+    ps = param_specs(params_shapes)
+    ax = tuple(data_axes)
+    worker = ax if len(ax) > 1 else ax[0]
+    return jax.tree.map(lambda s: P(worker, *s), ps)
+
+
+def cache_specs(cfg, cache_shapes, mesh_axes=("data", "model")) -> object:
+    """KV/state cache sharding for decode.
+
+    Rules: batch axis over "data" when divisible; kv-head axis over
+    "model" when divisible, else head_dim; recurrent widths over "model".
+    """
+    data = "data"
+
+    def spec_for(path, leaf) -> P:
+        name = _leaf_name(path)
+        shape = leaf.shape
+        nd = len(shape)
+        if name == "index":
+            return P()
+        # locate batch axis: transformer caches are (L, B, C, KV, hd) or
+        # (B, C, KV, hd); rwkv states (L, B, ...) / (B, ...); griffin
+        # per-layer states (B, ...).
+        dims = [None] * nd
+        # batch: first axis whose size matches no other rule; heuristics by
+        # name:
+        if name in ("k", "v"):
+            b_ax = nd - 4  # (..., B, C, KV, hd)
+            kv_ax, hd_ax = nd - 2, nd - 1
+            dims[b_ax] = data
+            if shape[kv_ax] % 16 == 0:
+                dims[kv_ax] = "model"
+            elif shape[hd_ax] % 16 == 0:
+                dims[hd_ax] = "model"
+        elif name in ("time_shift", "chan_shift"):
+            dims[nd - 2] = data  # (L, B, D) or (B, D)
+            dims[nd - 1] = "model"
+        elif name == "wkv":
+            dims[nd - 4] = data  # (..., B, H, n, n)
+            if shape[nd - 3] % 16 == 0:
+                dims[nd - 3] = "model"
+        elif name == "h":
+            dims[nd - 2] = data  # (B, R)
+            dims[nd - 1] = "model"
+        elif name == "conv":
+            dims[nd - 3] = data  # (B, W-1, R)
+            dims[nd - 1] = "model"
+        # drop the data axis if batch not divisible (e.g. long_500k B=1)
+        return P(*dims)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    specs = [spec_for(path, leaf) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def drop_undivisible(spec_tree, shape_tree, mesh) -> object:
+    """Replace axis assignments that don't divide the dimension (GSPMD
+    would pad; we prefer explicit replication)."""
+
+    def fix(spec: P, leaf) -> P:
+        dims = []
+        for i, s in enumerate(spec):
+            if s is None:
+                dims.append(None)
+                continue
+            names = s if isinstance(s, tuple) else (s,)
+            size = 1
+            for n in names:
+                size *= mesh.shape[n]
+            if leaf.shape[i] % size == 0:
+                dims.append(s)
+            else:
+                dims.append(None)
+        return P(*dims)
+
+    return jax.tree.map(fix, spec_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# activation sharding hook (sequence parallelism for the layer-scan carry)
+# ---------------------------------------------------------------------------
+
+_ACT_SHARDING: contextvars.ContextVar = contextvars.ContextVar(
+    "activation_sharding", default=None
+)
+
+
+def set_activation_sharding(sharding) -> contextvars.Token:
+    return _ACT_SHARDING.set(sharding)
+
+
+def reset_activation_sharding(token) -> None:
+    _ACT_SHARDING.reset(token)
+
+
+def shard_activations(x: Array) -> Array:
+    s = _ACT_SHARDING.get()
+    if s is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, s)
+
+
+# ---------------------------------------------------------------------------
+# MoE expert-parallel constraints (§Perf: dispatch via all-to-all, not
+# buffer replication). The step builders set (dispatch_sharding,
+# combine_sharding) for the (N, E, C, D) capacity buffers: dispatch moves
+# the scattered buffer to expert-sharded layout (GSPMD inserts an
+# all-to-all), combine moves the expert outputs back to token layout.
+# ---------------------------------------------------------------------------
+
+_MOE_SHARDING: contextvars.ContextVar = contextvars.ContextVar(
+    "moe_sharding", default=None
+)
+
+
+def set_moe_sharding(dispatch, combine, pre=None) -> contextvars.Token:
+    """pre: token-layout sharding pinned on the capacity buffer BEFORE the
+    dispatch scatter (keeps the scatter shard-local over tokens; without
+    it GSPMD replicates the f32-promoted scatter operands — §Perf C2)."""
+    return _MOE_SHARDING.set((dispatch, combine, pre))
+
+
+def reset_moe_sharding(token) -> None:
+    _MOE_SHARDING.reset(token)
+
+
+def constrain_moe_dispatch(buf: Array) -> Array:
+    s = _MOE_SHARDING.get()
+    if s is None:
+        return buf
+    return jax.lax.with_sharding_constraint(buf, s[0])
+
+
+def constrain_moe_combine(y: Array) -> Array:
+    s = _MOE_SHARDING.get()
+    if s is None:
+        return y
+    return jax.lax.with_sharding_constraint(y, s[1])
+
+
+def constrain_moe_tokens(x: Array) -> Array:
+    """Pin token-layout tensors (pre-dispatch buffer / contrib / output)."""
+    s = _MOE_SHARDING.get()
+    if s is None or s[2] is None:
+        return x
+    spec = s[2].spec
+    dims = list(spec) + [None] * (x.ndim - len(spec))
+    from jax.sharding import NamedSharding, PartitionSpec
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(s[2].mesh, PartitionSpec(*dims[: x.ndim]))
+    )

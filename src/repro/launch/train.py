@@ -1,0 +1,369 @@
+"""Distributed training step + driver (PARALLEL-MEM-SGD on a TPU mesh).
+
+``make_train_step`` builds the jitted step:
+
+  * OUTER: ``jax.jit`` with NamedShardings (params tensor-parallel over
+    "model", batch + per-worker memory over the data axes).
+  * INNER: ``jax.shard_map`` manual over the data axes, auto over "model".
+    Each data shard computes its own gradient (GSPMD handles the model
+    axis inside), applies error-feedback memory + row-block top-k, and the
+    shards exchange only (values, indices) pairs (sparse all-gather). See
+    ``repro.core.distributed``.
+
+Optimizer modes:
+  * ``memsgd``       — paper Algorithm 1/2: update = comp_k(m + eta*g),
+    params -= mean_w(update). eta consumed at memory insertion.
+  * ``memsgd_momentum`` — beyond-paper: heavy-ball momentum applied to the
+    synced sparse update.
+  * ``adam_compressed`` — beyond-paper: the sync (with eta=1) produces the
+    averaged sparse gradient; Adam consumes it. Memory semantics preserved.
+  * ``dense``        — vanilla data-parallel baseline (dense all-reduce),
+    for communication comparisons.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.distributed import SyncConfig, sparse_sync_gradients
+from repro.launch import sharding as shd
+from repro.optim import adam as adam_lib
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: str = "memsgd"  # memsgd | memsgd_momentum | adam_compressed | dense
+    eta: float = 0.1  # base stepsize (or peak LR for adam)
+    eta_shift: float = 0.0  # a>0 enables eta_t = eta/(1 + t/a) style decay
+    momentum: float = 0.9
+    sync: SyncConfig = dataclasses.field(default_factory=SyncConfig)
+    # Perf levers (see EXPERIMENTS.md §Perf):
+    seq_shard_activations: bool = False  # Megatron-style sequence parallel
+    microbatch: int = 1  # gradient accumulation over the local batch
+    moe_ep_constraints: bool = False  # expert-parallel a2a dispatch
+
+
+def _eta_schedule(tc: TrainConfig):
+    if tc.eta_shift > 0:
+        a = tc.eta_shift
+        return lambda t: tc.eta * a / (a + t.astype(jnp.float32))
+    return lambda t: jnp.asarray(tc.eta, jnp.float32)
+
+
+def _worker_count(mesh, data_axes) -> int:
+    n = 1
+    for a in data_axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def init_train_state(model, mesh, tc: TrainConfig, rng=None, abstract=False):
+    """Returns (params, memory, opt_state, count) — concrete or abstract."""
+    data_axes = (("pod",) if "pod" in mesh.axis_names else ()) + ("data",)
+    W = _worker_count(mesh, data_axes)
+    pshapes = model.param_shapes()
+
+    def make():
+        params = model.init(rng if rng is not None else jax.random.PRNGKey(0))
+        memory = jax.tree.map(
+            lambda p: jnp.zeros((W,) + p.shape, jnp.float32), params
+        )
+        if tc.optimizer == "memsgd_momentum":
+            opt = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        elif tc.optimizer == "adam_compressed":
+            opt = {
+                "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+                "nu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            }
+        else:
+            opt = ()
+        return params, memory, opt, jnp.zeros((), jnp.int32)
+
+    if abstract:
+        return jax.eval_shape(make)
+    return make()
+
+
+def state_shardings(model, mesh, tc: TrainConfig):
+    """NamedSharding pytrees for (params, memory, opt, count)."""
+    data_axes = (("pod",) if "pod" in mesh.axis_names else ()) + ("data",)
+    pshapes = model.param_shapes()
+    pspecs = shd.drop_undivisible(shd.param_specs(pshapes), pshapes, mesh)
+    worker = data_axes if len(data_axes) > 1 else data_axes[0]
+    mspecs = jax.tree.map(lambda s: P(worker, *s), pspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+    if tc.optimizer == "memsgd_momentum":
+        ospecs = pspecs
+    elif tc.optimizer == "adam_compressed":
+        ospecs = {"mu": pspecs, "nu": pspecs}
+    else:
+        ospecs = ()
+    to_sharding = lambda t: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), t, is_leaf=lambda x: isinstance(x, P)
+    )
+    return (
+        to_sharding(pspecs),
+        to_sharding(mspecs),
+        to_sharding(ospecs),
+        NamedSharding(mesh, P()),
+    )
+
+
+def make_train_step(model, mesh, tc: TrainConfig):
+    """Builds the jitted train step:
+
+        (params, memory, opt, count, batch) ->
+            (params, memory, opt, count, metrics)
+    """
+    cfg = model.cfg
+    data_axes = (("pod",) if "pod" in mesh.axis_names else ()) + ("data",)
+    W = _worker_count(mesh, data_axes)
+    pshapes = model.param_shapes()
+    pspecs = shd.drop_undivisible(shd.param_specs(pshapes), pshapes, mesh)
+    col_axes = shd.sync_col_axes(pshapes)
+    eta_fn = _eta_schedule(tc)
+    sync_cfg = dataclasses.replace(
+        tc.sync,
+        data_axes=("data",),
+        pod_axis="pod" if "pod" in mesh.axis_names else None,
+        strategy="dense" if tc.optimizer == "dense" else tc.sync.strategy,
+    )
+    worker = data_axes if len(data_axes) > 1 else data_axes[0]
+    batch_spec = P(worker)
+
+    def local_loss(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    def step_body(params, memory, opt, count, batch):
+        # params: full (model-auto) view; memory leaves (1, *shape) local
+        params = jax.tree.map(
+            lambda p, s: jax.lax.with_sharding_constraint(
+                p, NamedSharding(mesh, s)),
+            params, pspecs, is_leaf=None,
+        )
+        mem_local = jax.tree.map(lambda m_: m_[0], memory)
+        tok = None
+        moe_tok = None
+        if tc.seq_shard_activations:
+            tok = shd.set_activation_sharding(
+                NamedSharding(mesh, P(None, "model", None))
+            )
+        if tc.moe_ep_constraints and cfg.moe is not None:
+            moe_tok = shd.set_moe_sharding(
+                NamedSharding(mesh, P(None, "model", None, None)),
+                NamedSharding(mesh, P(None, None, None, None)),
+                pre=None,  # token-pinning measured WORSE (§Perf C2)
+            )
+        try:
+            if tc.microbatch > 1:
+                M = tc.microbatch
+
+                def split(x):
+                    return x.reshape((M, x.shape[0] // M) + x.shape[1:])
+
+                chunks = jax.tree.map(split, batch)
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                )
+
+                def acc(carry, mb):
+                    g, met = jax.grad(
+                        lambda p: local_loss(p, mb), has_aux=True
+                    )(params)
+                    carry = jax.tree.map(
+                        lambda c, gg: c + gg.astype(jnp.float32) / M, carry, g
+                    )
+                    return carry, met
+
+                from repro.models.layers import layer_scan_unroll
+
+                grads, mets = jax.lax.scan(
+                    acc, zeros, chunks,
+                    unroll=M if layer_scan_unroll() else 1,
+                )
+                metrics = jax.tree.map(lambda x: jnp.mean(x, axis=0), mets)
+            else:
+                grads, metrics = jax.grad(
+                    lambda p: local_loss(p, batch), has_aux=True
+                )(params)
+        finally:
+            if tok is not None:
+                shd.reset_activation_sharding(tok)
+            if moe_tok is not None:
+                shd.reset_moe_sharding(moe_tok)
+        if tc.optimizer in ("memsgd", "memsgd_momentum", "dense"):
+            eta = eta_fn(count)
+        else:  # adam_compressed: memory accumulates raw gradients
+            eta = jnp.asarray(1.0, jnp.float32)
+        update, new_mem, _ = sparse_sync_gradients(
+            sync_cfg, mem_local, grads, eta, col_axes,
+            specs=pspecs, mesh=mesh,
+        )
+        if tc.optimizer in ("memsgd", "dense"):
+            new_params = jax.tree.map(
+                lambda p, u: (p - u.astype(p.dtype)), params, update
+            )
+            new_opt = opt
+        elif tc.optimizer == "memsgd_momentum":
+            new_opt = jax.tree.map(
+                lambda v, u: tc.momentum * v + u.astype(jnp.float32),
+                opt, update,
+            )
+            new_params = jax.tree.map(
+                lambda p, v: (p - v).astype(p.dtype), params, new_opt
+            )
+        elif tc.optimizer == "adam_compressed":
+            t = count + 1
+            b1, b2, eps = 0.9, 0.999, 1e-8
+            mu = jax.tree.map(
+                lambda m_, u: b1 * m_ + (1 - b1) * u.astype(jnp.float32),
+                opt["mu"], update,
+            )
+            nu = jax.tree.map(
+                lambda v, u: b2 * v + (1 - b2) * jnp.square(u.astype(jnp.float32)),
+                opt["nu"], update,
+            )
+            bc1 = 1 - b1 ** t.astype(jnp.float32)
+            bc2 = 1 - b2 ** t.astype(jnp.float32)
+            lr = eta_fn(count)
+            new_params = jax.tree.map(
+                lambda p, m_, v: (
+                    p - lr * (m_ / bc1) / (jnp.sqrt(v / bc2) + eps)
+                ).astype(p.dtype),
+                params, mu, nu,
+            )
+            new_opt = {"mu": mu, "nu": nu}
+        else:
+            raise ValueError(tc.optimizer)
+        new_memory = jax.tree.map(lambda m_: m_[None], new_mem)
+        loss_mean = jax.lax.pmean(metrics["xent"], data_axes
+                                  if len(data_axes) > 1 else data_axes[0])
+        out_metrics = {
+            "loss": loss_mean,
+            "aux": jax.lax.pmean(metrics["aux"], data_axes
+                                 if len(data_axes) > 1 else data_axes[0]),
+        }
+        return new_params, new_memory, new_opt, count + 1, out_metrics
+
+    pspec_P0 = jax.tree.map(lambda s: P(), pspecs,
+                            is_leaf=lambda x: isinstance(x, P))
+    mem_manual = jax.tree.map(lambda s: P(worker), pspecs,
+                              is_leaf=lambda x: isinstance(x, P))
+    opt_P0 = jax.tree.map(lambda s: P(), shd.param_specs(pshapes),
+                          is_leaf=lambda x: isinstance(x, P))
+    if tc.optimizer == "memsgd_momentum":
+        opt_in = opt_P0
+    elif tc.optimizer == "adam_compressed":
+        opt_in = {"mu": opt_P0, "nu": opt_P0}
+    else:
+        opt_in = ()
+
+    model_specs = model.input_specs  # unused; batch spec built per leaf
+
+    def batch_specs(batch_tree):
+        return jax.tree.map(lambda _: batch_spec, batch_tree)
+
+    def step(params, memory, opt, count, batch):
+        sm = jax.shard_map(
+            step_body,
+            mesh=mesh,
+            in_specs=(pspec_P0, mem_manual, opt_in, P(),
+                      batch_specs(batch)),
+            out_specs=(pspec_P0, mem_manual, opt_in, P(),
+                       {"loss": P(), "aux": P()}),
+            axis_names=set(data_axes),
+            check_vma=False,
+        )
+        return sm(params, memory, opt, count, batch)
+
+    return jax.jit(step, donate_argnums=(0, 1, 2))
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
+          checkpointer=None, ckpt_every: int = 0, log_every: int = 10,
+          rng=None):
+    """End-to-end training loop. ``batches``: iterator of device-ready
+    global batches (see repro.data.pipeline.ShardedBatcher)."""
+    params, memory, opt, count = init_train_state(model, mesh, tc, rng=rng)
+    pshard, mshard, oshard, cshard = state_shardings(model, mesh, tc)
+    params = jax.device_put(params, pshard)
+    memory = jax.device_put(memory, mshard)
+    if oshard != ():
+        opt = jax.device_put(opt, oshard)
+    step = make_train_step(model, mesh, tc)
+    history = []
+    for i, batch in enumerate(batches):
+        if i >= n_steps:
+            break
+        params, memory, opt, count, metrics = step(
+            params, memory, opt, count, batch
+        )
+        if log_every and (i % log_every == 0 or i == n_steps - 1):
+            loss = float(metrics["loss"])
+            history.append((i, loss))
+            print(f"step {i:5d}  loss {loss:.4f}")
+        if checkpointer is not None and ckpt_every and (i + 1) % ckpt_every == 0:
+            checkpointer.save(i + 1, {"params": params})
+    return params, memory, opt, count, history
+
+
+def main():
+    """CLI: train an assigned architecture's SMOKE variant end-to-end.
+
+    Full-size configs are exercised via ``repro.launch.dryrun`` (this
+    container is CPU-only); this driver proves the full stack on the
+    reduced variants:  python -m repro.launch.train --arch qwen3-4b
+    """
+    import argparse
+
+    from repro.checkpoint import Checkpointer
+    from repro.configs import ARCH_IDS, get_smoke_config
+    from repro.data import token_batches
+    from repro.data.pipeline import ShardedBatcher
+    from repro.models import build_model
+    from jax.sharding import AxisType
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b", choices=ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--optimizer", default="memsgd")
+    ap.add_argument("--eta", type=float, default=0.5)
+    ap.add_argument("--ratio", type=float, default=0.01)
+    ap.add_argument("--strategy", default="sparse_allgather")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args()
+
+    mesh = jax.make_mesh(
+        (jax.device_count(), 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+    cfg = get_smoke_config(args.arch)
+    model = build_model(cfg)
+    tc = TrainConfig(optimizer=args.optimizer, eta=args.eta,
+                     sync=SyncConfig(ratio=args.ratio,
+                                     strategy=args.strategy))
+    batches = ShardedBatcher(
+        mesh, token_batches(cfg.vocab_size, args.batch, args.seq, seed=0)
+    )
+    ck = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+    train(model, mesh, tc, batches, n_steps=args.steps, checkpointer=ck,
+          ckpt_every=max(1, args.steps // 2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Model zoo. Import is lazy to avoid package-init cycles with submodules."""
+
+
+def build_model(cfg):
+    from repro.models.model import build_model as _build
+
+    return _build(cfg)
+
+
+__all__ = ["build_model"]

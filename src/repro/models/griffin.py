@@ -1,0 +1,275 @@
+"""RecurrentGemma / Griffin (arXiv:2402.19427): RG-LRU + local attention.
+
+Repeating block pattern (default ``rec, rec, attn`` = 1 local-attention
+layer per 2 recurrent layers). Each residual block:
+
+    x -> norm -> temporal (RG-LRU recurrent block OR local MQA) -> +x
+      -> norm -> gated-GeLU MLP -> +x
+
+RG-LRU recurrent block: two input branches (D -> d_rnn); branch 1 passes a
+causal depthwise conv (width 4) then the RG-LRU; branch 2 is a GeLU gate;
+the product projects back D. RG-LRU recurrence (diagonal, real):
+
+    r_t = sigmoid(W_a x_t + b_a)            # recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            # input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)  # c = 8
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill evaluates the diagonal recurrence with
+``jax.lax.associative_scan`` (log-depth, TPU-friendly); decode carries
+(h, conv window) state. Local attention uses the shared GQA layer with a
+sliding window, RoPE, and kv-head count from the config (kv=1 => MQA).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+Array = jax.Array
+
+LRU_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _lru_width(cfg) -> int:
+    return cfg.hybrid.lru_width or cfg.d_model
+
+
+def init_recurrent_block(key, cfg, dtype) -> dict:
+    D = cfg.d_model
+    R = _lru_width(cfg)
+    W = cfg.hybrid.conv_width
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a^(1/c) ~ U[0.9, 0.999] as in the paper
+    lam_init = jax.random.uniform(ks[0], (R,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(lam_init)))  # inverse softplus
+    return {
+        "w_in": L.dense_init(ks[1], D, R, dtype),
+        "w_gate_in": L.dense_init(ks[2], D, R, dtype),
+        "conv_w": (jax.random.normal(ks[3], (W, R)) / math.sqrt(W)).astype(dtype),
+        "conv_b": jnp.zeros((R,), dtype),
+        "w_a": L.dense_init(ks[4], R, R, dtype),
+        "b_a": jnp.zeros((R,), dtype),
+        "w_x": L.dense_init(ks[5], R, R, dtype),
+        "b_x": jnp.zeros((R,), dtype),
+        "lam": lam.astype(jnp.float32),
+        "w_out": L.dense_init(jax.random.fold_in(key, 7), R, D, dtype),
+    }
+
+
+def init_mlp(key, cfg, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "w1": L.dense_init(ks[0], cfg.d_model, cfg.d_ff, dtype),
+        "w2": L.dense_init(ks[1], cfg.d_model, cfg.d_ff, dtype),
+        "w3": L.dense_init(ks[2], cfg.d_ff, cfg.d_model, dtype),
+    }
+
+
+def layer_kinds(cfg) -> Tuple[str, ...]:
+    pat = cfg.hybrid.pattern
+    kinds = tuple(pat[i % len(pat)] for i in range(cfg.n_layers))
+    return kinds
+
+
+def init_block(key, cfg, kind: str, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": init_mlp(k2, cfg, dtype),
+    }
+    if kind == "rec":
+        p["rec"] = init_recurrent_block(k1, cfg, dtype)
+    else:
+        p["attn"] = L.init_attention(k1, cfg, dtype)
+    return p
+
+
+def init_params(key, cfg) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    kinds = layer_kinds(cfg)
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    blocks = [init_block(ks[i], cfg, kinds[i], dtype)
+              for i in range(cfg.n_layers)]
+    # hybrid blocks are heterogeneous -> keep as a per-layer list (no scan
+    # stacking across different kinds; groups of identical kind are stacked
+    # by the grouping below for compact HLO).
+    return {
+        "embed": L.embed_init(ks[-2], cfg.padded_vocab, cfg.d_model, dtype),
+        "blocks": blocks,
+        "ln_f": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": L.dense_init(ks[-1], cfg.d_model, cfg.padded_vocab, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+
+def rg_lru(p: dict, x: Array, h0: Array) -> Tuple[Array, Array]:
+    """x: (B,T,R); h0: (B,R) fp32. Returns (y (B,T,R), h_T)."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(xf @ p["w_x"].astype(jnp.float32) + p["b_x"])
+    log_a = -LRU_C * jax.nn.softplus(p["lam"]) * r  # (B,T,R), negative
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.clip(1.0 - jnp.square(a), 1e-12)) * (i * xf)
+    # prepend h0 as the t=-1 element: recurrence h_t = a_t h_{t-1} + b_t
+    a_ext = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+    b_ext = jnp.concatenate([h0[:, None, :], gated], axis=1)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a_ext, b_ext), axis=1)
+    y = h[:, 1:]
+    return y.astype(x.dtype), y[:, -1].astype(jnp.float32)
+
+
+def rg_lru_step(p: dict, x: Array, h: Array) -> Tuple[Array, Array]:
+    """x: (B,R) one token; h: (B,R) fp32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(xf @ p["w_x"].astype(jnp.float32) + p["b_x"])
+    a = jnp.exp(-LRU_C * jax.nn.softplus(p["lam"]) * r)
+    h = a * h + jnp.sqrt(jnp.clip(1.0 - jnp.square(a), 1e-12)) * (i * xf)
+    return h.astype(x.dtype), h
+
+
+def causal_conv(p: dict, x: Array, carry: Optional[Array] = None
+                ) -> Tuple[Array, Array]:
+    """Depthwise causal conv width W. x: (B,T,R); carry: (B,W-1,R)."""
+    W = p["conv_w"].shape[0]
+    if carry is None:
+        carry = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * p["conv_w"][i] for i in range(W))
+    new_carry = xp[:, -(W - 1):]
+    return out + p["conv_b"], new_carry
+
+
+def recurrent_block(p: dict, x: Array, state: dict) -> Tuple[Array, dict]:
+    """x: (B,T,D); state: {h (B,R) fp32, conv (B,W-1,R)}."""
+    main = x @ p["w_in"]
+    gate = jax.nn.gelu(x @ p["w_gate_in"])
+    main, conv_carry = causal_conv(p, main, state["conv"])
+    y, h = rg_lru(p, main, state["h"])
+    out = (y * gate) @ p["w_out"]
+    return out, {"h": h, "conv": conv_carry}
+
+
+def recurrent_block_step(p: dict, x: Array, state: dict) -> Tuple[Array, dict]:
+    """x: (B,1,D) decode step."""
+    main = x[:, 0] @ p["w_in"]
+    gate = jax.nn.gelu(x[:, 0] @ p["w_gate_in"])
+    W = p["conv_w"].shape[0]
+    window = jnp.concatenate([state["conv"], main[:, None, :]], axis=1)  # (B,W,R)
+    conv_out = jnp.sum(window * p["conv_w"][None], axis=1) + p["conv_b"]
+    y, h = rg_lru_step(p, conv_out, state["h"])
+    out = (y * gate) @ p["w_out"]
+    return out[:, None, :], {"h": h, "conv": window[:, 1:]}
+
+
+def gated_mlp(p: dict, x: Array) -> Array:
+    return (jax.nn.gelu(x @ p["w1"]) * (x @ p["w2"])) @ p["w3"]
+
+
+# ---------------------------------------------------------------------------
+# model-level forward / decode
+# ---------------------------------------------------------------------------
+
+
+def init_state(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> list:
+    """Per-layer state list (heterogeneous)."""
+    kinds = layer_kinds(cfg)
+    R = _lru_width(cfg)
+    W = cfg.hybrid.conv_width
+    Ca = min(max_len, cfg.hybrid.attn_window)
+    states = []
+    for kind in kinds:
+        if kind == "rec":
+            states.append({
+                "h": jnp.zeros((batch, R), jnp.float32),
+                "conv": jnp.zeros((batch, W - 1, R), dtype),
+            })
+        else:
+            states.append({
+                "k": jnp.zeros((batch, Ca, cfg.n_kv_heads, cfg.hd), dtype),
+                "v": jnp.zeros((batch, Ca, cfg.n_kv_heads, cfg.hd), dtype),
+            })
+    return states
+
+
+def forward(params: dict, cfg, tokens: Array, prefix_embeds=None,
+            window=None, last_only: bool = False) -> Tuple[Array, Array]:
+    del prefix_embeds
+    B, T = tokens.shape
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"][tokens].astype(dt)
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    kinds = layer_kinds(cfg)
+    attn_window = window or cfg.hybrid.attn_window
+    R = _lru_width(cfg)
+    W = cfg.hybrid.conv_width
+
+    def layer(x, blk, kind):
+        h_in = L.rmsnorm(blk["ln1"], x, cfg.norm_eps)
+        if kind == "rec":
+            st = {"h": jnp.zeros((B, R), jnp.float32),
+                  "conv": jnp.zeros((B, W - 1, R), h_in.dtype)}
+            t_out, _ = recurrent_block(blk["rec"], h_in, st)
+        else:
+            t_out = L.attention(blk["attn"], cfg, h_in, positions, attn_window)
+        x = x + t_out
+        x = x + gated_mlp(blk["mlp"], L.rmsnorm(blk["ln2"], x, cfg.norm_eps))
+        return x
+
+    layer_fn = layer
+    if cfg.remat == "full":
+        layer_fn = jax.checkpoint(layer, static_argnums=(2,))
+    for blk, kind in zip(params["blocks"], kinds):
+        x = layer_fn(x, blk, kind)
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:]
+    logits = x @ params["lm_head"].astype(x.dtype)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def decode_step(params: dict, cfg, cache: dict, tokens: Array
+                ) -> Tuple[Array, dict]:
+    """cache: {'layers': [per-layer state], 'index': ()}."""
+    B = tokens.shape[0]
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"][tokens][:, None, :].astype(dt)
+    kinds = layer_kinds(cfg)
+    idx = cache["index"]
+    new_states = []
+    for blk, kind, st in zip(params["blocks"], kinds, cache["layers"]):
+        h_in = L.rmsnorm(blk["ln1"], x, cfg.norm_eps)
+        if kind == "rec":
+            t_out, nst = recurrent_block_step(blk["rec"], h_in, st)
+        else:
+            t_out, ck, cv = L.attention_decode(
+                blk["attn"], cfg, h_in, st["k"], st["v"], idx,
+                cfg.hybrid.attn_window)
+            nst = {"k": ck, "v": cv}
+        x = x + t_out
+        x = x + gated_mlp(blk["mlp"], L.rmsnorm(blk["ln2"], x, cfg.norm_eps))
+        new_states.append(nst)
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = x[:, 0] @ params["lm_head"].astype(x.dtype)
+    return logits, {"layers": new_states, "index": idx + 1}

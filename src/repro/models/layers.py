@@ -1,0 +1,397 @@
+"""Shared neural-net layers (pure functional JAX, no flax).
+
+Parameters are nested dicts of jnp arrays. All layer functions take
+``(params, inputs, ...)`` and are shape-polymorphic over batch/seq.
+Stacked-layer variants (leading L axis on every leaf) are consumed via
+``jax.lax.scan`` in the model builders.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> Array:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> Array:
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rmsnorm(scale: Array, x: Array, eps: float = 1e-6) -> Array:
+    """Fused RMSNorm with a hand-written backward.
+
+    Autodiff through the fp32-upcast norm emits ~10 full-activation fp32
+    intermediates per backward (dominant HBM traffic in the train-step
+    roofline, §Perf iteration A6); the custom VJP keeps fp32 only for the
+    per-row statistics and runs the wide ops in the input dtype.
+    """
+    out, _ = _rmsnorm_fwd(scale, x, eps)
+    return out
+
+
+def _rmsnorm_fwd(scale, x, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + eps)  # (..., 1) fp32 — tiny
+    out = (xf * rstd).astype(x.dtype) * scale.astype(x.dtype)
+    return out, (scale, x, rstd)
+
+
+def _rmsnorm_bwd(eps, res, g):
+    scale, x, rstd = res
+    D = x.shape[-1]
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    sf = scale.astype(jnp.float32)
+    xhat = xf * rstd
+    gs = gf * sf
+    # d_x = rstd * (gs - xhat * mean(gs * xhat))
+    dot = jnp.mean(gs * xhat, axis=-1, keepdims=True)  # (..., 1)
+    dx = (rstd * (gs - xhat * dot)).astype(x.dtype)
+    dscale = jnp.sum(gf * xhat, axis=tuple(range(x.ndim - 1))).astype(
+        scale.dtype
+    )
+    return dscale, dx
+
+
+rmsnorm.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+def groupnorm_heads(scale: Array, x: Array, eps: float = 1e-5) -> Array:
+    """Per-head group norm used by RWKV wkv output. x: (..., H, hd)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mean) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(hd: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, optional qk-norm / bias / sliding window / KV cache)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg, dtype) -> dict:
+    hd = cfg.hd
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * hd, dtype),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, cfg.d_model, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _qkv(p, cfg, x):
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, n_rep: int) -> Array:
+    """q: (B,S,H,hd); k,v: (B,T,KV,hd); mask: (B,1,S,T) or broadcastable."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    KV = k.shape[2]
+    qh = q.reshape(B, S, KV, n_rep, hd)
+    logits = jnp.einsum("bsgrh,btgh->bgrst", qh.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    logits = logits.reshape(B, H, S, T)
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = probs.reshape(B, KV, n_rep, S, T)
+    out = jnp.einsum("bgrst,btgh->bsgrh", probs.astype(v.dtype), v)
+    return out.reshape(B, S, H, hd)
+
+
+def causal_mask(S: int, window: Optional[int] = None) -> Array:
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    m = j <= i
+    if window is not None:
+        m = m & (j > i - window)
+    return m[None, None]  # (1,1,S,S)
+
+
+# -- blocked (flash-style) attention in pure JAX -----------------------------
+#
+# The direct _sdpa materializes (B, H, S, T) logits: fine for smoke tests,
+# catastrophic at 32k+ (petabytes). The blocked form scans query blocks and,
+# inside, key/value blocks with running-max/sum softmax (fp32 stats), so the
+# live footprint is O(B*H*qb*kvb). The windowed form dynamic-slices the
+# static-size [qstart-window, qend) key range per query block instead —
+# O(S*(window+qb)) compute, which is what makes long-context sliding-window
+# shapes lowerable.
+
+_FLASH_THRESHOLD = 2048  # use direct path below this many kv positions
+
+# Dry-run instrumentation: XLA's cost_analysis counts a while-loop body
+# ONCE, not trip_count times. The dry-run therefore (a) unrolls the
+# blocked-attention loops (set_unroll_blocks) so intra-layer cost is exact,
+# and (b) lowers L=2/L=4 probe models with the layer scan unrolled
+# (set_unroll_layers) to recover the exact per-layer slope. Normal training
+# keeps the compact scan form.
+_UNROLL_BLOCKS = False
+_UNROLL_LAYERS = False
+
+
+def set_unroll_blocks(v: bool) -> None:
+    global _UNROLL_BLOCKS
+    _UNROLL_BLOCKS = v
+
+
+def set_unroll_layers(v: bool) -> None:
+    global _UNROLL_LAYERS
+    _UNROLL_LAYERS = v
+
+
+def layer_scan_unroll() -> bool:
+    return _UNROLL_LAYERS
+
+
+def _flash_full(q, k, v, n_rep: int, q_block: int, kv_block: int) -> Array:
+    """Causal blocked attention. q: (B,S,H,hd); k,v: (B,S,KV,hd)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    NQ = S // q_block
+    NK = S // kv_block
+    scale = 1.0 / math.sqrt(hd)
+    qb = jnp.moveaxis(q.reshape(B, NQ, q_block, H, hd), 1, 0)  # (NQ,B,qb,H,hd)
+    kb = jnp.moveaxis(k.reshape(B, NK, kv_block, KV, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, NK, kv_block, KV, hd), 1, 0)
+
+    def per_qblock(qi, q_blk):
+        # q_blk: (B,qb,H,hd) -> regroup to (B,qb,KV,rep,hd). Inputs stay
+        # bf16 (MXU-native); matmuls accumulate fp32 via
+        # preferred_element_type; only the small running stats are fp32.
+        qg = q_blk.reshape(B, q_block, KV, n_rep, hd)
+
+        def inner(carry, inp):
+            m, l, acc = carry
+            kj, (k_blk, v_blk) = inp
+            logits = jnp.einsum(
+                "bqgrh,bkgh->bgrqk", qg, k_blk,
+                preferred_element_type=jnp.float32,
+            ) * scale  # (B,KV,rep,qb,kvb) fp32
+            # causal mask between absolute positions
+            qpos = qi * q_block + jnp.arange(q_block)
+            kpos = kj * kv_block + jnp.arange(kv_block)
+            mask = kpos[None, :] <= qpos[:, None]  # (qb,kvb)
+            logits = jnp.where(mask[None, None, None], logits, -1e30)
+            m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bgrqk,bkgh->bgrqh", p.astype(q.dtype), v_blk,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, KV, n_rep, q_block), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KV, n_rep, q_block), jnp.float32)
+        a0 = jnp.zeros((B, KV, n_rep, q_block, hd), jnp.float32)
+        if _UNROLL_BLOCKS:
+            carry = (m0, l0, a0)
+            for j in range(NK):
+                carry, _ = inner(carry, (jnp.asarray(j), (kb[j], vb[j])))
+            m, l, acc = carry
+        else:
+            (m, l, acc), _ = jax.lax.scan(
+                inner, (m0, l0, a0), (jnp.arange(NK), (kb, vb))
+            )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,KV,rep,qb,hd)
+        return jnp.moveaxis(out, 3, 1).reshape(B, q_block, H, hd)
+
+    if _UNROLL_BLOCKS:
+        outs = jnp.stack([per_qblock(jnp.asarray(i), qb[i]) for i in range(NQ)])
+    else:
+        outs = jax.lax.map(lambda inp: per_qblock(inp[0], inp[1]),
+                           (jnp.arange(NQ), qb))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, H, hd).astype(q.dtype)
+
+
+def _flash_windowed(q, k, v, n_rep: int, window: int, q_block: int) -> Array:
+    """Sliding-window causal attention via static-size key slices."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    NQ = S // q_block
+    span = window + q_block  # static kv span per query block
+    scale = 1.0 / math.sqrt(hd)
+    # pad keys/values on the left so every slice is in-bounds
+    kp = jnp.pad(k, ((0, 0), (window, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (window, 0), (0, 0), (0, 0)))
+    qb_all = jnp.moveaxis(q.reshape(B, NQ, q_block, H, hd), 1, 0)
+
+    def per_qblock(qi, q_blk):
+        start = qi * q_block  # slice [start, start+span) of padded keys
+        k_blk = jax.lax.dynamic_slice_in_dim(kp, start, span, axis=1)
+        v_blk = jax.lax.dynamic_slice_in_dim(vp, start, span, axis=1)
+        qg = q_blk.reshape(B, q_block, KV, n_rep, hd)
+        logits = jnp.einsum(
+            "bqgrh,bkgh->bgrqk", qg, k_blk,
+            preferred_element_type=jnp.float32,
+        ) * scale
+        qpos = start + jnp.arange(q_block)  # absolute (unpadded) positions
+        kpos = start + jnp.arange(span) - window
+        mask = (kpos[None, :] <= qpos[:, None]) & (
+            kpos[None, :] > qpos[:, None] - window
+        ) & (kpos[None, :] >= 0)
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        p = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bgrqk,bkgh->bgrqh", p.astype(q.dtype), v_blk,
+                         preferred_element_type=jnp.float32)
+        return jnp.moveaxis(out, 3, 1).reshape(B, q_block, H, hd)
+
+    if _UNROLL_BLOCKS:
+        outs = jnp.stack(
+            [per_qblock(jnp.asarray(i), qb_all[i]) for i in range(NQ)]
+        )
+    else:
+        outs = jax.lax.map(lambda inp: per_qblock(inp[0], inp[1]),
+                           (jnp.arange(NQ), qb_all))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, H, hd).astype(q.dtype)
+
+
+def attention(
+    p: dict,
+    cfg,
+    x: Array,
+    positions: Array,
+    window: Optional[int] = None,
+) -> Array:
+    """Causal (training/prefill) attention; picks direct/blocked/windowed."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, cfg, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    if S <= _FLASH_THRESHOLD:
+        out = _sdpa(q, k, v, causal_mask(S, window), n_rep)
+    elif window is not None and window < S:
+        # unrolled (dry-run probe) mode: cap the block count so the HLO
+        # stays compilable; runtime mode keeps MXU-friendly 1024 blocks.
+        qb = max(1024, S // 16) if _UNROLL_BLOCKS else min(1024, S)
+        out = _flash_windowed(q, k, v, n_rep, window, qb)
+    else:
+        qb = kvb = (max(1024, S // 8) if _UNROLL_BLOCKS else min(1024, S))
+        out = _flash_full(q, k, v, n_rep, qb, kvb)
+    return out.reshape(B, S, cfg.n_heads * cfg.hd) @ p["wo"]
+
+
+def attention_decode(
+    p: dict,
+    cfg,
+    x: Array,
+    cache_k: Array,
+    cache_v: Array,
+    cur_index: Array,
+    window: Optional[int] = None,
+) -> Tuple[Array, Array, Array]:
+    """One-token decode against a (ring-buffered when windowed) KV cache.
+
+    x: (B, 1, D). cache_k/v: (B, C, KV, hd) where C = window or max_len.
+    cur_index: () int32 — number of tokens already in the cache.
+    Returns (out (B,1,D), new_cache_k, new_cache_v).
+    """
+    B = x.shape[0]
+    C = cache_k.shape[1]
+    q, k, v = _qkv(p, cfg, x)
+    pos = jnp.full((B, 1), cur_index, jnp.int32)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    slot = (cur_index % C).astype(jnp.int32)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), slot, axis=1)
+    # valid slots: written and (if windowed) within the window
+    j = jnp.arange(C)
+    n_written = jnp.minimum(cur_index + 1, C)
+    if window is None:
+        valid = j < n_written
+    else:
+        # ring buffer: all C slots valid once full; before that, first n slots
+        valid = j < n_written
+    mask = valid[None, None, None, :]  # (1,1,1,C)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    out = _sdpa(q, cache_k, cache_v, mask, n_rep)
+    out = out.reshape(B, 1, cfg.n_heads * cfg.hd) @ p["wo"]
+    return out, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_swiglu(key, d_model: int, d_ff: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], d_model, d_ff, dtype),
+        "w_up": dense_init(ks[1], d_model, d_ff, dtype),
+        "w_down": dense_init(ks[2], d_ff, d_model, dtype),
+    }
+
+
+def swiglu(p: dict, x: Array) -> Array:
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]

@@ -1,0 +1,172 @@
+"""Model bundle: family dispatch, loss, input specs.
+
+``build_model(cfg)`` returns a ``Model`` whose methods are pure functions
+(usable under jit / shard_map / eval_shape):
+
+    params = model.init(key)
+    loss, metrics = model.loss(params, batch)
+    cache = model.init_cache(batch_size, max_len)
+    logits, cache = model.decode_step(params, cache, tokens)
+    specs = model.input_specs(shape_cfg)        # ShapeDtypeStructs only
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import griffin, rwkv, transformer
+
+Array = jax.Array
+
+
+def _xent(cfg, logits: Array, labels: Array) -> Tuple[Array, Array]:
+    """Masked cross-entropy. labels < 0 are ignored (prefix/pad positions).
+
+    Padded-vocab logits are excluded from the partition function.
+    """
+    V = cfg.vocab_size
+    Vp = logits.shape[-1]
+    if Vp > V:
+        pad_mask = jnp.arange(Vp) < V
+        logits = jnp.where(pad_mask, logits, -1e30)
+    lse = jax.scipy.special.logsumexp(logits.astype(jnp.float32), axis=-1)
+    safe_labels = jnp.maximum(labels, 0)
+    ll = jnp.take_along_axis(
+        logits, safe_labels[..., None], axis=-1
+    )[..., 0].astype(jnp.float32)
+    per_tok = lse - ll
+    mask = (labels >= 0).astype(jnp.float32)
+    n = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(per_tok * mask) / n, n
+
+
+_FAMILIES = {
+    "dense": transformer,
+    "moe": transformer,
+    "rwkv": rwkv,
+    "hybrid": griffin,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    @property
+    def _mod(self):
+        return _FAMILIES[self.cfg.family]
+
+    def _cast(self, params):
+        """Cast float params to the compute dtype (fp32 masters stay in the
+        optimizer; forward/decode run in ``cfg.compute_dtype``)."""
+        dt = jnp.dtype(self.cfg.compute_dtype)
+        return jax.tree.map(
+            lambda p: p.astype(dt) if jnp.issubdtype(p.dtype, jnp.floating) else p,
+            params,
+        )
+
+    # -- parameters ---------------------------------------------------------
+
+    def init(self, key) -> dict:
+        return self._mod.init_params(key, self.cfg)
+
+    def param_shapes(self) -> dict:
+        """Abstract parameter pytree (no allocation) for the dry-run."""
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    # -- training / prefill path --------------------------------------------
+
+    def forward(self, params, batch, window: Optional[int] = None):
+        return self._mod.forward(
+            self._cast(params), self.cfg, batch["tokens"],
+            prefix_embeds=batch.get("prefix_embeds"), window=window,
+        )
+
+    def prefill_logits(self, params, batch) -> Array:
+        """Last-position logits only (inference prefill; no (B,S,V) blowup)."""
+        logits, _ = self._mod.forward(
+            self._cast(params), self.cfg, batch["tokens"],
+            prefix_embeds=batch.get("prefix_embeds"), last_only=True,
+        )
+        return logits[:, -1]
+
+    def loss(self, params, batch) -> Tuple[Array, dict]:
+        logits, aux = self.forward(params, batch)
+        xent, n_tok = _xent(self.cfg, logits, batch["labels"])
+        total = xent + aux
+        return total, {"xent": xent, "aux": aux, "n_tokens": n_tok}
+
+    # -- decode path ----------------------------------------------------------
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        if cfg.family in ("dense", "moe"):
+            return transformer.init_cache(cfg, batch, max_len, dtype)
+        if cfg.family == "rwkv":
+            return rwkv.init_state(cfg, batch)
+        if cfg.family == "hybrid":
+            return {
+                "layers": griffin.init_state(cfg, batch, max_len, dtype),
+                "index": jnp.zeros((), jnp.int32),
+            }
+        raise ValueError(cfg.family)
+
+    def cache_shapes(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        return jax.eval_shape(lambda: self.init_cache(batch, max_len, dtype))
+
+    def decode_step(self, params, cache, tokens):
+        return self._mod.decode_step(self._cast(params), self.cfg, cache, tokens)
+
+    # -- abstract inputs ------------------------------------------------------
+
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        """ShapeDtypeStruct stand-ins for one global batch (no allocation)."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        if shape.is_decode:
+            return {"tokens": jax.ShapeDtypeStruct((B,), jnp.int32)}
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+        if cfg.n_prefix_embeddings:
+            specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_prefix_embeddings, cfg.d_model),
+                jnp.dtype(cfg.compute_dtype),
+            )
+        return specs
+
+    # -- bookkeeping ----------------------------------------------------------
+
+    def n_params(self) -> int:
+        import math
+
+        shapes = self.param_shapes()
+        return sum(math.prod(l.shape) for l in jax.tree.leaves(shapes))
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: only top_k of n_experts count)."""
+        cfg = self.cfg
+        total = self.n_params()
+        if cfg.moe is None:
+            return total
+        import math
+
+        shapes = self.param_shapes()
+        expert_total = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+            keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+            if "moe" in keys and any(k in ("w_gate", "w_up", "w_down") for k in keys):
+                expert_total += math.prod(leaf.shape)
+        active_frac = cfg.moe.top_k / cfg.moe.n_experts
+        return int(total - expert_total + expert_total * active_frac)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family not in _FAMILIES:
+        raise ValueError(f"unknown family {cfg.family!r}")
+    return Model(cfg)

@@ -1,0 +1,125 @@
+"""Mixture-of-Experts FFN layer (top-k router, capacity-based dispatch).
+
+Design (TPU-native, GShard-style but scatter-based):
+
+* Experts live in stacked arrays (E, D, F) / (E, F, D), sharded over the
+  ``model`` mesh axis by the launch layer (expert parallelism).
+* Tokens are processed in GROUPS (a group = one sequence for train/prefill,
+  = the whole batch for single-token decode). Within a group each token's
+  top-k experts get a slot in a capacity buffer (E, C, D) with
+  C = ceil(G * K * capacity_factor / E); overflow tokens are dropped for
+  that expert (standard GShard semantics; the router aux loss keeps load
+  balanced so drops are rare).
+* Dispatch/combine use scatter/gather (``.at[].add`` / advanced indexing),
+  NOT one-hot einsum — so dispatch costs O(tokens * K * D) bytes and ~zero
+  FLOPs instead of the O(tokens * G * K * D) FLOPs of the one-hot matmul
+  formulation. Expert compute is therefore proportional to ACTIVE params
+  (times the capacity factor), which is what the roofline's
+  MODEL_FLOPS/HLO_FLOPs ratio checks.
+* Aux loss: Shazeer-style load balancing  E * sum_e f_e * p_e.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+Array = jax.Array
+
+
+def init_moe(key, cfg, dtype) -> dict:
+    m = cfg.moe
+    ks = jax.random.split(key, 4)
+    E, D, F = m.n_experts, cfg.d_model, m.d_expert
+    return {
+        "router": dense_init(ks[0], D, E, jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, D, F)) / math.sqrt(D)).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (E, D, F)) / math.sqrt(D)).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (E, F, D)) / math.sqrt(F)).astype(dtype),
+    }
+
+
+def _route(p, cfg, xg: Array):
+    """xg: (N, G, D) grouped tokens -> (top_w, top_i, aux_loss)."""
+    m = cfg.moe
+    logits = xg.astype(jnp.float32) @ p["router"]  # (N,G,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, m.top_k)  # (N,G,K)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+    # load balance: fraction of tokens whose top-1 lands on e, vs mean prob
+    E = m.n_experts
+    top1 = jax.nn.one_hot(top_i[..., 0], E, dtype=jnp.float32)
+    frac_tokens = jnp.mean(top1, axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = jnp.sum(frac_tokens * frac_probs) * E * m.aux_loss_weight
+    return top_w, top_i, aux
+
+
+def moe_ffn_grouped(p: dict, cfg, xg: Array, capacity_factor: float = 1.25
+                    ) -> Tuple[Array, Array]:
+    """xg: (N, G, D) -> (out (N, G, D), aux ())."""
+    m = cfg.moe
+    N, G, D = xg.shape
+    E, K = m.n_experts, m.top_k
+    C = max(1, math.ceil(G * K * capacity_factor / E))
+    top_w, top_i, aux = _route(p, cfg, xg)
+
+    # position-in-expert via cumulative count of expert assignments, walking
+    # the (G*K) assignment list in order. (N, G*K)
+    flat_e = top_i.reshape(N, G * K)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (N, G*K, E)
+    pos = jnp.cumsum(onehot, axis=1) - onehot
+    pos_in_e = jnp.sum(pos * onehot, axis=-1).reshape(N, G, K)
+    keep = pos_in_e < C  # capacity mask (N,G,K)
+    slot = jnp.where(keep, pos_in_e, 0)
+
+    from repro.launch.sharding import (
+        constrain_moe_combine,
+        constrain_moe_dispatch,
+        constrain_moe_tokens,
+    )
+
+    n_idx = jnp.arange(N)[:, None]
+    # pin the buffer (and each scatter update) to token layout so the
+    # dispatch scatter stays shard-local over tokens (§Perf C2)
+    buf = constrain_moe_tokens(jnp.zeros((N, E, C, D), xg.dtype))
+    for k in range(K):  # K static, small (<=8): K scatters of (N,G,D)
+        contrib = constrain_moe_tokens(jnp.where(keep[:, :, k, None], xg, 0))
+        buf = constrain_moe_tokens(
+            buf.at[n_idx, top_i[:, :, k], slot[:, :, k]].add(contrib)
+        )
+
+    # expert-parallel resharding (hook set by the launch layer): move the
+    # token-grouped buffer to expert-sharded layout (all-to-all) so the
+    # einsums below are shard-local against the expert-sharded weights.
+    buf = constrain_moe_dispatch(buf)
+
+    # expert compute (N,E,C,D) x (E,D,F)
+    h = jnp.einsum("necd,edf->necf", buf, p["w_gate"])
+    u = jnp.einsum("necd,edf->necf", buf, p["w_up"])
+    y = jnp.einsum("necf,efd->necd", jax.nn.silu(h) * u, p["w_down"])
+    y = constrain_moe_combine(y)  # back to token layout (all-to-all)
+
+    # combine: gather each token's K expert outputs, weight, sum
+    out = jnp.zeros_like(xg)
+    for k in range(K):
+        gathered = constrain_moe_tokens(
+            y[n_idx, top_i[:, :, k], slot[:, :, k]])  # (N,G,D)
+        w = (top_w[:, :, k] * keep[:, :, k]).astype(gathered.dtype)
+        out = constrain_moe_tokens(out + gathered * w[:, :, None])
+    return out, aux
+
+
+def moe_ffn(p: dict, cfg, x: Array, capacity_factor: float = 1.25
+            ) -> Tuple[Array, Array]:
+    """x: (B, S, D). Groups: per-sequence for S>1, whole batch for decode."""
+    B, S, D = x.shape
+    if S == 1:
+        out, aux = moe_ffn_grouped(p, cfg, x.reshape(1, B, D), capacity_factor)
+        return out.reshape(B, S, D), aux
+    out, aux = moe_ffn_grouped(p, cfg, x, capacity_factor)
+    return out, aux

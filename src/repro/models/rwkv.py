@@ -1,0 +1,339 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free, data-dependent decay.
+
+Per-head linear-attention-style recurrence with a matrix state
+S_t in R^{n x n} (n = head_dim):
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    o_t = r_t (S_{t-1} + diag(u) k_t v_t^T)          # u = "bonus"
+
+with DATA-DEPENDENT per-channel decay w_t and ddlerp token-shift, followed
+by per-head group-norm, SiLU gating, and output projection. Channel-mix is
+the Finch squared-ReLU MLP with token-shift.
+
+TPU adaptation (documented in DESIGN.md):
+* Training/prefill uses a CHUNKWISE-PARALLEL scan: within a chunk of
+  ``chunk_size`` tokens the contributions are computed with matmuls
+  (MXU-friendly, O(T*C*n) work), and the (n x n) state is carried across
+  chunks with ``jax.lax.scan``. Decode uses the exact per-step recurrence.
+* The decay is parameterized ``log w_t = -decay_clamp * sigmoid(w0 + lora)``
+  in (-decay_clamp, 0) instead of the paper's -exp(.): with chunk_size=16
+  and decay_clamp=4 the within-chunk exponent |cum| <= 64 stays inside
+  fp32 range, so the chunked form needs no per-pair renormalization. The
+  expressible decay range (e^-4, 1) per step covers the useful regime.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (dense_init, rmsnorm, groupnorm_heads,
+                                 layer_scan_unroll)
+
+Array = jax.Array
+
+DECAY_CLAMP = 4.0
+_MIX_TARGETS = ("r", "k", "v", "w", "g")
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_time_mix(key, cfg, dtype) -> dict:
+    D = cfg.d_model
+    r = cfg.rwkv
+    n = r.head_dim
+    H = D // n
+    ks = jax.random.split(key, 12)
+    p = {
+        "mu_base": jnp.full((D,), 0.5, dtype),
+        "mix_w1": dense_init(ks[0], D, r.lora_rank_mix * 5, dtype),
+        "mix_w2": (jax.random.normal(ks[1], (5, r.lora_rank_mix, D))
+                   / math.sqrt(r.lora_rank_mix)).astype(dtype),
+        "mu": jnp.full((5, D), 0.5, dtype),  # per-target lerp coefficient
+        "wr": dense_init(ks[2], D, D, dtype),
+        "wk": dense_init(ks[3], D, D, dtype),
+        "wv": dense_init(ks[4], D, D, dtype),
+        "wg": dense_init(ks[5], D, D, dtype),
+        "wo": dense_init(ks[6], D, D, dtype),
+        "w0": jnp.zeros((D,), dtype),
+        "decay_w1": dense_init(ks[7], D, r.lora_rank_decay, dtype),
+        "decay_w2": dense_init(ks[8], r.lora_rank_decay, D, dtype),
+        "bonus": jnp.zeros((H, n), dtype),
+        "gn": jnp.ones((H, n), dtype),
+    }
+    return p
+
+
+def init_channel_mix(key, cfg, dtype) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((D,), 0.5, dtype),
+        "mu_r": jnp.full((D,), 0.5, dtype),
+        "wk": dense_init(ks[0], D, F, dtype),
+        "wv": dense_init(ks[1], F, D, dtype),
+        "wr": dense_init(ks[2], D, D, dtype),
+    }
+
+
+def init_block(key, cfg, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "time": init_time_mix(k1, cfg, dtype),
+        "chan": init_channel_mix(k2, cfg, dtype),
+    }
+
+
+def init_params(key, cfg) -> dict:
+    from repro.models.layers import embed_init
+
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    blocks = [init_block(ks[i], cfg, dtype) for i in range(cfg.n_layers)]
+    return {
+        "embed": embed_init(ks[-2], cfg.padded_vocab, cfg.d_model, dtype),
+        "blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *blocks),
+        "ln_f": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": dense_init(ks[-1], cfg.d_model, cfg.padded_vocab, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# ddlerp token shift
+# ---------------------------------------------------------------------------
+
+
+def _ddlerp(p: dict, x: Array, x_prev: Array):
+    """Data-dependent lerp producing the 5 mixed inputs (r,k,v,w,g).
+
+    x, x_prev: (B, T, D). Returns tuple of 5 arrays (B, T, D).
+    """
+    dxx = x_prev - x
+    base = x + dxx * p["mu_base"]
+    lora = jnp.tanh(base @ p["mix_w1"])  # (B,T,5R)
+    B, T, _ = lora.shape
+    R = p["mix_w2"].shape[1]
+    lora = lora.reshape(B, T, 5, R)
+    off = jnp.einsum("btfr,frd->btfd", lora, p["mix_w2"])  # (B,T,5,D)
+    mixed = x[:, :, None, :] + dxx[:, :, None, :] * (p["mu"] + off)
+    return tuple(mixed[:, :, i, :] for i in range(5))
+
+
+def _decay_log(p: dict, xw: Array) -> Array:
+    """Per-channel log-decay in (-DECAY_CLAMP, 0). xw: (B,T,D)."""
+    lora = jnp.tanh(xw @ p["decay_w1"]) @ p["decay_w2"]
+    return -DECAY_CLAMP * jax.nn.sigmoid(
+        (p["w0"] + lora).astype(jnp.float32)
+    )
+
+
+# ---------------------------------------------------------------------------
+# wkv: chunkwise-parallel scan (train/prefill)
+# ---------------------------------------------------------------------------
+
+
+def wkv_chunked(r, k, v, log_w, bonus, state, chunk: int):
+    """Chunkwise-parallel RWKV6 recurrence.
+
+    r,k,v: (B, T, H, n); log_w: (B, T, H, n) (negative); bonus: (H, n);
+    state: (B, H, n, n). T must be a multiple of ``chunk``.
+    Returns (o (B,T,H,n), final state).
+    """
+    B, T, H, n = r.shape
+    C = chunk
+    NC = T // C
+    rs = r.reshape(B, NC, C, H, n).astype(jnp.float32)
+    ks_ = k.reshape(B, NC, C, H, n).astype(jnp.float32)
+    vs = v.reshape(B, NC, C, H, n).astype(jnp.float32)
+    lw = log_w.reshape(B, NC, C, H, n).astype(jnp.float32)
+    u = bonus.astype(jnp.float32)
+
+    # move chunk axis to front for scan: (NC, B, C, H, n)
+    rs, ks_, vs, lw = (jnp.moveaxis(a, 1, 0) for a in (rs, ks_, vs, lw))
+
+    def chunk_step(S, inp):
+        rc, kc, vc, lwc = inp  # (B, C, H, n)
+        cum = jnp.cumsum(lwc, axis=1)  # inclusive per-channel cumulative
+        A_full = jnp.exp(cum[:, -1])  # (B,H,n) total chunk decay
+        # q_t = r_t * exp(cum_{t-1});   kappa_s = k_s * exp(-cum_s)
+        cum_prev = cum - lwc  # exclusive cumsum (cum_{t-1})
+        q = rc * jnp.exp(cum_prev)
+        kap = kc * jnp.exp(-cum)
+        # inter-chunk: o_inter[t] = q_t @ S   (B,C,H,n) x (B,H,n,n)
+        o_inter = jnp.einsum("bchi,bhij->bchj", q, S)
+        # intra-chunk: strict-lower pairwise  (q_t . kappa_s) v_s
+        att = jnp.einsum("bchi,bshi->bhcs", q, kap)  # (B,H,C,C)
+        tri = jnp.tril(jnp.ones((C, C), jnp.float32), -1)
+        att = att * tri
+        o_intra = jnp.einsum("bhcs,bshj->bchj", att, vc)
+        # bonus (diagonal) term: (r_t . (u * k_t)) v_t
+        diag = jnp.sum(rc * (u * kc), axis=-1, keepdims=True)  # (B,C,H,1)
+        o = o_inter + o_intra + diag * vc
+        # state update: S' = diag(A_full) S + sum_s diag(exp(cum_C - cum_s)) k_s v_s^T
+        scale = jnp.exp(cum[:, -1:, :, :] - cum)  # (B,C,H,n)
+        S_new = A_full[:, :, :, None] * S + jnp.einsum(
+            "bshi,bshj->bhij", kc * scale, vc
+        )
+        return S_new, o
+
+    state = state.astype(jnp.float32)
+    state, outs = jax.lax.scan(chunk_step, state, (rs, ks_, vs, lw))
+    o = jnp.moveaxis(outs, 0, 1).reshape(B, T, H, n)
+    return o.astype(r.dtype), state
+
+
+def wkv_step(r, k, v, log_w, bonus, state):
+    """Exact single-token recurrence (decode / oracle).
+
+    r,k,v,log_w: (B, H, n); state: (B, H, n, n) fp32.
+    """
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    u = bonus.astype(jnp.float32)
+    kv = jnp.einsum("bhi,bhj->bhij", kf, vf)
+    o = jnp.einsum("bhi,bhij->bhj", rf, state + u[None, :, :, None] * kv)
+    w = jnp.exp(log_w.astype(jnp.float32))
+    state = w[..., None] * state + kv
+    return o.astype(r.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def time_mix(p: dict, cfg, x: Array, x_prev_last: Array, state: Array
+             ) -> Tuple[Array, Array, Array]:
+    """x: (B,T,D); x_prev_last: (B,D) last token of previous segment;
+    state: (B,H,n,n). Returns (out, new last token, new state)."""
+    B, T, D = x.shape
+    n = cfg.rwkv.head_dim
+    H = D // n
+    x_prev = jnp.concatenate(
+        [x_prev_last[:, None, :].astype(x.dtype), x[:, :-1, :]], axis=1
+    )
+    xr, xk, xv, xw, xg = _ddlerp(p, x, x_prev)
+    r = (xr @ p["wr"]).reshape(B, T, H, n)
+    k = (xk @ p["wk"]).reshape(B, T, H, n)
+    v = (xv @ p["wv"]).reshape(B, T, H, n)
+    g = xg @ p["wg"]
+    log_w = _decay_log(p, xw).reshape(B, T, H, n)
+    chunk = cfg.rwkv.chunk_size
+    if T % chunk != 0 or T < chunk:
+        # pure scan fallback for short / ragged sequences
+        def step(S, inp):
+            rt, kt, vt, lwt = inp
+            o, S = wkv_step(rt, kt, vt, lwt, p["bonus"], S)
+            return S, o
+
+        seq = (jnp.moveaxis(r, 1, 0), jnp.moveaxis(k, 1, 0),
+               jnp.moveaxis(v, 1, 0), jnp.moveaxis(log_w, 1, 0))
+        state, o = jax.lax.scan(step, state.astype(jnp.float32), seq)
+        o = jnp.moveaxis(o, 0, 1)
+    else:
+        o, state = wkv_chunked(r, k, v, log_w, p["bonus"], state, chunk)
+    o = groupnorm_heads(p["gn"], o).reshape(B, T, D)
+    out = (o * jax.nn.silu(g)) @ p["wo"]
+    return out, x[:, -1, :], state
+
+
+def channel_mix(p: dict, cfg, x: Array, x_prev_last: Array
+                ) -> Tuple[Array, Array]:
+    x_prev = jnp.concatenate(
+        [x_prev_last[:, None, :].astype(x.dtype), x[:, :-1, :]], axis=1
+    )
+    dxx = x_prev - x
+    xk = x + dxx * p["mu_k"]
+    xr = x + dxx * p["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    v = k @ p["wv"]
+    return jax.nn.sigmoid(xr @ p["wr"]) * v, x[:, -1, :]
+
+
+def block_apply(cfg, p, x, st):
+    """st: dict(time_shift (B,D), chan_shift (B,D), wkv (B,H,n,n))."""
+    t_out, t_shift, wkv = time_mix(p["time"], cfg, rmsnorm(p["ln1"], x, cfg.norm_eps),
+                                   st["time_shift"], st["wkv"])
+    h = x + t_out
+    c_out, c_shift = channel_mix(p["chan"], cfg, rmsnorm(p["ln2"], h, cfg.norm_eps),
+                                 st["chan_shift"])
+    return h + c_out, {"time_shift": t_shift, "chan_shift": c_shift, "wkv": wkv}
+
+
+# ---------------------------------------------------------------------------
+# model-level forward / decode
+# ---------------------------------------------------------------------------
+
+
+def init_state(cfg, batch: int) -> dict:
+    D = cfg.d_model
+    n = cfg.rwkv.head_dim
+    H = D // n
+    L_ = cfg.n_layers
+    return {
+        "time_shift": jnp.zeros((L_, batch, D), jnp.float32),
+        "chan_shift": jnp.zeros((L_, batch, D), jnp.float32),
+        "wkv": jnp.zeros((L_, batch, H, n, n), jnp.float32),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def forward(params: dict, cfg, tokens: Array, prefix_embeds=None,
+            window=None, last_only: bool = False) -> Tuple[Array, Array]:
+    del prefix_embeds, window
+    B, T = tokens.shape
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"][tokens].astype(dt)
+    state0 = init_state(cfg, B)
+
+    def body(h, blk_and_state):
+        blk, ts, cs, wkv = blk_and_state
+        h, st = block_apply(cfg, blk, h, {"time_shift": ts, "chan_shift": cs,
+                                          "wkv": wkv})
+        return h, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat == "full" else body
+    x, _ = jax.lax.scan(
+        body_fn, x,
+        (params["blocks"], state0["time_shift"], state0["chan_shift"],
+         state0["wkv"]),
+        unroll=cfg.n_layers if layer_scan_unroll() else 1,
+    )
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:]
+    logits = x @ params["lm_head"].astype(x.dtype)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def decode_step(params: dict, cfg, cache: dict, tokens: Array
+                ) -> Tuple[Array, dict]:
+    """tokens: (B,). State-space decode: O(1) in sequence length."""
+    B = tokens.shape[0]
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"][tokens][:, None, :].astype(dt)  # (B,1,D)
+
+    def body(h, xs):
+        blk, ts, cs, wkv = xs
+        h, st = block_apply(cfg, blk, h, {"time_shift": ts, "chan_shift": cs,
+                                          "wkv": wkv})
+        return h, (st["time_shift"].astype(jnp.float32),
+                   st["chan_shift"].astype(jnp.float32),
+                   st["wkv"].astype(jnp.float32))
+
+    x, (nts, ncs, nwkv) = jax.lax.scan(
+        body, x,
+        (params["blocks"], cache["time_shift"], cache["chan_shift"],
+         cache["wkv"]),
+        unroll=cfg.n_layers if layer_scan_unroll() else 1,
+    )
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = x[:, 0] @ params["lm_head"].astype(x.dtype)
+    return logits, {"time_shift": nts, "chan_shift": ncs, "wkv": nwkv,
+                    "index": cache["index"] + 1}

@@ -1,0 +1,29 @@
+from repro.optim.base import (
+    GradientTransformation,
+    apply_updates,
+    chain,
+    identity_tx,
+    scale,
+    scale_by_schedule,
+)
+from repro.optim.sgd import sgd, sgd_momentum, add_weight_decay, clip_by_global_norm
+from repro.optim.adam import adam
+from repro.optim.qsgd import qsgd, qsgd_quantize
+from repro.optim import schedules
+
+__all__ = [
+    "GradientTransformation",
+    "apply_updates",
+    "chain",
+    "identity_tx",
+    "scale",
+    "scale_by_schedule",
+    "sgd",
+    "sgd_momentum",
+    "add_weight_decay",
+    "clip_by_global_norm",
+    "adam",
+    "qsgd",
+    "qsgd_quantize",
+    "schedules",
+]

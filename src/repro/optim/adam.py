@@ -1,0 +1,62 @@
+"""Adam / AdamW (Kingma & Ba '14), used by the large-model training driver."""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import GradientTransformation
+
+Array = jax.Array
+Schedule = Callable[[Array], Array]
+
+
+class AdamState(NamedTuple):
+    count: Array
+    mu: object
+    nu: object
+
+
+def adam(
+    eta: Schedule | float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> GradientTransformation:
+    sched = eta if callable(eta) else (lambda t: jnp.asarray(eta, jnp.float32))
+
+    def init(params):
+        zeros = lambda: jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        return AdamState(count=jnp.zeros((), jnp.int32), mu=zeros(), nu=zeros())
+
+    def update(grads, state: AdamState, params=None, **_):
+        t = state.count + 1
+        mu = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads
+        )
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu,
+            grads,
+        )
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+        e = sched(state.count)
+
+        def leaf(m, v, p):
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay and params is not None:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (-e * step).astype(p.dtype if p is not None else step.dtype)
+
+        if params is not None:
+            updates = jax.tree.map(leaf, mu, nu, params)
+        else:
+            updates = jax.tree.map(lambda m, v: leaf(m, v, m), mu, nu)
+        return updates, AdamState(count=t, mu=mu, nu=nu)
+
+    return GradientTransformation(init, update)

@@ -1,0 +1,73 @@
+"""Minimal optax-style GradientTransformation protocol, built in-repo.
+
+optax is not available offline; Mem-SGD and the baselines compose through
+this tiny protocol instead. Semantics match optax:
+
+    state = tx.init(params)
+    updates, state = tx.update(grads, state, params=None, **extra)
+    params = apply_updates(params, updates)       # params + updates
+
+Updates returned by transformations are ADDITIVE (already negated where a
+descent step is intended), exactly like optax.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class GradientTransformation(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]  # (updates, state, params=None, **extra)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def chain(*txs: GradientTransformation) -> GradientTransformation:
+    def init(params):
+        return tuple(tx.init(params) for tx in txs)
+
+    def update(updates, state, params=None, **extra):
+        new_state = []
+        for tx, s in zip(txs, state):
+            updates, s = tx.update(updates, s, params=params, **extra)
+            new_state.append(s)
+        return updates, tuple(new_state)
+
+    return GradientTransformation(init, update)
+
+
+def identity_tx() -> GradientTransformation:
+    return GradientTransformation(lambda p: (), lambda u, s, params=None, **_: (u, s))
+
+
+class ScaleByScheduleState(NamedTuple):
+    count: jax.Array
+
+
+def scale(factor: float) -> GradientTransformation:
+    return GradientTransformation(
+        lambda p: (),
+        lambda u, s, params=None, **_: (
+            jax.tree.map(lambda x: factor * x, u),
+            s,
+        ),
+    )
+
+
+def scale_by_schedule(schedule: Callable[[jax.Array], jax.Array]) -> GradientTransformation:
+    """Multiply updates by schedule(count); count increments per update."""
+
+    def init(params):
+        return ScaleByScheduleState(count=jnp.zeros((), jnp.int32))
+
+    def update(updates, state, params=None, **_):
+        s = schedule(state.count)
+        updates = jax.tree.map(lambda x: s * x, updates)
+        return updates, ScaleByScheduleState(count=state.count + 1)
+
+    return GradientTransformation(init, update)

@@ -1,0 +1,62 @@
+"""QSGD (Alistarh et al., NIPS 2017) — the paper's quantization baseline.
+
+QSGD quantizes each gradient coordinate to one of s levels of |g|/||g||_2
+with stochastic rounding so that the quantized vector is an UNBIASED
+estimator of g (no memory needed). The paper (§4.3) compares Mem-SGD
+against QSGD with s = 2^b levels, b in {2, 4, 8}.
+
+Q_s(g)_i = ||g||_2 * sign(g_i) * xi_i(g, s)
+
+where xi_i = (l+1)/s with probability |g_i|/||g|| * s - l, else l/s,
+with l = floor(|g_i|/||g|| * s).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import GradientTransformation
+
+Array = jax.Array
+Schedule = Callable[[Array], Array]
+
+
+def qsgd_quantize(g: Array, s: int, key: Array) -> Array:
+    """Unbiased s-level stochastic quantization of a flat vector."""
+    norm = jnp.linalg.norm(g)
+    safe = jnp.where(norm > 0, norm, 1.0)
+    r = jnp.abs(g) / safe * s  # in [0, s]
+    lo = jnp.floor(r)
+    p_up = r - lo  # probability of rounding up
+    up = jax.random.bernoulli(key, jnp.clip(p_up, 0.0, 1.0), shape=g.shape)
+    level = (lo + up.astype(lo.dtype)) / s
+    q = norm * jnp.sign(g) * level
+    return jnp.where(norm > 0, q, jnp.zeros_like(g))
+
+
+class QSGDState(NamedTuple):
+    count: Array
+    rng: Array
+
+
+def qsgd(eta: Schedule | float, s: int, seed: int = 0) -> GradientTransformation:
+    """SGD with QSGD-quantized gradients (per-leaf quantization)."""
+    sched = eta if callable(eta) else (lambda t: jnp.asarray(eta, jnp.float32))
+
+    def init(params):
+        return QSGDState(count=jnp.zeros((), jnp.int32), rng=jax.random.PRNGKey(seed))
+
+    def update(grads, state: QSGDState, params=None, **_):
+        rng, sub = jax.random.split(state.rng)
+        leaves, treedef = jax.tree.flatten(grads)
+        keys = jax.random.split(sub, len(leaves))
+        e = sched(state.count)
+        out = [
+            (-e * qsgd_quantize(g.reshape(-1), s, k).reshape(g.shape)).astype(g.dtype)
+            for g, k in zip(leaves, keys)
+        ]
+        return treedef.unflatten(out), QSGDState(count=state.count + 1, rng=rng)
+
+    return GradientTransformation(init, update)

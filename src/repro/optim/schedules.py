@@ -1,0 +1,41 @@
+"""Learning-rate schedules for the large-model training driver."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Schedule = Callable[[Array], Array]
+
+
+def constant(v: float) -> Schedule:
+    return lambda t: jnp.asarray(v, jnp.float32)
+
+
+def inverse_time(gamma: float, lam: float, a: float) -> Schedule:
+    """gamma / (lam * (t + a)) — the paper's schedule family."""
+    return lambda t: gamma / (lam * (t.astype(jnp.float32) + a))
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.0) -> Schedule:
+    def sched(t: Array) -> Array:
+        tf = t.astype(jnp.float32)
+        warm = peak * tf / max(1, warmup_steps)
+        frac = jnp.clip(
+            (tf - warmup_steps) / max(1, total_steps - warmup_steps), 0.0, 1.0
+        )
+        cos = floor + (peak - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(tf < warmup_steps, warm, cos)
+
+    return sched
+
+
+def linear_decay(peak: float, total_steps: int) -> Schedule:
+    def sched(t: Array) -> Array:
+        frac = jnp.clip(t.astype(jnp.float32) / max(1, total_steps), 0.0, 1.0)
+        return peak * (1.0 - frac)
+
+    return sched

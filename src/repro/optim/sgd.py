@@ -1,0 +1,84 @@
+"""SGD and momentum transformations (descent direction, additive updates)."""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import GradientTransformation
+
+Array = jax.Array
+Schedule = Callable[[Array], Array]
+
+
+class SGDState(NamedTuple):
+    count: Array
+
+
+def sgd(eta: Schedule | float) -> GradientTransformation:
+    """x' = x - eta_t * g."""
+    sched = eta if callable(eta) else (lambda t: jnp.asarray(eta, jnp.float32))
+
+    def init(params):
+        return SGDState(count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state: SGDState, params=None, **_):
+        e = sched(state.count)
+        return (
+            jax.tree.map(lambda g: -e * g, grads),
+            SGDState(count=state.count + 1),
+        )
+
+    return GradientTransformation(init, update)
+
+
+class MomentumState(NamedTuple):
+    count: Array
+    velocity: object
+
+
+def sgd_momentum(
+    eta: Schedule | float, beta: float = 0.9, nesterov: bool = False
+) -> GradientTransformation:
+    sched = eta if callable(eta) else (lambda t: jnp.asarray(eta, jnp.float32))
+
+    def init(params):
+        return MomentumState(
+            count=jnp.zeros((), jnp.int32),
+            velocity=jax.tree.map(jnp.zeros_like, params),
+        )
+
+    def update(grads, state: MomentumState, params=None, **_):
+        v = jax.tree.map(lambda vel, g: beta * vel + g, state.velocity, grads)
+        if nesterov:
+            d = jax.tree.map(lambda vel, g: beta * vel + g, v, grads)
+        else:
+            d = v
+        e = sched(state.count)
+        return (
+            jax.tree.map(lambda x: -e * x, d),
+            MomentumState(count=state.count + 1, velocity=v),
+        )
+
+    return GradientTransformation(init, update)
+
+
+def add_weight_decay(lam: float) -> GradientTransformation:
+    """g <- g + lam * params (L2 regularization as in the paper's logreg)."""
+
+    def update(grads, state, params=None, **_):
+        assert params is not None, "weight decay needs params"
+        return jax.tree.map(lambda g, p: g + lam * p, grads, params), state
+
+    return GradientTransformation(lambda p: (), update)
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransformation:
+    def update(grads, state, params=None, **_):
+        leaves = jax.tree.leaves(grads)
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+        scale = jnp.minimum(1.0, max_norm / (gn + 1e-12))
+        return jax.tree.map(lambda g: g * scale, grads), state
+
+    return GradientTransformation(lambda p: (), update)

@@ -1,0 +1,170 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Terms (per step, per chip — XLA's SPMD module is the per-device program,
+so cost_analysis FLOPs/bytes and HLO shapes are already per-device):
+
+    compute term    = HLO_FLOPs / peak_FLOPs_per_chip
+    memory term     = HLO_bytes / HBM_bw
+    collective term = collective_bytes / link_bw
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (in+out aggregated per the assignment's constants).
+
+``collective_bytes`` is parsed from ``compiled.as_text()``: we sum the
+RESULT shape bytes of every all-gather / all-to-all / collective-permute
+op and 2x the size for all-reduce (reduce-scatter + all-gather phases);
+reduce-scatter counts its (larger) operand. This is the standard
+bytes-on-the-wire approximation for ring algorithms up to the (W-1)/W
+factor, which we fold in as 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional
+
+from repro.utils.shapes import parse_hlo_shape_bytes
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_COLL_RE = re.compile(
+    r"=\s*([a-z0-9\[\],{}\s()]*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\("
+)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    bytes_by_kind: Dict[str, float]
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: Dict[str, int] = {}
+    bbytes: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":
+            continue  # counted at -start
+        nbytes = parse_hlo_shape_bytes(shape_str)
+        if kind == "all-reduce":
+            nbytes *= 2  # RS + AG phases of a ring all-reduce
+        counts[kind] = counts.get(kind, 0) + 1
+        bbytes[kind] = bbytes.get(kind, 0.0) + nbytes
+    return CollectiveStats(counts=counts, bytes_by_kind=bbytes)
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops: float  # per-device
+    hbm_bytes: float  # per-device
+    collective_bytes: float  # per-device
+    peak_memory_bytes: Optional[float]  # per-device (memory_analysis)
+    model_flops: float  # 6*N*D useful flops, per-device share
+    collectives: Dict[str, float]
+    collective_counts: Dict[str, int]
+    comm_message_bytes: Optional[float] = None  # Mem-SGD accounting
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(
+            compute_s=self.compute_s,
+            memory_s=self.memory_s,
+            collective_s=self.collective_s,
+            dominant=self.dominant,
+            useful_ratio=self.useful_ratio,
+        )
+        return d
+
+
+def model_flops_per_step(n_params_active: int, tokens: int, kind: str) -> float:
+    """MODEL_FLOPS = 6*N*D for a train step (fwd+bwd), 2*N*D for inference."""
+    c = 6.0 if kind == "train" else 2.0
+    return c * n_params_active * tokens
+
+
+def analyze(
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    cost: dict,
+    hlo_text: str,
+    peak_memory: Optional[float],
+    model_flops_global: float,
+    comm_message_bytes: Optional[float] = None,
+) -> Roofline:
+    coll = parse_collectives(hlo_text)
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    return Roofline(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        chips=chips,
+        flops=flops,
+        hbm_bytes=nbytes,
+        collective_bytes=coll.total_bytes,
+        peak_memory_bytes=peak_memory,
+        model_flops=model_flops_global / chips,
+        collectives=coll.bytes_by_kind,
+        collective_counts=coll.counts,
+        comm_message_bytes=comm_message_bytes,
+    )
+
+
+def format_table(rows: List[Roofline]) -> str:
+    hdr = (
+        f"{'arch':22s} {'shape':12s} {'mesh':8s} "
+        f"{'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} "
+        f"{'dominant':>10s} {'useful':>7s} {'peakGiB':>8s}"
+    )
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        peak = (r.peak_memory_bytes or 0) / 2**30
+        lines.append(
+            f"{r.arch:22s} {r.shape:12s} {r.mesh:8s} "
+            f"{r.compute_s:10.4g} {r.memory_s:10.4g} {r.collective_s:10.4g} "
+            f"{r.dominant:>10s} {r.useful_ratio:7.3f} {peak:8.2f}"
+        )
+    return "\n".join(lines)

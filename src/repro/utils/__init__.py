@@ -1,0 +1,20 @@
+from repro.utils.tree import (
+    tree_add,
+    tree_scale,
+    tree_zeros_like,
+    tree_norm,
+    tree_size,
+    tree_dot,
+)
+from repro.utils.shapes import parse_hlo_shape_bytes, human_bytes
+
+__all__ = [
+    "tree_add",
+    "tree_scale",
+    "tree_zeros_like",
+    "tree_norm",
+    "tree_size",
+    "tree_dot",
+    "parse_hlo_shape_bytes",
+    "human_bytes",
+]

@@ -1,0 +1,53 @@
+"""Small pytree algebra helpers used across the framework.
+
+These are deliberately dependency-free (no optax); Mem-SGD and the optimizer
+stack are built on top of them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    """Leafwise a + b."""
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    """Leafwise a - b."""
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(s, a):
+    """Leafwise s * a for scalar s."""
+    return jax.tree.map(lambda x: s * x, a)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_norm(a):
+    """Global L2 norm over all leaves."""
+    leaves = jax.tree.leaves(a)
+    if not leaves:
+        return jnp.zeros(())
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def tree_dot(a, b):
+    """Global inner product over all leaves."""
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return sum(
+        jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)) for x, y in zip(la, lb)
+    )
+
+
+def tree_size(a):
+    """Total number of scalar elements across all leaves (static int)."""
+    return sum(x.size for x in jax.tree.leaves(a))
+
+
+def tree_cast(a, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), a)

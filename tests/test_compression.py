@@ -1,0 +1,103 @@
+"""Property tests for the k-contraction operators (paper Definition 2.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression as C
+
+DIM = st.integers(min_value=2, max_value=257)
+SEED = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _vec(d, seed):
+    return jax.random.normal(jax.random.PRNGKey(seed), (d,))
+
+
+@settings(max_examples=40, deadline=None)
+@given(d=DIM, seed=SEED, kfrac=st.floats(0.01, 1.0))
+def test_topk_contraction(d, seed, kfrac):
+    """top_k is a k-contraction: ||x - comp(x)||^2 <= (1-k/d)||x||^2,
+    deterministically (no expectation needed)."""
+    k = max(1, int(kfrac * d))
+    x = _vec(d, seed)
+    comp = C.top_k(k)
+    resid = float(jnp.sum((x - comp.dense(x, None)) ** 2))
+    bound = (1 - comp.k_of(d) / d) * float(jnp.sum(x**2))
+    assert resid <= bound + 1e-5 * float(jnp.sum(x**2)) + 1e-12
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=st.integers(8, 128), seed=SEED)
+def test_randk_contraction_in_expectation(d, seed):
+    k = max(1, d // 4)
+    x = _vec(d, seed)
+    comp = C.rand_k(k)
+    key = jax.random.PRNGKey(seed + 1)
+    resids = []
+    for i in range(300):
+        r = x - comp.dense(x, jax.random.fold_in(key, i))
+        resids.append(float(jnp.sum(r**2)))
+    bound = (1 - k / d) * float(jnp.sum(x**2))
+    # statistical: mean within 15% of the exact expectation (= bound)
+    assert np.mean(resids) <= bound * 1.15 + 1e-12
+
+
+@settings(max_examples=30, deadline=None)
+@given(d=DIM, seed=SEED, kb=st.integers(1, 8), block=st.sampled_from([8, 16, 64]))
+def test_blockwise_topk_contraction(d, seed, kb, block):
+    x = _vec(d, seed)
+    comp = C.blockwise_top_k(kb, block)
+    resid = float(jnp.sum((x - comp.dense(x, None)) ** 2))
+    k_eff = comp.k_of(d)
+    bound = (1 - min(kb, block) / block) * float(jnp.sum(x**2))
+    # per-block contraction with uniform factor k_b/block
+    assert resid <= bound + 1e-5 * float(jnp.sum(x**2)) + 1e-12
+    assert k_eff >= 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=st.integers(4, 64), seed=SEED, k=st.floats(0.25, 2.0))
+def test_random_coordinate_ultra_contraction(d, seed, k):
+    """Remark 2.3: valid even for k < 1 (in expectation)."""
+    x = _vec(d, seed)
+    comp = C.random_coordinate(k)
+    key = jax.random.PRNGKey(seed + 7)
+    resids = []
+    for i in range(400):
+        r = x - comp.dense(x, jax.random.fold_in(key, i))
+        resids.append(float(jnp.sum(r**2)))
+    bound = (1 - min(k, d) / d) * float(jnp.sum(x**2))
+    assert np.mean(resids) <= bound * 1.15 + 1e-12
+
+
+@settings(max_examples=25, deadline=None)
+@given(d=DIM, seed=SEED)
+def test_topk_sparse_dense_consistency(d, seed):
+    k = max(1, d // 3)
+    x = _vec(d, seed)
+    comp = C.top_k(k)
+    dense = comp.dense(x, None)
+    vals, idx = comp.sparse(x, None)
+    rebuilt = jnp.zeros_like(x).at[idx].set(vals)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(rebuilt), atol=0)
+    assert int(jnp.sum(dense != 0)) <= k
+
+
+def test_topk_keeps_largest():
+    x = jnp.array([0.1, -5.0, 3.0, 0.01, -0.2])
+    out = C.top_k(2).dense(x, None)
+    np.testing.assert_allclose(np.asarray(out), [0, -5.0, 3.0, 0, 0])
+
+
+def test_identity_is_lossless():
+    x = _vec(33, 0)
+    assert float(jnp.sum((x - C.identity().dense(x, None)) ** 2)) == 0.0
+
+
+def test_make_compressor_registry():
+    assert C.make_compressor("top_k", k=3).name == "top_3"
+    assert C.make_compressor("rand_k", k=3).needs_rng
+    with pytest.raises(ValueError):
+        C.make_compressor("nope")

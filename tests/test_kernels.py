@@ -1,0 +1,105 @@
+"""Pallas kernel tests: sweep shapes/dtypes/k against the pure-jnp oracle
+(interpret mode on CPU), plus hypothesis property checks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import (
+    fused_memsgd_ref,
+    fused_memsgd_update,
+    row_topk,
+    row_topk_ref,
+)
+
+SHAPES = [(8, 64), (16, 128), (8, 1024), (24, 100), (3, 33), (1, 257)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+KS = [1, 4, 16]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("k", KS)
+def test_row_topk_sweep(shape, dtype, k):
+    R, C = shape
+    if k > C:
+        pytest.skip("k > C")
+    x = jax.random.normal(jax.random.PRNGKey(R * C + k), shape).astype(dtype)
+    v1, i1 = row_topk(x, k)
+    v2, i2 = row_topk_ref(x, k)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(
+        np.asarray(v1, np.float32), np.asarray(v2, np.float32), atol=0
+    )
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("k", KS)
+def test_fused_memsgd_sweep(shape, dtype, k):
+    R, C = shape
+    if k > C:
+        pytest.skip("k > C")
+    key = jax.random.PRNGKey(R + C + k)
+    m = jax.random.normal(key, shape).astype(dtype)
+    g = jax.random.normal(jax.random.fold_in(key, 1), shape).astype(dtype)
+    nm1, v1, i1 = fused_memsgd_update(m, g, 0.37, k)
+    nm2, v2, i2 = fused_memsgd_ref(m, g, 0.37, k)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    atol = 1e-6 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(nm1, np.float32), np.asarray(nm2, np.float32), atol=atol
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    R=st.integers(1, 32),
+    C=st.integers(2, 200),
+    k=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_row_topk_property(R, C, k, seed):
+    k = min(k, C)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (R, C))
+    vals, idx = row_topk(x, k)
+    xn = np.asarray(x)
+    vn, inn = np.asarray(vals), np.asarray(idx)
+    for r in range(R):
+        # selected values are genuinely the k largest magnitudes
+        thresh = np.sort(np.abs(xn[r]))[-k]
+        assert np.all(np.abs(vn[r]) >= thresh - 1e-6)
+        # indices point at the right values
+        np.testing.assert_allclose(xn[r][inn[r]], vn[r], atol=0)
+        # indices unique
+        assert len(set(inn[r].tolist())) == k
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_fused_memory_residual_invariant(seed):
+    """new_m + scatter(vals) == m + eta*g exactly (the error-feedback
+    conservation law the whole method rests on)."""
+    key = jax.random.PRNGKey(seed)
+    R, C, k = 8, 64, 5
+    m = jax.random.normal(key, (R, C))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (R, C))
+    eta = 0.21
+    nm, vals, idx = fused_memsgd_update(m, g, eta, k)
+    rebuilt = np.asarray(nm).copy()
+    vn, inn = np.asarray(vals), np.asarray(idx)
+    for r in range(R):
+        rebuilt[r, inn[r]] += vn[r]
+    np.testing.assert_allclose(rebuilt, np.asarray(m + eta * g), atol=1e-5)
+
+
+def test_kernel_is_contraction():
+    """Row-top-k (the kernel's operator) satisfies Definition 2.1 per row."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 200))
+    k = 10
+    vals, idx = row_topk(x, k)
+    dense = jnp.zeros_like(x).at[jnp.arange(16)[:, None], idx].set(vals)
+    resid = jnp.sum((x - dense) ** 2, axis=1)
+    bound = (1 - k / 200) * jnp.sum(x**2, axis=1)
+    assert bool(jnp.all(resid <= bound + 1e-5))

@@ -1,0 +1,178 @@
+"""Mem-SGD (Algorithm 1) semantics and convergence tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compression as C
+from repro.core import theory
+from repro.core.memsgd import (
+    constant_eta,
+    leaf_compressor_from_ratio,
+    memsgd,
+    memsgd_flat,
+)
+from repro.optim import apply_updates, sgd
+
+
+def _quad_grad(w, target):
+    return w - target
+
+
+def test_memsgd_equals_sgd_when_k_is_d():
+    """With the identity compressor (k=d) Mem-SGD IS vanilla SGD."""
+    d, eta = 16, 0.1
+    target = jnp.linspace(-1, 1, d)
+    tx_mem = memsgd_flat(C.identity(), constant_eta(eta), d)
+    tx_sgd = sgd(eta)
+    w1 = jnp.zeros(d)
+    w2 = jnp.zeros(d)
+    s1, s2 = tx_mem.init(w1), tx_sgd.init(w2)
+    for _ in range(25):
+        u1, s1 = tx_mem.update(_quad_grad(w1, target), s1)
+        u2, s2 = tx_sgd.update(_quad_grad(w2, target), s2)
+        w1, w2 = apply_updates(w1, u1), apply_updates(w2, u2)
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), rtol=1e-6)
+    # memory stays exactly zero with lossless compression
+    assert float(jnp.max(jnp.abs(s1.memory))) == 0.0
+
+
+def test_memsgd_converges_on_quadratic_topk():
+    """Stepsize must respect the d/k delay (Remark 2.5): eta ~ O(k/d).
+    (With eta >> k/d the scheme oscillates — the paper's 'without delay'
+    failure mode, exercised in test_large_eta_without_delay_diverges.)"""
+    d, k = 64, 4
+    target = jnp.ones(d)
+    tx = memsgd_flat(C.top_k(k), constant_eta(0.5 * k / d), d)
+    w = jnp.zeros(d)
+    s = tx.init(w)
+    for _ in range(1500):
+        u, s = tx.update(_quad_grad(w, target), s)
+        w = apply_updates(w, u)
+    assert float(jnp.linalg.norm(w - target)) < 1e-3
+
+
+def test_memsgd_converges_on_quadratic_randk():
+    d, k = 64, 4
+    target = jnp.ones(d)
+    tx = memsgd_flat(C.rand_k(k), constant_eta(0.5 * k / d), d, seed=3)
+    w = jnp.zeros(d)
+    s = tx.init(w)
+    for _ in range(3000):
+        u, s = tx.update(_quad_grad(w, target), s)
+        w = apply_updates(w, u)
+    assert float(jnp.linalg.norm(w - target)) < 1e-2
+
+
+def test_large_eta_without_delay_diverges_then_theorem_shift_fixes_it():
+    """Reproduces the paper's Fig. 2 'without delay' observation in
+    miniature: constant eta >> k/d oscillates; the Theorem 2.4 schedule
+    with shift a = (alpha+2) d/k converges from the same start."""
+    d, k = 64, 4
+    target = jnp.ones(d)
+    # big constant eta: diverges (norm grows)
+    tx_bad = memsgd_flat(C.top_k(k), constant_eta(0.25), d)
+    w = jnp.zeros(d)
+    s = tx_bad.init(w)
+    for _ in range(200):
+        u, s = tx_bad.update(_quad_grad(w, target), s)
+        w = apply_updates(w, u)
+    assert float(jnp.linalg.norm(w - target)) > 10.0
+    # theorem schedule: converges (mu = 1 quadratic)
+    a = theory.theoretical_shift(d, k, alpha=5.0)
+    tx_ok = memsgd_flat(C.top_k(k), theory.theorem_stepsize(1.0, a), d)
+    w = jnp.zeros(d)
+    s = tx_ok.init(w)
+    for _ in range(3000):
+        u, s = tx_ok.update(_quad_grad(w, target), s)
+        w = apply_updates(w, u)
+    assert float(jnp.linalg.norm(w - target)) < 0.05
+
+
+def test_no_coordinate_starvation():
+    """Error feedback guarantees every coordinate is eventually applied —
+    the motivating property (Section 1): without memory, top-1 on this
+    gradient would never touch the small coordinates."""
+    d = 8
+    # gradient with one dominant coordinate
+    g = jnp.array([10.0, 1, 1, 1, 1, 1, 1, 1])
+    tx = memsgd_flat(C.top_k(1), constant_eta(0.1), d)
+    w = jnp.zeros(d)
+    s = tx.init(w)
+    for _ in range(50):
+        u, s = tx.update(g, s)
+        w = apply_updates(w, u)
+    assert float(jnp.min(jnp.abs(w))) > 0.0, "a coordinate was starved"
+
+
+def test_eta_applied_at_insertion_time():
+    """Paper: gradients are scaled by eta_t when they ENTER memory. With a
+    decaying schedule the retrieved value must carry the OLD eta."""
+    d = 2
+    etas = [1.0, 0.0]  # second step: eta=0 — only memory can move w
+    sched = lambda t: jnp.where(t == 0, 1.0, 0.0)
+    tx = memsgd_flat(C.top_k(1), sched, d)
+    w = jnp.zeros(d)
+    s = tx.init(w)
+    g = jnp.array([2.0, 1.0])
+    u, s = tx.update(g, s)  # applies coordinate 0 (value 2), memory [0, 1]
+    w = apply_updates(w, u)
+    np.testing.assert_allclose(np.asarray(w), [-2.0, 0.0])
+    u, s = tx.update(g, s)  # eta=0: u = m = [0,1] -> applies old eta*g_1
+    w = apply_updates(w, u)
+    np.testing.assert_allclose(np.asarray(w), [-2.0, -1.0])
+
+
+def test_memory_invariant_sum_preserved():
+    """x_t + (-applied cumsum) identity: x_t - x_0 + m_t = -sum eta_j g_j
+    (equation (12): virtual sequence)."""
+    d = 16
+    key = jax.random.PRNGKey(0)
+    tx = memsgd_flat(C.top_k(2), constant_eta(0.3), d)
+    w = jnp.zeros(d)
+    s = tx.init(w)
+    acc = jnp.zeros(d)
+    for i in range(30):
+        g = jax.random.normal(jax.random.fold_in(key, i), (d,))
+        acc = acc + 0.3 * g
+        u, s = tx.update(g, s)
+        w = apply_updates(w, u)
+    np.testing.assert_allclose(
+        np.asarray(w - s.memory), np.asarray(-acc), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_tree_memsgd_on_pytree_params():
+    params = {"a": jnp.zeros((4, 4)), "b": jnp.zeros((7,))}
+    target = {"a": jnp.ones((4, 4)), "b": -jnp.ones((7,))}
+    tx = memsgd(leaf_compressor_from_ratio(0.2), constant_eta(0.3))
+    s = tx.init(params)
+    for _ in range(400):
+        grads = jax.tree.map(lambda w, t: w - t, params, target)
+        u, s = tx.update(grads, s)
+        params = apply_updates(params, u)
+    err = max(
+        float(jnp.max(jnp.abs(params[k] - target[k]))) for k in params
+    )
+    assert err < 5e-3
+
+
+def test_memory_norm_bounded_lemma32():
+    """Lemma 3.2 (spirit): with eta_t = 8/(mu(a+t)), a = alpha*d/k, the
+    memory norm stays O(eta_t * d/k * G)."""
+    d, k = 64, 4
+    mu, G = 1.0, 8.0  # quadratic f = 0.5||w - t||^2 has mu = L = 1
+    a = theory.theoretical_shift(d, k, alpha=5.0)
+    sched = theory.theorem_stepsize(mu, a)
+    tx = memsgd_flat(C.top_k(k), sched, d)
+    target = jnp.ones(d) * 2
+    w = jnp.zeros(d)
+    s = tx.init(w)
+    c_alpha = np.sqrt(4 * 5.0 / (5.0 - 4.0) * 2)  # sqrt(4a/(a-4)) slack x2
+    for t in range(300):
+        g = w - target
+        u, s = tx.update(g, s)
+        w = apply_updates(w, u)
+        eta_t = float(sched(jnp.asarray(t)))
+        bound = c_alpha * eta_t * (d / k) * G
+        assert float(jnp.linalg.norm(s.memory)) <= bound, f"t={t}"

@@ -1,0 +1,98 @@
+"""Optimizer substrate tests (SGD/momentum/Adam/QSGD/schedules/chain)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import (
+    adam,
+    add_weight_decay,
+    apply_updates,
+    chain,
+    clip_by_global_norm,
+    qsgd,
+    qsgd_quantize,
+    schedules,
+    sgd,
+    sgd_momentum,
+)
+
+
+def _opt_quadratic(tx, steps=300, d=10, use_params=True):
+    target = jnp.linspace(-1, 1, d)
+    w = jnp.zeros(d)
+    s = tx.init(w)
+    for _ in range(steps):
+        g = w - target
+        u, s = tx.update(g, s, params=w if use_params else None)
+        w = apply_updates(w, u)
+    return float(jnp.linalg.norm(w - target))
+
+
+def test_sgd_converges():
+    assert _opt_quadratic(sgd(0.2)) < 1e-5
+
+
+def test_momentum_converges():
+    assert _opt_quadratic(sgd_momentum(0.05, 0.9)) < 1e-4
+
+
+def test_nesterov_converges():
+    assert _opt_quadratic(sgd_momentum(0.05, 0.9, nesterov=True)) < 1e-4
+
+
+def test_adam_converges():
+    assert _opt_quadratic(adam(0.05), steps=500) < 1e-3
+
+
+def test_qsgd_converges_statistically():
+    assert _opt_quadratic(qsgd(0.05, s=16), steps=800) < 0.05
+
+
+def test_qsgd_quantize_unbiased():
+    g = jax.random.normal(jax.random.PRNGKey(0), (500,))
+    key = jax.random.PRNGKey(1)
+    est = jnp.mean(
+        jnp.stack([
+            qsgd_quantize(g, 8, jax.random.fold_in(key, i)) for i in range(500)
+        ]),
+        axis=0,
+    )
+    rel = float(jnp.linalg.norm(est - g) / jnp.linalg.norm(g))
+    assert rel < 0.15
+
+
+def test_qsgd_quantize_levels():
+    g = jnp.array([0.3, -0.7, 0.1])
+    q = qsgd_quantize(g, 4, jax.random.PRNGKey(0))
+    norm = float(jnp.linalg.norm(g))
+    levels = np.abs(np.asarray(q)) / norm * 4
+    np.testing.assert_allclose(levels, np.round(levels), atol=1e-5)
+
+
+def test_weight_decay_adds_l2_term():
+    wd = add_weight_decay(0.5)
+    u, _ = wd.update({"w": jnp.ones(3)}, (), params={"w": 2 * jnp.ones(3)})
+    np.testing.assert_allclose(np.asarray(u["w"]), 2.0)
+
+
+def test_clip_by_global_norm():
+    tx = clip_by_global_norm(1.0)
+    g = {"w": jnp.array([3.0, 4.0])}  # norm 5
+    u, _ = tx.update(g, ())
+    np.testing.assert_allclose(float(jnp.linalg.norm(u["w"])), 1.0, rtol=1e-5)
+
+
+def test_chain_composes():
+    tx = chain(clip_by_global_norm(10.0), sgd(0.1))
+    assert _opt_quadratic(tx) < 1e-4
+
+
+def test_schedules():
+    s = schedules.warmup_cosine(1.0, 10, 100)
+    assert float(s(jnp.asarray(0))) == 0.0
+    assert abs(float(s(jnp.asarray(10))) - 1.0) < 1e-5
+    assert float(s(jnp.asarray(100))) < 1e-5
+    lin = schedules.linear_decay(2.0, 10)
+    assert float(lin(jnp.asarray(5))) == 1.0
+    inv = schedules.inverse_time(2.0, 0.5, 4.0)
+    assert float(inv(jnp.asarray(0))) == 1.0

@@ -1,0 +1,167 @@
+"""RWKV6 and Griffin recurrence equivalence tests (chunked/parallel vs
+exact sequential) and decode/forward consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import build_model, griffin, rwkv
+
+
+# ---------------------------------------------------------------------------
+# RWKV6
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 32])
+def test_wkv_chunked_matches_sequential(chunk):
+    key = jax.random.PRNGKey(42)
+    B, T, H, n = 2, 64, 3, 8
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (B, T, H, n))
+    k = jax.random.normal(ks[1], (B, T, H, n))
+    v = jax.random.normal(ks[2], (B, T, H, n))
+    log_w = -2.0 * jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, n)))
+    bonus = jax.random.normal(ks[4], (H, n)) * 0.1
+    S0 = jnp.zeros((B, H, n, n))
+    o_c, S_c = rwkv.wkv_chunked(r, k, v, log_w, bonus, S0, chunk)
+    S = S0
+    outs = []
+    for t in range(T):
+        o, S = rwkv.wkv_step(r[:, t], k[:, t], v[:, t], log_w[:, t], bonus, S)
+        outs.append(o)
+    o_s = jnp.stack(outs, 1)
+    np.testing.assert_allclose(np.asarray(o_c), np.asarray(o_s),
+                               atol=5e-5, rtol=5e-5)
+    np.testing.assert_allclose(np.asarray(S_c), np.asarray(S),
+                               atol=5e-5, rtol=5e-5)
+
+
+def test_wkv_chunked_nonzero_initial_state():
+    key = jax.random.PRNGKey(7)
+    B, T, H, n = 1, 32, 2, 4
+    ks = jax.random.split(key, 6)
+    r, k, v = (jax.random.normal(ks[i], (B, T, H, n)) for i in range(3))
+    log_w = -1.0 * jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, n)))
+    bonus = jnp.zeros((H, n))
+    S0 = jax.random.normal(ks[4], (B, H, n, n))
+    o_c, S_c = rwkv.wkv_chunked(r, k, v, log_w, bonus, S0, 8)
+    S = S0
+    outs = []
+    for t in range(T):
+        o, S = rwkv.wkv_step(r[:, t], k[:, t], v[:, t], log_w[:, t], bonus, S)
+        outs.append(o)
+    np.testing.assert_allclose(np.asarray(o_c), np.asarray(jnp.stack(outs, 1)),
+                               atol=5e-5, rtol=5e-5)
+
+
+def test_rwkv_decode_matches_forward():
+    cfg = get_smoke_config("rwkv6-3b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    logits_full, _ = model.forward(params, {"tokens": toks})
+    cache = model.init_cache(B, S)
+    outs = []
+    for t in range(S):
+        lg, cache = model.decode_step(params, cache, toks[:, t])
+        outs.append(lg)
+    logits_dec = jnp.stack(outs, 1)
+    np.testing.assert_allclose(
+        np.asarray(logits_full, np.float32),
+        np.asarray(logits_dec, np.float32),
+        atol=0.2, rtol=0.1,
+    )
+
+
+def test_rwkv_decay_bounded():
+    """Data-dependent log-decay stays in (-DECAY_CLAMP, 0) — the fp32
+    safety envelope of the chunked scan."""
+    cfg = get_smoke_config("rwkv6-3b")
+    p = rwkv.init_time_mix(jax.random.PRNGKey(0), cfg, jnp.float32)
+    xw = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model)) * 10
+    lw = rwkv._decay_log(p, xw)
+    assert float(jnp.max(lw)) < 0.0
+    assert float(jnp.min(lw)) > -rwkv.DECAY_CLAMP
+
+
+# ---------------------------------------------------------------------------
+# Griffin / RG-LRU
+# ---------------------------------------------------------------------------
+
+
+def test_rg_lru_assoc_scan_matches_sequential():
+    cfg = get_smoke_config("recurrentgemma-9b")
+    p = griffin.init_recurrent_block(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, T = 2, 24
+    R = cfg.hybrid.lru_width
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, T, R))
+    h0 = jax.random.normal(jax.random.PRNGKey(2), (B, R))
+    y_par, h_par = griffin.rg_lru(p, x, h0)
+    h = h0
+    outs = []
+    for t in range(T):
+        y, h = griffin.rg_lru_step(p, x[:, t], h)
+        outs.append(y)
+    y_seq = jnp.stack(outs, 1)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_par), np.asarray(h),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_causal_conv_matches_step():
+    cfg = get_smoke_config("recurrentgemma-9b")
+    p = griffin.init_recurrent_block(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, T, R = 1, 10, cfg.hybrid.lru_width
+    x = jax.random.normal(jax.random.PRNGKey(3), (B, T, R))
+    W = cfg.hybrid.conv_width
+    out_full, _ = griffin.causal_conv(p, x, jnp.zeros((B, W - 1, R)))
+    carry = jnp.zeros((B, W - 1, R))
+    outs = []
+    for t in range(T):
+        window = jnp.concatenate([carry, x[:, t:t + 1]], axis=1)
+        o = jnp.sum(window * p["conv_w"][None], axis=1) + p["conv_b"]
+        outs.append(o)
+        carry = window[:, 1:]
+    np.testing.assert_allclose(np.asarray(out_full),
+                               np.asarray(jnp.stack(outs, 1)),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_griffin_decode_matches_forward():
+    cfg = get_smoke_config("recurrentgemma-9b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    logits_full, _ = model.forward(params, {"tokens": toks})
+    cache = model.init_cache(B, S)
+    outs = []
+    for t in range(S):
+        lg, cache = model.decode_step(params, cache, toks[:, t])
+        outs.append(lg)
+    logits_dec = jnp.stack(outs, 1)
+    np.testing.assert_allclose(
+        np.asarray(logits_full, np.float32),
+        np.asarray(logits_dec, np.float32),
+        atol=0.2, rtol=0.1,
+    )
+
+
+def test_griffin_pattern():
+    cfg = get_smoke_config("recurrentgemma-9b").replace(n_layers=7)
+    kinds = griffin.layer_kinds(cfg)
+    assert kinds == ("rec", "rec", "attn", "rec", "rec", "attn", "rec")
+
+
+def test_lru_decay_magnitude():
+    """a_t in (0,1): state cannot blow up."""
+    cfg = get_smoke_config("recurrentgemma-9b")
+    p = griffin.init_recurrent_block(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 50, cfg.hybrid.lru_width)) * 5
+    h0 = jnp.zeros((1, cfg.hybrid.lru_width))
+    y, h = griffin.rg_lru(p, x, h0)
+    assert bool(jnp.all(jnp.isfinite(y)))

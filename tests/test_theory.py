@@ -1,0 +1,64 @@
+"""Theorem 2.4 machinery tests."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import theory
+
+
+def test_S_T_closed_form():
+    for T in (1, 5, 50):
+        for a in (1.0, 7.0, 500.0):
+            direct = sum((a + t) ** 2 for t in range(T))
+            np.testing.assert_allclose(theory.S_T(T, a), direct, rtol=1e-9)
+            assert theory.S_T(T, a) >= T**3 / 3 - 1e-9
+
+
+def test_weighted_average_streaming_matches_direct():
+    a = 3.0
+    wavg = theory.WeightedAverage(a)
+    xs = [jnp.array([float(t), -float(t) ** 2]) for t in range(10)]
+    st = wavg.init(xs[0])
+    for t, x in enumerate(xs):
+        st = wavg.update(st, x, jnp.asarray(t))
+    got = np.asarray(wavg.value(st))
+    ws = np.array([(a + t) ** 2 for t in range(10)])
+    want = (ws[:, None] * np.stack([np.asarray(x) for x in xs])).sum(0) / ws.sum()
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_stepsize_families():
+    eta = theory.paper_stepsize(gamma=2.0, lam=0.5, a=10.0)
+    np.testing.assert_allclose(float(eta(jnp.asarray(0))), 0.4, rtol=1e-6)
+    eta_th = theory.theorem_stepsize(mu=2.0, a=4.0)
+    np.testing.assert_allclose(float(eta_th(jnp.asarray(0))), 1.0, rtol=1e-6)
+    eta_b = theory.bottou_stepsize(0.5, 0.1)
+    np.testing.assert_allclose(float(eta_b(jnp.asarray(0))), 0.5, rtol=1e-6)
+    # decreasing
+    for sched in (eta, eta_th, eta_b):
+        v = [float(sched(jnp.asarray(t))) for t in range(5)]
+        assert all(v[i] > v[i + 1] for i in range(4))
+
+
+def test_shifts():
+    assert theory.theoretical_shift(100, 1, alpha=5.0) == 700.0
+    assert theory.practical_shift(100, 10) == 10.0
+
+
+def test_theorem_bound_decreases_in_T():
+    b = [
+        theory.theorem_bound(T, d=100, k=1, mu=0.01, L=1.0, G2=1.0,
+                             x0_dist2=1.0)
+        for T in (10_000, 100_000, 1_000_000)
+    ]
+    assert b[0] > b[1] > b[2] > 0
+
+
+def test_theorem_bound_rate_is_1_over_T_asymptotically():
+    """For large T the first term O(G^2/(mu T)) dominates: doubling T must
+    roughly halve the bound."""
+    kw = dict(d=100, k=1, mu=0.1, L=1.0, G2=1.0, x0_dist2=1.0)
+    # with d/k = 100 and kappa = 10 the O(1/T^2) term needs T >> d/k * k^.5
+    # times its large constant; by T ~ 1e10 the 1/T term clearly dominates
+    b1 = theory.theorem_bound(10**10, **kw)
+    b2 = theory.theorem_bound(2 * 10**10, **kw)
+    assert 0.45 < b2 / b1 < 0.55
