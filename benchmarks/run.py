@@ -18,7 +18,13 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import sys
 import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 import numpy as np
 
@@ -177,33 +183,77 @@ def table_comm(full: bool = False):
 
 def kernel_topk(full: bool = False):
     """Wall-time of the Pallas kernels (interpret mode on CPU — not a TPU
-    perf number; correctness-path throughput + derived contraction)."""
+    perf number; correctness-path throughput + derived contraction), plus
+    the loop-vs-single-pass comparison tracked in BENCH_topk.json at the
+    repo root."""
     import jax
     import jax.numpy as jnp
 
-    from repro.kernels import fused_memsgd_update, row_topk
+    from repro.kernels import densify_rows_ref, fused_memsgd_update, row_topk
+    from repro.kernels.ref import row_topk_ref
 
-    R, C, k = (256, 4096, 16) if full else (64, 1024, 8)
+    R, C, k = (256, 8192, 64) if full else (64, 4096, 64)
     x = jax.random.normal(jax.random.PRNGKey(0), (R, C))
     m = jax.random.normal(jax.random.PRNGKey(1), (R, C))
-    v, i = row_topk(x, k)  # warmup/compile
-    t0 = time.time()
-    n = 10
-    for _ in range(n):
-        v, i = row_topk(x, k)
-    jax.block_until_ready(v)
-    us1 = (time.time() - t0) / n * 1e6
-    nm, vv, ii = fused_memsgd_update(m, x, 0.1, k)
-    t0 = time.time()
-    for _ in range(n):
-        nm, vv, ii = fused_memsgd_update(m, x, 0.1, k)
-    jax.block_until_ready(nm)
-    us2 = (time.time() - t0) / n * 1e6
-    dense = jnp.zeros_like(x).at[jnp.arange(R)[:, None], i].set(v)
+
+    def bench(fn, n=10):
+        jax.block_until_ready(fn())  # warmup/compile
+        t0 = time.time()
+        for _ in range(n):
+            out = fn()
+        jax.block_until_ready(out)
+        return (time.time() - t0) / n * 1e6
+
+    us_loop = bench(lambda: row_topk(x, k, method="loop"))
+    us_single = bench(lambda: row_topk(x, k, method="threshold"))
+    v_l, i_l = row_topk(x, k, method="loop")
+    v_s, i_s = row_topk(x, k, method="threshold")
+    v_r, i_r = row_topk_ref(x, k)
+    bitwise = (
+        np.array_equal(np.asarray(v_l), np.asarray(v_r))
+        and np.array_equal(np.asarray(i_l), np.asarray(i_r))
+        and np.array_equal(np.asarray(v_s), np.asarray(v_r))
+        and np.array_equal(np.asarray(i_s), np.asarray(i_r))
+    )
+    speedup = us_loop / us_single
+    us_fused_loop = bench(
+        lambda: fused_memsgd_update(m, x, 0.1, k, method="loop"))
+    us_fused_single = bench(
+        lambda: fused_memsgd_update(m, x, 0.1, k, method="threshold"))
+    dense = densify_rows_ref(x, v_s, i_s)
     resid = float(jnp.sum((x - dense) ** 2) / jnp.sum(x**2))
-    _emit("kernel_row_topk", us1, f"residual_frac={resid:.4f}")
-    _emit("kernel_fused_memsgd", us2, f"k/C={k/C:.4f}")
-    return {"topk_us": us1, "fused_us": us2}
+    _emit("kernel_row_topk_loop", us_loop, f"k={k};C={C}")
+    _emit("kernel_row_topk_singlepass", us_single,
+          f"speedup_vs_loop={speedup:.2f};bitwise_equal={bitwise};"
+          f"residual_frac={resid:.4f}")
+    _emit("kernel_fused_loop", us_fused_loop, f"k/C={k/C:.4f}")
+    _emit("kernel_fused_singlepass", us_fused_single,
+          f"speedup_vs_loop={us_fused_loop/us_fused_single:.2f}")
+
+    # bucketed engine: dispatches per step for a many-leaf architecture
+    from repro.configs import get_smoke_config
+    from repro.core import buckets as bk
+    from repro.models import build_model
+
+    shapes = build_model(get_smoke_config("rwkv6-3b")).param_shapes()
+    plan = bk.make_plan(shapes)
+    n_leaves = len(jax.tree.leaves(shapes))
+    _emit("bucketed_dispatch", 0.0,
+          f"leaves={n_leaves};buckets={plan.n_dispatch}")
+
+    payload = {
+        "shape": [R, C], "k": k,
+        "loop_us": us_loop, "singlepass_us": us_single,
+        "speedup": speedup, "bitwise_equal": bool(bitwise),
+        "fused_loop_us": us_fused_loop,
+        "fused_singlepass_us": us_fused_single,
+        "bucketed": {"leaves": n_leaves, "buckets": plan.n_dispatch},
+    }
+    _save("kernel_topk", payload)
+    with open(os.path.join(_ROOT, "BENCH_topk.json"), "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    assert bitwise, "single-pass kernel diverged from the oracle"
+    return payload
 
 
 def remark23_ultra(full: bool = False):
@@ -251,12 +301,21 @@ BENCHES = {
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("names", nargs="*", choices=[[], *BENCHES],
+                    help="benchmark names (default: all)")
     ap.add_argument("--full", action="store_true",
                     help="paper-scale datasets (slow)")
     ap.add_argument("--only", default=None,
-                    help="comma-separated benchmark names")
+                    help="comma-separated benchmark names (same as the "
+                         "positional form)")
     args = ap.parse_args()
-    names = args.only.split(",") if args.only else list(BENCHES)
+    names = list(args.names)
+    if args.only:
+        names += args.only.split(",")
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:
+        ap.error(f"unknown benchmark(s) {unknown}; options: {sorted(BENCHES)}")
+    names = names or list(BENCHES)
     print("name,us_per_call,derived")
     for name in names:
         BENCHES[name](full=args.full)

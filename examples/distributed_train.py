@@ -38,7 +38,7 @@ if args.devices > 1:
 sys.path.insert(0, "src")
 
 import jax  # noqa: E402  (after XLA_FLAGS)
-from jax.sharding import AxisType  # noqa: E402
+from repro.utils.compat import make_mesh  # noqa: E402
 
 from repro.checkpoint import Checkpointer  # noqa: E402
 from repro.configs import get_smoke_config  # noqa: E402
@@ -51,10 +51,12 @@ from repro.models import build_model  # noqa: E402
 
 
 def main():
+    # NB: on jax < 0.5 the legacy shard_map partial-auto mode cannot
+    # partition a sharded model axis (XLA IsManualSubgroup crash) — use
+    # --model 1 there (see tests/test_distributed.py::legacy_partial_auto).
     n_data = args.data or max(1, args.devices // 2)
     n_model = args.model or (args.devices // n_data)
-    mesh = jax.make_mesh((n_data, n_model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    mesh = make_mesh((n_data, n_model), ("data", "model"))
     print(f"mesh: data={n_data} model={n_model}")
 
     # ~100M params: scale the qwen3 smoke family up

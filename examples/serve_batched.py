@@ -13,7 +13,7 @@ sys.path.insert(0, "src")
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
-from jax.sharding import AxisType  # noqa: E402
+from repro.utils.compat import make_mesh  # noqa: E402
 
 from repro.configs import get_smoke_config  # noqa: E402
 from repro.launch.serve import decode_loop, make_serve_step  # noqa: E402
@@ -26,8 +26,7 @@ def cache_bytes(cache) -> int:
 
 
 def main():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    mesh = make_mesh((1, 1), ("data", "model"))
     B, prompt_len, gen = 4, 8, 16
     max_len = 64
     for arch in ("qwen3-4b", "rwkv6-3b", "recurrentgemma-9b"):

@@ -5,6 +5,7 @@ Public API:
 * ``repro.core.compression`` — k-contraction operators (Def. 2.1/2.2).
 * ``repro.core.memory``      — error-feedback memory primitive.
 * ``repro.core.memsgd``      — Algorithm 1 as a GradientTransformation.
+* ``repro.core.buckets``     — flat-buffer engine (pytree -> few buckets).
 * ``repro.core.distributed`` — PARALLEL-MEM-SGD sparse all-gather sync.
 * ``repro.core.theory``      — Theorem 2.4 stepsizes / averaging / bounds.
 * ``repro.core.encoding``    — communication bit accounting.
@@ -21,12 +22,27 @@ from repro.core.compression import (
 from repro.core.memory import init_memory, memory_step, tree_memory_step
 from repro.core.memsgd import (
     memsgd,
+    memsgd_bucketed,
     memsgd_flat,
     MemSGDState,
     leaf_compressor_from_ratio,
     constant_eta,
 )
-from repro.core.distributed import SyncConfig, sparse_sync_gradients, message_bytes
+from repro.core.buckets import (
+    BucketPlan,
+    bucket_memory_step,
+    init_bucket_memory,
+    make_plan,
+    pack,
+    unpack,
+)
+from repro.core.distributed import (
+    SyncConfig,
+    bucketed_message_bytes,
+    bucketed_sync_gradients,
+    message_bytes,
+    sparse_sync_gradients,
+)
 
 __all__ = [
     "Compressor",
@@ -40,11 +56,20 @@ __all__ = [
     "memory_step",
     "tree_memory_step",
     "memsgd",
+    "memsgd_bucketed",
     "memsgd_flat",
     "MemSGDState",
     "leaf_compressor_from_ratio",
     "constant_eta",
+    "BucketPlan",
+    "bucket_memory_step",
+    "init_bucket_memory",
+    "make_plan",
+    "pack",
+    "unpack",
     "SyncConfig",
-    "sparse_sync_gradients",
+    "bucketed_message_bytes",
+    "bucketed_sync_gradients",
     "message_bytes",
+    "sparse_sync_gradients",
 ]

@@ -134,9 +134,14 @@ def rand_k(k: int) -> Compressor:
 def blockwise_top_k(k_per_block: int, block: int = 1024) -> Compressor:
     """Exact top-k_b within each contiguous block of ``block`` entries.
 
-    The Pallas kernel in ``repro.kernels.topk_select`` implements exactly
-    this operator; ``repro.kernels.ref`` is the oracle and this function is
-    the framework-level (pure jnp) form used on CPU and in tests.
+    The Pallas kernels in ``repro.kernels.topk_select`` implement exactly
+    this operator (the k-argmax loop and the single-pass threshold select
+    are bitwise-identical); ``repro.kernels.ref`` is the oracle and this
+    function is the framework-level (pure jnp) form used on CPU and in
+    tests. It is also the operator the bucketed flat-buffer engine
+    (``repro.core.buckets``) applies per bucket: per-row top-k over a
+    (rows, cols) bucket == blockwise_top_k(k, cols) over the concatenated
+    leaves, which is how Theorem 2.4 carries over to the bucketed path.
 
     Contraction: for each block b of size B, top-k_b captures at least the
     mass of a uniform random k_b-subset, whose expected residual is

@@ -47,6 +47,8 @@ from typing import Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.utils import compat
+
 Array = jax.Array
 
 
@@ -85,8 +87,17 @@ class SyncConfig:
     #  * "argmax_onehot": k iterations of masked row-argmax + one-hot
     #    einsum densify — every op partitions cleanly; costs an extra
     #    O(k * size) elementwise flops (negligible for k <= 64).
+    #  * "threshold_onehot": single-pass bisection threshold select
+    #    (O(32*C), k-independent — repro.kernels.topk_select) + one-hot
+    #    densify. Partitions cleanly like argmax_onehot but with no k
+    #    limit; tiny k (<= LOOP_MAX_K) falls back to the argmax loop.
     selection: str = "argmax_onehot"
     argmax_k_limit: int = 64  # fall back to top_k beyond this
+    # Bucketed flat-buffer engine (repro.core.buckets): pack the pytree
+    # into a few dtype-homogeneous (R, bucket_cols) buffers so the sync
+    # runs over <= ~4 big tensors instead of one dispatch per leaf.
+    bucketed: bool = False
+    bucket_cols: int = 1024
 
     def k_for(self, row_len: int) -> int:
         k = max(self.k_min, int(round(self.ratio * row_len)))
@@ -105,7 +116,7 @@ class SyncConfig:
 def _axis_size(axis_names: Sequence[str]) -> int:
     n = 1
     for a in axis_names:
-        n = n * jax.lax.axis_size(a)
+        n = n * compat.axis_size(a)
     return n
 
 
@@ -147,6 +158,22 @@ def _row_topk_argmax(u: Array, k: int, constrain=lambda x: x
     return vals, idxs
 
 
+def _row_topk_threshold(u: Array, k: int, constrain=lambda x: x
+                        ) -> Tuple[Array, Array]:
+    """Partition-safe single-pass per-row top-k: exact bit-bisection
+    threshold (O(32*C) compare+count sweeps, k-independent — vs the
+    argmax loop's O(k*C) dependent passes) + binary-search compaction
+    (gathers along the unsharded row axis only; no sort, no scatter, so
+    GSPMD keeps the batch sharding). Output contract identical to
+    ``_row_topk_argmax`` / the Pallas kernels: decreasing |.|, ties to
+    the lowest index."""
+    from repro.kernels.topk_select import _threshold_select
+
+    iota = jax.lax.broadcasted_iota(jnp.int32, u.shape, u.ndim - 1)
+    vals, idx = _threshold_select(u, iota, None, k)
+    return constrain(vals), constrain(idx.astype(jnp.int32))
+
+
 def _row_densify_onehot(shape: tuple, vals: Array, idx: Array, dtype,
                         constrain=lambda x: x) -> Array:
     """Partition-safe densify: one-hot einsum instead of scatter (XLA's
@@ -176,6 +203,24 @@ def _row_scatter(shape: tuple, vals: Array, idx: Array, dtype,
     axis, batched over leading dims (sharding-preserving)."""
     out = jnp.zeros(shape, dtype)
     return constrain(out.at[(*_batch_iotas(shape), idx)].add(vals))
+
+
+def _pick_selection(cfg: "SyncConfig", k_row: int):
+    """(topk, densify) implementations for one leaf/bucket (see the
+    SyncConfig.selection comment for the trade-offs)."""
+    from repro.kernels.topk_select import LOOP_MAX_K
+
+    if cfg.selection not in (
+        "topk_scatter", "argmax_onehot", "threshold_onehot"
+    ):
+        raise ValueError(f"unknown SyncConfig.selection {cfg.selection!r}")
+    if cfg.selection == "threshold_onehot":
+        if k_row <= LOOP_MAX_K:
+            return _row_topk_argmax, _row_densify_onehot
+        return _row_topk_threshold, _row_densify_onehot
+    if cfg.selection == "argmax_onehot" and k_row <= cfg.argmax_k_limit:
+        return _row_topk_argmax, _row_densify_onehot
+    return _row_topk, _row_scatter
 
 
 def _gather_pairs(vals, idx, axes):
@@ -219,7 +264,7 @@ def _leaf_hierarchical_sync(u, k_row, k_pod, data_axes, pod_axis, value_dtype,
     pod_sel = densify(u.shape, pvals, pidx, value_dtype, constrain)
     residual = pod_mean - pod_sel  # kept in memory (identical pod-wide)
     av, ai = _gather_pairs(pvals, pidx, (pod_axis,))
-    n_pods = jax.lax.axis_size(pod_axis)
+    n_pods = compat.axis_size(pod_axis)
     update = (densify(u.shape, av, ai, value_dtype, constrain)
               / n_pods).astype(u.dtype)
     itemsize = jnp.dtype(value_dtype).itemsize
@@ -292,10 +337,7 @@ def sparse_sync_gradients(
             else:
                 constrain = lambda x: x
         C = u.shape[-1]
-        use_argmax = (cfg.selection == "argmax_onehot"
-                      and cfg.k_for(C) <= cfg.argmax_k_limit)
-        topk = _row_topk_argmax if use_argmax else _row_topk
-        densify = _row_densify_onehot if use_argmax else _row_scatter
+        topk, densify = _pick_selection(cfg, cfg.k_for(C))
         if cfg.strategy == "hierarchical" and cfg.pod_axis is not None:
             upd, own, residual, nbytes = _leaf_hierarchical_sync(
                 u, cfg.k_for(C), cfg.pod_k_for(C), tuple(cfg.data_axes),
@@ -329,6 +371,79 @@ def sparse_sync_gradients(
         mems.append(m_)
         total_bytes += int(b_)
     return treedef.unflatten(ups), treedef.unflatten(mems), total_bytes
+
+
+def bucketed_sync_gradients(
+    cfg: SyncConfig,
+    plan,
+    memory_bufs,
+    grad_tree,
+    eta: Array,
+):
+    """PARALLEL-MEM-SGD gradient exchange over flat buckets.
+
+    Same contract as ``sparse_sync_gradients`` but the pytree is packed
+    into the plan's few big (rows, cols) buffers first (see
+    ``repro.core.buckets``): per-worker memory lives in bucket space
+    (``memory_bufs``: one f32 buffer per bucket) and the all-gather runs
+    once per bucket instead of once per leaf. Rows never cross leaves'
+    dtype groups; note that packing reshapes away any model-axis sharding,
+    so this path targets data-parallel (or small-model-axis) meshes — the
+    per-leaf path remains the choice for heavily tensor-parallel params.
+
+    Returns (update_tree [f32 leaves, SUBTRACT from params],
+    new_memory_bufs, bytes_per_worker_per_step).
+    """
+    from repro.core import buckets as bk
+
+    value_dtype = jnp.dtype(cfg.value_dtype)
+    all_axes = tuple(cfg.data_axes) + (
+        (cfg.pod_axis,) if cfg.pod_axis else ()
+    )
+    g_bufs = bk.pack(plan, grad_tree, dtype=jnp.float32)
+    ups, mems, total_bytes = [], [], 0
+    for spec, m, g in zip(plan.buckets, memory_bufs, g_bufs):
+        u = m + eta * g
+        if cfg.strategy == "dense" or spec.kind == "dense":
+            upd, own, nbytes = _leaf_dense_sync(u, all_axes)
+            ups.append(upd)
+            mems.append(u - own)
+            total_bytes += int(nbytes)
+            continue
+        k_row = cfg.k_for(spec.cols)
+        topk, densify = _pick_selection(cfg, k_row)
+        if cfg.strategy == "hierarchical" and cfg.pod_axis is not None:
+            upd, own, residual, nbytes = _leaf_hierarchical_sync(
+                u, k_row, cfg.pod_k_for(spec.cols), tuple(cfg.data_axes),
+                cfg.pod_axis, value_dtype, topk=topk, densify=densify,
+            )
+            mems.append((u - own) + residual)
+        elif cfg.strategy in ("sparse_allgather", "hierarchical"):
+            upd, own, nbytes = _leaf_sparse_sync(
+                u, k_row, all_axes, value_dtype, topk=topk, densify=densify,
+            )
+            mems.append(u - own)
+        else:
+            raise ValueError(f"unknown sync strategy {cfg.strategy!r}")
+        ups.append(upd)
+        total_bytes += int(nbytes)
+    return bk.unpack(plan, ups), tuple(mems), total_bytes
+
+
+def bucketed_message_bytes(cfg: SyncConfig, plan) -> int:
+    """Static per-worker per-step transmitted bytes for a BucketPlan."""
+    itemsize = jnp.dtype(cfg.value_dtype).itemsize
+    total = 0
+    for spec in plan.buckets:
+        if cfg.strategy == "dense" or spec.kind == "dense":
+            total += spec.rows * spec.cols * 4
+        elif cfg.strategy == "hierarchical" and cfg.pod_axis is not None:
+            total += spec.rows * (
+                cfg.k_for(spec.cols) + cfg.pod_k_for(spec.cols)
+            ) * (itemsize + 4)
+        else:
+            total += spec.rows * cfg.k_for(spec.cols) * (itemsize + 4)
+    return total
 
 
 def message_bytes(cfg: SyncConfig, params, col_axes=None) -> int:

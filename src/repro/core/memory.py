@@ -11,6 +11,13 @@ This module provides the per-tensor primitive plus pytree-level helpers.
 The per-worker replication used by PARALLEL-MEM-SGD / the distributed
 runtime simply adds a leading worker axis to every leaf (handled in
 ``repro.core.distributed``).
+
+``tree_memory_step`` dispatches one compressor per leaf — fine for a
+handful of tensors, but models with hundreds of small leaves should use
+the bucket-space memory in ``repro.core.buckets`` (one buffer per dtype
+bucket, <= ~4 fused dispatches per step) via ``memsgd_bucketed`` /
+``bucketed_sync_gradients``. The semantics here are the reference the
+bucketed engine is tested against.
 """
 from __future__ import annotations
 

@@ -5,10 +5,16 @@ The transformation receives RAW gradients and returns the ADDITIVE update
 time, per the paper — not applied downstream), so Mem-SGD must be the final
 element of an optimizer chain.
 
-Two constructors:
+Three constructors:
 
 * ``memsgd(compressor, eta_schedule)`` — sequential Algorithm 1 on a
   parameter pytree with per-leaf compression.
+* ``memsgd_bucketed(...)`` — Algorithm 1 on the bucketed flat-buffer
+  engine (``repro.core.buckets``): the pytree is packed into <= ~4 big
+  (rows, cols) buffers, the memory lives in bucket space, and each step
+  runs one fused Pallas dispatch per bucket instead of one compressor per
+  leaf. Row-block top-k over a bucket is ``blockwise_top_k(k, cols)`` over
+  the concatenated parameters — a k-contraction, so Theorem 2.4 holds.
 * ``memsgd_flat(...)`` — operates on a single flat vector (used for the
   paper's logistic-regression reproduction where x ∈ R^d).
 
@@ -90,6 +96,57 @@ def memsgd(
         )
         updates = jax.tree.map(lambda a: -a, applied)
         return updates, MemSGDState(count=state.count + 1, memory=new_mem, rng=rng)
+
+    return GradientTransformation(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Bucketed variant (flat-buffer engine; repro.core.buckets)
+# ---------------------------------------------------------------------------
+
+
+def memsgd_bucketed(
+    ratio: float,
+    eta_schedule: Schedule,
+    *,
+    cols: Optional[int] = None,
+    dense_below: Optional[int] = None,
+    k_min: int = 1,
+    method: str = "auto",
+    seed: int = 0,
+) -> GradientTransformation:
+    """Mem-SGD over dtype-homogeneous flat buckets (<= ~4 dispatches/step).
+
+    ``ratio`` sets the per-row k = max(k_min, round(ratio * cols)); small
+    leaves (< dense_below) ride in a dense bucket, uncompressed.
+    """
+    from repro.core import buckets as bk
+
+    cols = bk.DEFAULT_BUCKET_COLS if cols is None else cols
+    dense_below = bk.DEFAULT_DENSE_BELOW if dense_below is None else dense_below
+
+    def k_for(c: int) -> int:
+        return max(k_min, min(c, int(round(ratio * c))))
+
+    def plan_of(tree) -> "bk.BucketPlan":
+        return bk.make_plan(tree, cols=cols, dense_below=dense_below)
+
+    def init(params):
+        return MemSGDState(
+            count=jnp.zeros((), jnp.int32),
+            memory=bk.init_bucket_memory(plan_of(params)),
+            rng=jax.random.PRNGKey(seed),
+        )
+
+    def update(grads, state: MemSGDState, params=None, **_):
+        eta = eta_schedule(state.count)
+        applied, new_mem, _ = bk.bucket_memory_step(
+            plan_of(grads), state.memory, grads, eta, k_for, method=method
+        )
+        updates = jax.tree.map(lambda a: -a, applied)
+        return updates, MemSGDState(
+            count=state.count + 1, memory=new_mem, rng=state.rng
+        )
 
     return GradientTransformation(init, update)
 

@@ -10,8 +10,13 @@ memory roofline term of the sync stage.
 
 Per grid step (one (ROW_BLOCK, C) tile resident in VMEM):
     u     = m + eta * g           # elementwise, VPU
-    v,i   = row_topk(u, k)        # k masked argmax iterations
+    v,i   = row_topk(u, k)        # loop or single-pass threshold select
     m'    = u zeroed at selected  # elementwise scatter within the tile
+
+``selection`` picks the in-tile selection algorithm: "loop" (k masked
+argmax iterations, cheap for tiny k) or "threshold" (single-pass bisection
+select, O(32*C) independent of k — see ``repro.kernels.topk_select``).
+Both emit bitwise-identical outputs.
 
 eta arrives via scalar prefetch (SMEM) so the same compiled kernel serves
 every step of a stepsize schedule.
@@ -19,23 +24,32 @@ every step of a stepsize schedule.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.topk_select import DEFAULT_ROW_BLOCK, _topk_loop
+from repro.kernels.topk_select import (
+    DEFAULT_ROW_BLOCK,
+    _auto_interpret,
+    _threshold_topk_tile,
+    _topk_loop,
+)
 
 Array = jax.Array
 
 
-def _fused_kernel(eta_ref, m_ref, g_ref, newm_ref, vals_ref, idx_ref, *, k: int):
+def _fused_kernel(eta_ref, m_ref, g_ref, newm_ref, vals_ref, idx_ref, *,
+                  k: int, selection: str):
     eta = eta_ref[0, 0]
     m = m_ref[...]
     g = g_ref[...]
     u = m + eta.astype(m.dtype) * g.astype(m.dtype)
-    vals, idxs = _topk_loop(u, k)
+    if selection == "threshold":
+        vals, idxs = _threshold_topk_tile(u, k)
+    else:
+        vals, idxs = _topk_loop(u, k)
     Rb = u.shape[0]
     rows = jax.lax.broadcasted_iota(jnp.int32, (Rb, k), 0)
     new_m = u.at[rows, idxs].set(0)
@@ -46,15 +60,17 @@ def _fused_kernel(eta_ref, m_ref, g_ref, newm_ref, vals_ref, idx_ref, *, k: int)
 
 def fused_memsgd_pallas(
     m: Array, g: Array, eta, k: int, *,
-    row_block: int = DEFAULT_ROW_BLOCK, interpret: bool = True,
+    row_block: int = DEFAULT_ROW_BLOCK, interpret: Optional[bool] = None,
+    selection: str = "loop",
 ) -> Tuple[Array, Array, Array]:
     """(m, g): (R, C); eta scalar. Returns (new_m (R,C), vals (R,k),
     idx (R,k))."""
     R, C = m.shape
     assert m.shape == g.shape
     assert R % row_block == 0, (R, row_block)
+    assert k <= C, (k, C)
     grid = (R // row_block,)
-    kernel = functools.partial(_fused_kernel, k=k)
+    kernel = functools.partial(_fused_kernel, k=k, selection=selection)
     eta_arr = jnp.asarray(eta, jnp.float32).reshape(1, 1)
     return pl.pallas_call(
         kernel,
@@ -74,5 +90,5 @@ def fused_memsgd_pallas(
             jax.ShapeDtypeStruct((R, k), m.dtype),
             jax.ShapeDtypeStruct((R, k), jnp.int32),
         ],
-        interpret=interpret,
+        interpret=_auto_interpret(interpret),
     )(eta_arr, m, g)

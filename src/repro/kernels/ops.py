@@ -2,8 +2,18 @@
 
 On CPU (this container) the kernels execute in interpret mode — the kernel
 body runs as Python/jnp over the same BlockSpec tiling, which is what the
-tests validate against ``ref.py``. On a real TPU set ``interpret=False``
-(the default flips automatically based on the backend).
+tests validate against ``ref.py``. On a real TPU ``interpret=None``
+auto-detects the backend and compiles for real.
+
+``method`` picks the selection algorithm:
+
+* ``"loop"``      — k masked-argmax iterations, whole row in one VMEM tile.
+* ``"threshold"`` — single-pass bisection select, column-tiled grid so C
+  is not limited by VMEM (see ``topk_select.row_topk_tiled_pallas``).
+* ``"auto"``      — threshold for k > LOOP_MAX_K, loop otherwise (tiny k:
+  the k dependent passes are cheaper than the fixed 32 bisection sweeps).
+
+All methods emit bitwise-identical (value, index) outputs.
 """
 from __future__ import annotations
 
@@ -15,15 +25,23 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.fused_memsgd import fused_memsgd_pallas
-from repro.kernels.topk_select import DEFAULT_ROW_BLOCK, row_topk_pallas
+from repro.kernels.topk_select import (
+    DEFAULT_COL_BLOCK,
+    DEFAULT_ROW_BLOCK,
+    LOOP_MAX_K,
+    row_topk_pallas,
+    row_topk_tiled_pallas,
+)
 
 Array = jax.Array
 
 
-def _auto_interpret(interpret: Optional[bool]) -> bool:
-    if interpret is None:
-        return jax.default_backend() != "tpu"
-    return interpret
+def _resolve_method(method: str, k: int) -> str:
+    if method == "auto":
+        return "threshold" if k > LOOP_MAX_K else "loop"
+    if method not in ("loop", "threshold"):
+        raise ValueError(f"unknown top-k method {method!r}")
+    return method
 
 
 def _pad_rows(x: Array, row_block: int) -> Tuple[Array, int]:
@@ -34,23 +52,35 @@ def _pad_rows(x: Array, row_block: int) -> Tuple[Array, int]:
     return x, pad
 
 
-@functools.partial(jax.jit, static_argnames=("k", "row_block", "interpret"))
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "row_block", "col_block", "interpret", "method"),
+)
 def row_topk(x: Array, k: int, row_block: int = DEFAULT_ROW_BLOCK,
-             interpret: Optional[bool] = None) -> Tuple[Array, Array]:
+             interpret: Optional[bool] = None, method: str = "auto",
+             col_block: int = DEFAULT_COL_BLOCK) -> Tuple[Array, Array]:
     """Per-row top-|.|-k of x (R, C) -> (vals (R,k), idx (R,k))."""
     xp, pad = _pad_rows(x, row_block)
-    vals, idx = row_topk_pallas(
-        xp, k, row_block=row_block, interpret=_auto_interpret(interpret)
-    )
+    if _resolve_method(method, k) == "threshold":
+        vals, idx = row_topk_tiled_pallas(
+            xp, k, row_block=row_block, col_block=col_block,
+            interpret=interpret,
+        )
+    else:
+        vals, idx = row_topk_pallas(
+            xp, k, row_block=row_block, interpret=interpret,
+        )
     if pad:
         vals, idx = vals[: x.shape[0]], idx[: x.shape[0]]
     return vals, idx
 
 
-@functools.partial(jax.jit, static_argnames=("k", "row_block", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("k", "row_block", "interpret", "method")
+)
 def fused_memsgd_update(
     m: Array, g: Array, eta, k: int, row_block: int = DEFAULT_ROW_BLOCK,
-    interpret: Optional[bool] = None,
+    interpret: Optional[bool] = None, method: str = "auto",
 ) -> Tuple[Array, Array, Array]:
     """Fused u = m + eta*g -> top-k -> residual memory.
 
@@ -59,8 +89,8 @@ def fused_memsgd_update(
     mp, pad = _pad_rows(m, row_block)
     gp, _ = _pad_rows(g, row_block)
     new_m, vals, idx = fused_memsgd_pallas(
-        mp, gp, eta, k, row_block=row_block,
-        interpret=_auto_interpret(interpret),
+        mp, gp, eta, k, row_block=row_block, interpret=interpret,
+        selection=_resolve_method(method, k),
     )
     if pad:
         new_m = new_m[: m.shape[0]]

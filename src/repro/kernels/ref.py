@@ -52,6 +52,15 @@ def row_topk_ref(x: Array, k: int) -> Tuple[Array, Array]:
     return vals, idxs
 
 
+def densify_rows_ref(x_like: Array, vals: Array, idx: Array) -> Array:
+    """Scatter per-row (vals, idx) pairs back to a dense (R, C) array —
+    the inverse of ``row_topk_ref`` restricted to the selected support."""
+    R = x_like.shape[0]
+    return jnp.zeros_like(x_like).at[
+        jnp.arange(R)[:, None], idx
+    ].set(vals.astype(x_like.dtype))
+
+
 def fused_memsgd_ref(m: Array, g: Array, eta, k: int
                      ) -> Tuple[Array, Array, Array]:
     u = m + jnp.asarray(eta, m.dtype) * g.astype(m.dtype)

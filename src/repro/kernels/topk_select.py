@@ -1,28 +1,39 @@
-"""Pallas TPU kernel: per-row top-k selection (the compression hot-spot).
+"""Pallas TPU kernels: per-row top-k selection (the compression hot-spot).
 
-TPU adaptation of the GPU radix-select/sort used by CUDA top-k
-implementations: a radix sort does not map onto the VPU/MXU. Instead each
-grid step loads a (ROW_BLOCK, C) tile into VMEM and runs k iterations of a
-masked row-argmax — pure VPU work over data that stays resident in VMEM,
-one HBM read of the tile total. k is small (<= 64 per row in all sync
-configs), so the loop is short; the selected (value, index) pairs are the
-only outputs (k << C), which is precisely the communication object of
-Mem-SGD.
+Two selection algorithms share one output contract (top-|.|-k per row,
+emitted in decreasing-magnitude order, magnitude ties broken by LOWEST
+index — identical to ``repro.kernels.ref``):
 
-Grid/BlockSpec layout:
-  grid  = (R // ROW_BLOCK,)
-  x     : BlockSpec((ROW_BLOCK, C),  i -> (i, 0))   # VMEM tile
-  vals  : BlockSpec((ROW_BLOCK, k),  i -> (i, 0))
-  idx   : BlockSpec((ROW_BLOCK, k),  i -> (i, 0))
+* ``loop`` — k iterations of masked row-argmax on an in-VMEM tile. O(k*C)
+  VPU work with k sequential dependent passes; cheap for tiny k.
 
-C is the full row (the row is the selection domain); rows are the grid.
-For the framework's sync, rows are hardware-aligned slices that never
-cross a model shard (see repro.core.distributed docstring).
+* ``threshold`` (single-pass) — per-row bisection on the *bit patterns* of
+  the f32 magnitudes finds the exact k-th magnitude threshold in <= 32
+  compare+count sweeps (O(32*C), independent of k), then ONE masked-cumsum
+  compaction emits the (value, index) pairs and an O(k^2) rank pass puts
+  them in the contract order. Because the bisection runs over int32
+  bitcasts of the magnitudes (monotone for non-negative floats) the
+  threshold is exact — outputs are bitwise-equal to the loop kernel.
+
+The threshold kernel also comes in a COLUMN-TILED form with grid
+``(R // RB, C // CB)``: each (RB, CB) tile is merged into a running
+(RB, k) candidate buffer kept in the revisited output block (VMEM), so C
+no longer has to fit in a single VMEM tile and the whole selection remains
+a single pass over HBM. The merge invariant that makes tie-breaking exact:
+within the concatenated [candidates | tile] axis, entries of equal
+magnitude always appear in ascending-index order (candidates are kept
+sorted by (-|v|, index) and all candidate indices precede the tile's).
+
+Grid/BlockSpec layout (tiled form):
+  grid  = (R // RB, C_padded // CB)         # last dim innermost
+  x     : BlockSpec((RB, CB), (i, j) -> (i, j))
+  vals  : BlockSpec((RB, k),  (i, j) -> (i, 0))   # revisited accumulator
+  idx   : BlockSpec((RB, k),  (i, j) -> (i, 0))
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +42,29 @@ from jax.experimental import pallas as pl
 Array = jax.Array
 
 DEFAULT_ROW_BLOCK = 8
+# an (8, 4096) f32 tile is 128 KB — far under VMEM; wider tiles amortize
+# the per-merge fixed cost (bisection + rank sort) over more columns.
+DEFAULT_COL_BLOCK = 4096
+# columns appended by jnp.pad / sentinel candidate slots carry this index;
+# larger than any real column index so they lose every magnitude tie.
+_IDX_SENTINEL = 2**30  # python int: kernels must not capture traced consts
+# |x| bitcasts are >= 0; bisection over [-1, max_bits] converges in <= 32
+# halvings (the f32 magnitude bit range is < 2^31).
+_N_BISECT = 32
+# up to this k the k-pass argmax loop beats the fixed-cost threshold select
+LOOP_MAX_K = 8
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    """interpret=None -> interpret unless running on a real TPU backend."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+# ---------------------------------------------------------------------------
+# loop selection (fallback for tiny k)
+# ---------------------------------------------------------------------------
 
 
 def _topk_loop(x: Array, k: int) -> Tuple[Array, Array]:
@@ -55,22 +89,166 @@ def _topk_loop(x: Array, k: int) -> Tuple[Array, Array]:
     return vals, idxs
 
 
-def _topk_kernel(x_ref, vals_ref, idx_ref, *, k: int):
+# ---------------------------------------------------------------------------
+# threshold selection (single-pass) — shared math
+# ---------------------------------------------------------------------------
+
+
+def _mag_bits(v: Array, valid: Optional[Array] = None) -> Array:
+    """Monotone int32 ordering key for |v| (f32 bitcast); invalid -> -1."""
+    bits = jax.lax.bitcast_convert_type(
+        jnp.abs(v).astype(jnp.float32), jnp.int32
+    )
+    if valid is not None:
+        bits = jnp.where(valid, bits, jnp.int32(-1))
+    return bits
+
+
+def _kth_largest_bits(bits: Array, k: int) -> Array:
+    """Exact k-th largest of ``bits`` along the last axis via bisection.
+
+    Returns the largest t with count(bits >= t) >= k, shape (..., 1).
+    Requires at least k entries per row with bits > -1 when sentinels are
+    in play (guaranteed by the CB >= k / C >= k preconditions).
+    """
+    lo = jnp.full(bits.shape[:-1] + (1,), -1, jnp.int32)
+    hi = jnp.max(bits, axis=-1, keepdims=True)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = lo + (hi - lo + 1) // 2
+        cnt = jnp.sum((bits >= mid).astype(jnp.int32), axis=-1, keepdims=True)
+        ge = cnt >= k
+        return jnp.where(ge, mid, lo), jnp.where(ge, hi, mid - 1)
+
+    lo, hi = jax.lax.fori_loop(0, _N_BISECT, body, (lo, hi))
+    return lo
+
+
+def _select_mask(bits: Array, tau: Array, k: int) -> Array:
+    """Exactly-k per-row mask: all > tau, plus the first (k - #gt) ties in
+    axis order. Correct iff equal magnitudes appear in ascending-index
+    order along the axis (see module docstring)."""
+    gt = bits > tau
+    eq = bits == tau
+    n_gt = jnp.sum(gt.astype(jnp.int32), axis=-1, keepdims=True)
+    tie_rank = jnp.cumsum(eq.astype(jnp.int32), axis=-1) - 1
+    return gt | (eq & (tie_rank < (k - n_gt)))
+
+
+def _compact_selected(sel: Array, k: int) -> Array:
+    """Positions (along the last axis) of the k selected entries, in axis
+    order: a masked-cumsum compaction realised as a vectorized binary
+    search over the running count — slot s is the first n with
+    cumsum(sel)[n] == s+1. Gathers only (no scatter, no sort): scatters
+    serialize on CPU and replicate under GSPMD."""
+    N = sel.shape[-1]
+    cums = jnp.cumsum(sel.astype(jnp.int32), axis=-1)
+    targets = 1 + jax.lax.broadcasted_iota(
+        jnp.int32, sel.shape[:-1] + (k,), sel.ndim - 1
+    )
+    lo = jnp.zeros(targets.shape, jnp.int32)
+    hi = jnp.full(targets.shape, N - 1, jnp.int32)
+    n_steps = max(1, (N - 1).bit_length())
+    for _ in range(n_steps):  # static unroll: ceil(log2(N)) halvings
+        mid = (lo + hi) // 2
+        ge = jnp.take_along_axis(cums, mid, axis=-1) >= targets
+        lo = jnp.where(ge, lo, mid + 1)
+        hi = jnp.where(ge, mid, hi)
+    return lo
+
+
+def _order_pairs(cv: Array, ci: Array, cb: Array) -> Tuple[Array, Array]:
+    """Permute compacted (Rb, k) pairs into the contract's (-|v|, index)
+    order: O(k^2) rank + one-hot permutation (exact — each output sums
+    exactly one nonzero term, so even bf16 values pass through bitwise)."""
+    k = cv.shape[-1]
+    prec = (cb[..., None, :] > cb[..., :, None]) | (
+        (cb[..., None, :] == cb[..., :, None])
+        & (ci[..., None, :] < ci[..., :, None])
+    )
+    rank = jnp.sum(prec.astype(jnp.int32), axis=-1)  # (..., k) permutation
+    slots = jnp.arange(k, dtype=jnp.int32)
+    perm = (rank[..., None] == slots).astype(jnp.int32)  # (..., src, dst)
+    out_v = jnp.einsum(
+        "...sd,...s->...d", perm.astype(cv.dtype), cv
+    )
+    out_i = jnp.sum(perm * ci[..., None], axis=-2)
+    return out_v, out_i
+
+
+def _threshold_select(V: Array, I: Array, valid: Optional[Array], k: int
+                      ) -> Tuple[Array, Array]:
+    """Top-|.|-k of (V, I) pairs along the last axis, emitted sorted by
+    (-|v|, index). Entries of equal magnitude must appear in
+    ascending-index order along the axis."""
+    bits = _mag_bits(V, valid)
+    tau = _kth_largest_bits(bits, k)
+    sel = _select_mask(bits, tau, k)
+    n_sel = _compact_selected(sel, k)  # (..., k) positions, axis order
+    cv = jnp.take_along_axis(V, n_sel, axis=-1)
+    ci = jnp.take_along_axis(I, n_sel, axis=-1)
+    cb = jnp.take_along_axis(bits, n_sel, axis=-1)
+    return _order_pairs(cv, ci, cb)
+
+
+def _threshold_topk_tile(x: Array, k: int) -> Tuple[Array, Array]:
+    """Single-pass top-k of a resident (Rb, C) tile (C >= k)."""
+    Rb, C = x.shape
+    I = jax.lax.broadcasted_iota(jnp.int32, (Rb, C), 1)
+    return _threshold_select(x, I, None, k)
+
+
+# ---------------------------------------------------------------------------
+# kernels
+# ---------------------------------------------------------------------------
+
+
+def _topk_kernel(x_ref, vals_ref, idx_ref, *, k: int, selection: str):
     x = x_ref[...]
-    vals, idxs = _topk_loop(x, k)
+    if selection == "threshold":
+        vals, idxs = _threshold_topk_tile(x, k)
+    else:
+        vals, idxs = _topk_loop(x, k)
     vals_ref[...] = vals
     idx_ref[...] = idxs
 
 
+def _topk_tiled_kernel(x_ref, vals_ref, idx_ref, *, k: int, col_block: int):
+    """Merge one (RB, CB) tile into the (RB, k) candidate accumulator."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        vals_ref[...] = jnp.zeros_like(vals_ref)
+        idx_ref[...] = jnp.full(idx_ref.shape, _IDX_SENTINEL, jnp.int32)
+
+    x = x_ref[...]
+    Rb = x.shape[0]
+    tile_i = j * col_block + jax.lax.broadcasted_iota(
+        jnp.int32, x.shape, 1
+    )
+    cand_v, cand_i = vals_ref[...], idx_ref[...]
+    V = jnp.concatenate([cand_v, x], axis=1)
+    I = jnp.concatenate([cand_i, tile_i], axis=1)
+    valid = I < _IDX_SENTINEL  # sentinel candidate slots never compete
+    vals_ref[...], idx_ref[...] = _threshold_select(V, I, valid, k)
+
+
 def row_topk_pallas(
     x: Array, k: int, *, row_block: int = DEFAULT_ROW_BLOCK,
-    interpret: bool = True,
+    interpret: Optional[bool] = None, selection: str = "loop",
 ) -> Tuple[Array, Array]:
-    """Per-row top-|.|-k. x: (R, C) with R % row_block == 0."""
+    """Per-row top-|.|-k with the full row as one VMEM tile.
+
+    x: (R, C) with R % row_block == 0 and k <= C. ``selection`` in
+    {"loop", "threshold"}.
+    """
     R, C = x.shape
     assert R % row_block == 0, (R, row_block)
+    assert k <= C, (k, C)
     grid = (R // row_block,)
-    kernel = functools.partial(_topk_kernel, k=k)
+    kernel = functools.partial(_topk_kernel, k=k, selection=selection)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -83,5 +261,40 @@ def row_topk_pallas(
             jax.ShapeDtypeStruct((R, k), x.dtype),
             jax.ShapeDtypeStruct((R, k), jnp.int32),
         ],
-        interpret=interpret,
+        interpret=_auto_interpret(interpret),
+    )(x)
+
+
+def row_topk_tiled_pallas(
+    x: Array, k: int, *, row_block: int = DEFAULT_ROW_BLOCK,
+    col_block: int = DEFAULT_COL_BLOCK, interpret: Optional[bool] = None,
+) -> Tuple[Array, Array]:
+    """Single-pass column-tiled threshold top-k.
+
+    x: (R, C) with R % row_block == 0 and k <= C. C is padded up to a
+    multiple of the column block with zeros; padded columns carry indices
+    >= C and (with C >= k real entries available) are never selected.
+    """
+    R, C = x.shape
+    assert R % row_block == 0, (R, row_block)
+    assert k <= C, (k, C)
+    cb = max(k, min(col_block, C))  # merge needs >= k entries per tile
+    pad = (-C) % cb
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    grid = (R // row_block, (C + pad) // cb)
+    kernel = functools.partial(_topk_tiled_kernel, k=k, col_block=cb)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((row_block, cb), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((row_block, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((row_block, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, k), x.dtype),
+            jax.ShapeDtypeStruct((R, k), jnp.int32),
+        ],
+        interpret=_auto_interpret(interpret),
     )(x)

@@ -8,23 +8,19 @@ single real CPU device.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.utils.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 per pod (256 chips); 2x16x16 across two pods (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_debug_mesh(n_data: int = 4, n_model: int = 2):
     """Small mesh for multi-device CPU tests (requires forced host devices)."""
-    return jax.make_mesh(
-        (n_data, n_model), ("data", "model"),
-        axis_types=(AxisType.Auto, AxisType.Auto),
-    )
+    return make_mesh((n_data, n_model), ("data", "model"))
 
 
 def data_axes_of(mesh) -> tuple:

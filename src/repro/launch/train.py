@@ -30,9 +30,15 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.distributed import SyncConfig, sparse_sync_gradients
+from repro.core import buckets as bk
+from repro.core.distributed import (
+    SyncConfig,
+    bucketed_sync_gradients,
+    sparse_sync_gradients,
+)
 from repro.launch import sharding as shd
 from repro.optim import adam as adam_lib
+from repro.utils import compat
 
 Array = jax.Array
 
@@ -64,17 +70,38 @@ def _worker_count(mesh, data_axes) -> int:
     return n
 
 
+def _bucket_plan(tc: TrainConfig, pshapes):
+    """BucketPlan for the flat-buffer sync path (None when disabled)."""
+    if not tc.sync.bucketed:
+        return None
+    return bk.make_plan(
+        pshapes, cols=tc.sync.bucket_cols, dense_below=tc.sync.dense_below
+    )
+
+
 def init_train_state(model, mesh, tc: TrainConfig, rng=None, abstract=False):
-    """Returns (params, memory, opt_state, count) — concrete or abstract."""
+    """Returns (params, memory, opt_state, count) — concrete or abstract.
+
+    With ``tc.sync.bucketed`` the per-worker error-feedback memory is a
+    tuple of (W, rows, cols) bucket buffers instead of a param-shaped
+    pytree (see ``repro.core.buckets``).
+    """
     data_axes = (("pod",) if "pod" in mesh.axis_names else ()) + ("data",)
     W = _worker_count(mesh, data_axes)
     pshapes = model.param_shapes()
+    plan = _bucket_plan(tc, pshapes)
 
     def make():
         params = model.init(rng if rng is not None else jax.random.PRNGKey(0))
-        memory = jax.tree.map(
-            lambda p: jnp.zeros((W,) + p.shape, jnp.float32), params
-        )
+        if plan is not None:
+            memory = tuple(
+                jnp.zeros((W,) + spec.shape, jnp.float32)
+                for spec in plan.buckets
+            )
+        else:
+            memory = jax.tree.map(
+                lambda p: jnp.zeros((W,) + p.shape, jnp.float32), params
+            )
         if tc.optimizer == "memsgd_momentum":
             opt = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
         elif tc.optimizer == "adam_compressed":
@@ -97,8 +124,12 @@ def state_shardings(model, mesh, tc: TrainConfig):
     pshapes = model.param_shapes()
     pspecs = shd.drop_undivisible(shd.param_specs(pshapes), pshapes, mesh)
     worker = data_axes if len(data_axes) > 1 else data_axes[0]
-    mspecs = jax.tree.map(lambda s: P(worker, *s), pspecs,
-                          is_leaf=lambda x: isinstance(x, P))
+    plan = _bucket_plan(tc, pshapes)
+    if plan is not None:
+        mspecs = tuple(P(worker) for _ in plan.buckets)
+    else:
+        mspecs = jax.tree.map(lambda s: P(worker, *s), pspecs,
+                              is_leaf=lambda x: isinstance(x, P))
     if tc.optimizer == "memsgd_momentum":
         ospecs = pspecs
     elif tc.optimizer == "adam_compressed":
@@ -128,6 +159,7 @@ def make_train_step(model, mesh, tc: TrainConfig):
     pshapes = model.param_shapes()
     pspecs = shd.drop_undivisible(shd.param_specs(pshapes), pshapes, mesh)
     col_axes = shd.sync_col_axes(pshapes)
+    plan = _bucket_plan(tc, pshapes)
     eta_fn = _eta_schedule(tc)
     sync_cfg = dataclasses.replace(
         tc.sync,
@@ -203,10 +235,15 @@ def make_train_step(model, mesh, tc: TrainConfig):
             eta = eta_fn(count)
         else:  # adam_compressed: memory accumulates raw gradients
             eta = jnp.asarray(1.0, jnp.float32)
-        update, new_mem, _ = sparse_sync_gradients(
-            sync_cfg, mem_local, grads, eta, col_axes,
-            specs=pspecs, mesh=mesh,
-        )
+        if plan is not None:
+            update, new_mem, _ = bucketed_sync_gradients(
+                sync_cfg, plan, mem_local, grads, eta
+            )
+        else:
+            update, new_mem, _ = sparse_sync_gradients(
+                sync_cfg, mem_local, grads, eta, col_axes,
+                specs=pspecs, mesh=mesh,
+            )
         if tc.optimizer in ("memsgd", "dense"):
             new_params = jax.tree.map(
                 lambda p, u: (p - u.astype(p.dtype)), params, update
@@ -255,8 +292,11 @@ def make_train_step(model, mesh, tc: TrainConfig):
 
     pspec_P0 = jax.tree.map(lambda s: P(), pspecs,
                             is_leaf=lambda x: isinstance(x, P))
-    mem_manual = jax.tree.map(lambda s: P(worker), pspecs,
-                              is_leaf=lambda x: isinstance(x, P))
+    if plan is not None:
+        mem_manual = tuple(P(worker) for _ in plan.buckets)
+    else:
+        mem_manual = jax.tree.map(lambda s: P(worker), pspecs,
+                                  is_leaf=lambda x: isinstance(x, P))
     opt_P0 = jax.tree.map(lambda s: P(), shd.param_specs(pshapes),
                           is_leaf=lambda x: isinstance(x, P))
     if tc.optimizer == "memsgd_momentum":
@@ -272,7 +312,7 @@ def make_train_step(model, mesh, tc: TrainConfig):
         return jax.tree.map(lambda _: batch_spec, batch_tree)
 
     def step(params, memory, opt, count, batch):
-        sm = jax.shard_map(
+        sm = compat.shard_map(
             step_body,
             mesh=mesh,
             in_specs=(pspec_P0, mem_manual, opt_in, P(),
@@ -334,7 +374,6 @@ def main():
     from repro.data import token_batches
     from repro.data.pipeline import ShardedBatcher
     from repro.models import build_model
-    from jax.sharding import AxisType
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-4b", choices=ARCH_IDS)
@@ -343,20 +382,20 @@ def main():
     ap.add_argument("--eta", type=float, default=0.5)
     ap.add_argument("--ratio", type=float, default=0.01)
     ap.add_argument("--strategy", default="sparse_allgather")
+    ap.add_argument("--bucketed", action="store_true",
+                    help="flat-buffer bucketed sync (repro.core.buckets)")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--ckpt-dir", default="")
     args = ap.parse_args()
 
-    mesh = jax.make_mesh(
-        (jax.device_count(), 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    mesh = compat.make_mesh((jax.device_count(), 1), ("data", "model"))
     cfg = get_smoke_config(args.arch)
     model = build_model(cfg)
     tc = TrainConfig(optimizer=args.optimizer, eta=args.eta,
                      sync=SyncConfig(ratio=args.ratio,
-                                     strategy=args.strategy))
+                                     strategy=args.strategy,
+                                     bucketed=args.bucketed))
     batches = ShardedBatcher(
         mesh, token_batches(cfg.vocab_size, args.batch, args.seq, seed=0)
     )

@@ -1,0 +1,84 @@
+"""Fallback shim for ``hypothesis`` so the tier-1 suite collects without it.
+
+When hypothesis is installed (see requirements-dev.txt) the real library is
+re-exported unchanged. Otherwise ``@given`` degrades to a deterministic
+sweep: each strategy contributes a small fixed set of samples (endpoints +
+interior points) and the test body runs once per zipped sample tuple. That
+keeps the property tests meaningful as example-based tests instead of
+killing collection for the whole suite.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is present
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic fallback
+    HAVE_HYPOTHESIS = False
+
+    _N_SAMPLES = 5
+
+    class _Strategy:
+        def __init__(self, samples):
+            self.samples = list(samples)
+
+    class _StrategiesShim:
+        @staticmethod
+        def integers(min_value, max_value):
+            span = max_value - min_value
+            pts = sorted(
+                {
+                    min_value,
+                    min_value + span // 4,
+                    min_value + span // 2,
+                    min_value + (3 * span) // 4,
+                    max_value,
+                }
+            )
+            return _Strategy(pts)
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            mid = (min_value + max_value) / 2.0
+            return _Strategy(
+                [min_value, (min_value + mid) / 2, mid, (mid + max_value) / 2,
+                 max_value]
+            )
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            reps = -(-_N_SAMPLES // len(elements))
+            return _Strategy((elements * reps)[:_N_SAMPLES])
+
+    st = _StrategiesShim()
+
+    def settings(**_kw):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            # NB: deliberately no functools.wraps — copying the wrapped
+            # signature would make pytest treat the parameters as fixtures.
+            def wrapper():
+                n = max(len(s.samples) for s in strategies.values())
+                for i in range(n):
+                    kwargs = {
+                        name: s.samples[i % len(s.samples)]
+                        for name, s in strategies.items()
+                    }
+                    fn(**kwargs)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return deco
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

@@ -17,6 +17,16 @@ import pytest
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
+# jax < 0.5 (no jax.shard_map) routes through the legacy
+# experimental.shard_map whose partial-auto mode crashes XLA's SPMD
+# partitioner (Check failed: sharding.IsManualSubgroup()) whenever the
+# auto "model" axis has size > 1. Single-axis and model=1 meshes work.
+legacy_partial_auto = pytest.mark.xfail(
+    not hasattr(jax, "shard_map"),
+    reason="legacy shard_map partial-auto + sharded model axis crashes XLA",
+    strict=False,
+)
+
 
 def _run_subprocess(body: str) -> dict:
     """Run `body` with 8 fake devices; it must print one JSON line."""
@@ -73,6 +83,7 @@ def test_sync_col_axes_rules():
 
 
 @pytest.mark.slow
+@legacy_partial_auto
 def test_distributed_memsgd_loss_decreases():
     rec = _run_subprocess(
         """
@@ -168,6 +179,7 @@ def test_distributed_sparse_sync_no_dense_allreduce():
 
 
 @pytest.mark.slow
+@legacy_partial_auto
 def test_hierarchical_matches_flat_when_pod_ratio_full():
     """With pod re-compression disabled (pod_ratio=1.0 => k_pod = full
     row), hierarchical == flat sparse_allgather updates after one step."""
@@ -180,10 +192,9 @@ def test_hierarchical_matches_flat_when_pod_ratio_full():
         from repro.core.distributed import SyncConfig
         from repro.data import token_batches
         from repro.data.pipeline import ShardedBatcher
-        from jax.sharding import AxisType
+        from repro.utils.compat import make_mesh
 
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,)*3)
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
         cfg = get_smoke_config("yi-9b")
         model = build_model(cfg)
         def one_step(strategy, pod_ratio):

@@ -7,7 +7,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AxisType
 
 from repro.checkpoint import Checkpointer
 from repro.configs import get_smoke_config
@@ -22,11 +21,11 @@ from repro.launch.train import (
     train,
 )
 from repro.models import build_model
+from repro.utils.compat import make_mesh
 
 
 def _mesh11():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def test_end_to_end_train_checkpoint_serve():

@@ -1,0 +1,161 @@
+"""Single-pass threshold top-k kernel vs the k-loop oracle.
+
+Contract under test (shared by every selection implementation):
+top-|.|-k per row, emitted in decreasing-magnitude order, magnitude ties
+broken by LOWEST index — bitwise-equal outputs in fp32.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.distributed import _row_topk_argmax, _row_topk_threshold
+from repro.kernels import fused_memsgd_ref, fused_memsgd_update, row_topk
+from repro.kernels.ref import row_topk_ref
+from repro.kernels.topk_select import (
+    row_topk_pallas,
+    row_topk_tiled_pallas,
+)
+
+SHAPES = [(8, 64), (16, 128), (8, 1024), (24, 100), (3, 33), (1, 257)]
+
+
+def _assert_pairs_equal(got, want):
+    gv, gi = got
+    wv, wi = want
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    # bitwise: compare the raw value patterns, not within a tolerance
+    np.testing.assert_array_equal(
+        np.asarray(gv).view(np.uint8), np.asarray(wv).view(np.uint8)
+    )
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("k", [1, 4, 16, 64])
+def test_threshold_matches_oracle_fp32(shape, k):
+    R, C = shape
+    if k > C:
+        pytest.skip("k > C")
+    x = jax.random.normal(jax.random.PRNGKey(R * C + k), shape)
+    _assert_pairs_equal(
+        row_topk(x, k, method="threshold"), row_topk_ref(x, k)
+    )
+
+
+@pytest.mark.parametrize("shape", [(8, 300), (16, 128), (5, 77)])
+@pytest.mark.parametrize("k", [3, 12])
+def test_threshold_matches_oracle_bf16(shape, k):
+    x = jax.random.normal(
+        jax.random.PRNGKey(sum(shape)), shape
+    ).astype(jnp.bfloat16)
+    _assert_pairs_equal(
+        row_topk(x, k, method="threshold"), row_topk_ref(x, k)
+    )
+
+
+@pytest.mark.parametrize("col_block", [16, 64, 100, 512])
+def test_tiled_column_blocks(col_block):
+    """C not divisible by the column block: padded columns never win."""
+    R, C, k = 8, 257, 16
+    x = jax.random.normal(jax.random.PRNGKey(7), (R, C))
+    got = row_topk_tiled_pallas(x, k, col_block=col_block)
+    _assert_pairs_equal(got, row_topk_ref(x, k))
+
+
+def test_tie_heavy_lowest_index_contract():
+    """Quantized values force many exact magnitude ties; the tie must
+    resolve to the LOWEST index, matching the iterative-argmax oracle."""
+    x = jnp.round(jax.random.normal(jax.random.PRNGKey(0), (16, 256)) * 2) / 2
+    for k in (1, 8, 32):
+        _assert_pairs_equal(
+            row_topk(x, k, method="threshold", col_block=64),
+            row_topk_ref(x, k),
+        )
+    # crafted row: duplicates of the max magnitude, mixed signs
+    row = jnp.array([[1.0, -2.0, 2.0, 0.5, -2.0, 2.0]])
+    vals, idx = row_topk(row, 3, method="threshold")
+    np.testing.assert_array_equal(np.asarray(idx[0]), [1, 2, 4])
+    np.testing.assert_array_equal(np.asarray(vals[0]), [-2.0, 2.0, -2.0])
+
+
+def test_zero_heavy_rows_select_lowest_index_zeros():
+    """Rows with fewer than k nonzeros must fill with the lowest-index
+    zeros even when the column padding adds more zeros."""
+    x = jnp.zeros((8, 96)).at[:, 5].set(3.0).at[:, 90].set(-1.0)
+    got = row_topk(x, 8, method="threshold", col_block=40)
+    _assert_pairs_equal(got, row_topk_ref(x, 8))
+    assert int(np.asarray(got[1]).max()) < 96  # no padded index leaks
+
+
+def test_nondivisible_rows_pad_path():
+    """R % row_block != 0 exercises ops._pad_rows for both methods."""
+    for R in (3, 13, 17):
+        x = jax.random.normal(jax.random.PRNGKey(R), (R, 128))
+        _assert_pairs_equal(
+            row_topk(x, 9, method="threshold"), row_topk_ref(x, 9)
+        )
+        _assert_pairs_equal(
+            row_topk(x, 9, method="loop"), row_topk_ref(x, 9)
+        )
+
+
+def test_single_tile_threshold_kernel():
+    """The whole-row kernel with selection="threshold" (no column grid)."""
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, 512))
+    got = row_topk_pallas(x, 24, selection="threshold")
+    _assert_pairs_equal(got, row_topk_ref(x, 24))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_threshold_matches_ref(dtype):
+    """Selection (indices) is exact; values/memory compare within 1 ulp —
+    the u = m + eta*g compute may be FMA-contracted differently between
+    the kernel and the oracle compilations (same tolerance as the
+    pre-existing loop-kernel sweep)."""
+    R, C, k = 13, 200, 11
+    key = jax.random.PRNGKey(5)
+    m = jax.random.normal(key, (R, C)).astype(dtype)
+    g = jax.random.normal(jax.random.fold_in(key, 1), (R, C)).astype(dtype)
+    nm1, v1, i1 = fused_memsgd_update(m, g, 0.37, k, method="threshold")
+    nm2, v2, i2 = fused_memsgd_ref(m, g, 0.37, k)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    atol = 1e-6 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(v1, np.float32), np.asarray(v2, np.float32), atol=atol
+    )
+    np.testing.assert_allclose(
+        np.asarray(nm1, np.float32), np.asarray(nm2, np.float32), atol=atol
+    )
+
+    # with an identical u (eta=0 path: u == m), outputs are bitwise-equal
+    nm1, v1, i1 = fused_memsgd_update(m, g, 0.0, k, method="threshold")
+    nm2, v2, i2 = fused_memsgd_ref(m, g, 0.0, k)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(
+        np.asarray(v1).view(np.uint8), np.asarray(v2).view(np.uint8)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(nm1).view(np.uint8), np.asarray(nm2).view(np.uint8)
+    )
+
+
+def test_auto_method_bitwise_consistent():
+    """"auto" must stay bitwise-identical across the k cutover."""
+    x = jax.random.normal(jax.random.PRNGKey(9), (8, 512))
+    for k in (4, 8, 9, 32):  # straddles LOOP_MAX_K
+        _assert_pairs_equal(row_topk(x, k), row_topk_ref(x, k))
+
+
+def test_partition_safe_threshold_batched():
+    """The jnp (GSPMD) threshold select matches the argmax loop on
+    arbitrary leading dims, including tie-heavy inputs."""
+    key = jax.random.PRNGKey(11)
+    for shape, k in [((4, 7, 200), 16), ((2, 3, 4, 64), 10)]:
+        u = jax.random.normal(key, shape)
+        _assert_pairs_equal(
+            _row_topk_threshold(u, k), _row_topk_argmax(u, k)
+        )
+    u = jnp.round(jax.random.normal(key, (4, 6, 96)) * 2) / 2
+    _assert_pairs_equal(
+        _row_topk_threshold(u, 12), _row_topk_argmax(u, 12)
+    )
