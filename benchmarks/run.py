@@ -10,6 +10,8 @@ to experiments/bench/*.json.
   fig4_multicore     paper Fig. 4 — PARALLEL-MEM-SGD scaling (simulated)
   table_comm         communication-volume table for the 10 assigned archs
   kernel_topk        Pallas kernel wall-time (interpret mode) vs oracle
+  wire_codec         packed wire codec throughput + bytes-on-wire vs the
+                     unpacked (f32 value, int32 index) baseline
 
 Fast mode (default) uses reduced n/T; ``--full`` approaches paper scale.
 """
@@ -256,6 +258,109 @@ def kernel_topk(full: bool = False):
     return payload
 
 
+def wire_codec(full: bool = False):
+    """Packed sparse wire codec (repro.core.encoding): encode/decode
+    throughput and realized bytes-on-wire at the acceptance point (k=64,
+    cols=1024) vs dense and vs the unpacked (f32 value, int32 index)
+    baseline, plus the rwkv6-3b smoke-plan sync/delta byte trajectory.
+    Writes BENCH_wire.json at the repo root."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke_config
+    from repro.core import buckets as bk
+    from repro.core import encoding as enc
+    from repro.core.distributed import SyncConfig, bucketed_message_bytes
+    from repro.kernels.ref import row_topk_ref
+    from repro.models import build_model
+
+    R, C, k = (1024, 1024, 64) if full else (256, 1024, 64)
+    u = jax.random.normal(jax.random.PRNGKey(0), (R, C))
+    vals, idx = row_topk_ref(u, k)
+    vals, idx = jax.block_until_ready(vals), jax.block_until_ready(idx)
+
+    def bench(fn, n=20):
+        jax.block_until_ready(fn())  # warmup/compile
+        t0 = time.time()
+        for _ in range(n):
+            out = fn()
+        jax.block_until_ready(out)
+        return (time.time() - t0) / n * 1e6
+
+    unpacked_bytes = R * k * (4 + 4)
+    dense_bytes = R * C * 4
+    payload = {"shape": [R, C], "k": k, "unpacked_bytes": unpacked_bytes,
+               "dense_bytes": dense_bytes}
+    for vd in ("float32", "bfloat16"):
+        spec = enc.WireSpec(R, C, k, vd)
+        encode = jax.jit(lambda v, i: enc.encode(spec, v, i))
+        buf = jax.block_until_ready(encode(vals, idx))
+        decode = jax.jit(lambda b: enc.decode(spec, b))
+        us_enc = bench(lambda: encode(vals, idx))
+        us_dec = bench(lambda: decode(buf))
+        v2, i2 = decode(buf)
+        exact = bool(
+            np.array_equal(np.asarray(i2), np.asarray(idx))
+            and np.array_equal(
+                np.asarray(v2, np.float32),
+                np.asarray(vals.astype(jnp.dtype(vd)), np.float32),
+            )
+        )
+        assert spec.nbytes == buf.size * 4
+        ratio = unpacked_bytes / spec.nbytes
+        # payload MB/s through encode (values+indices actually shipped)
+        enc_mbps = spec.nbytes / (us_enc / 1e6) / 1e6
+        dec_mbps = spec.nbytes / (us_dec / 1e6) / 1e6
+        _emit(f"wire_encode_{vd}", us_enc,
+              f"bytes={spec.nbytes};x_vs_unpacked={ratio:.2f};"
+              f"x_vs_dense={dense_bytes/spec.nbytes:.1f};"
+              f"MBps={enc_mbps:.1f}")
+        _emit(f"wire_decode_{vd}", us_dec,
+              f"roundtrip_exact={exact};MBps={dec_mbps:.1f}")
+        payload[vd] = {
+            "packed_bytes": spec.nbytes, "encode_us": us_enc,
+            "decode_us": us_dec, "roundtrip_exact": exact,
+            "ratio_vs_unpacked": ratio,
+            "ratio_vs_dense": dense_bytes / spec.nbytes,
+        }
+        assert exact, f"wire codec round-trip diverged ({vd})"
+
+    # rwkv6-3b smoke plan: realized sync + delta-stream bytes per step
+    shapes = build_model(get_smoke_config("rwkv6-3b")).param_shapes()
+    plan = bk.make_plan(shapes)
+    base = SyncConfig(ratio=0.02, bucketed=True)
+    sync_bytes = {
+        "unpacked_f32": bucketed_message_bytes(base, plan),
+        "packed_f32": bucketed_message_bytes(
+            dataclasses.replace(base, wire="packed"), plan),
+        "packed_bf16": bucketed_message_bytes(
+            dataclasses.replace(base, wire="packed",
+                                value_dtype="bfloat16"), plan),
+        "dense": bucketed_message_bytes(
+            dataclasses.replace(base, strategy="dense"), plan),
+    }
+    from repro.launch.delta_stream import make_delta_spec
+
+    dspec = make_delta_spec(plan, base, workers=4)
+    payload["rwkv6_3b_smoke"] = {
+        "sync_bytes_per_step": sync_bytes,
+        "delta_bytes_per_step": dspec.nbytes,
+        "delta_dense_bytes_per_step": dspec.dense_nbytes,
+    }
+    _emit("wire_rwkv6_sync", 0.0,
+          ";".join(f"{n}={b}" for n, b in sync_bytes.items()))
+    _emit("wire_rwkv6_delta", 0.0,
+          f"delta={dspec.nbytes};dense={dspec.dense_nbytes};"
+          f"x{dspec.dense_nbytes/dspec.nbytes:.1f}")
+    _save("wire_codec", payload)
+    with open(os.path.join(_ROOT, "BENCH_wire.json"), "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    assert payload["bfloat16"]["ratio_vs_unpacked"] >= 1.8, payload
+    return payload
+
+
 def remark23_ultra(full: bool = False):
     """Remark 2.3 ultra-sparsification: transmit on average LESS THAN ONE
     coordinate per step (k < 1) and still converge (with memory)."""
@@ -295,6 +400,7 @@ BENCHES = {
     "fig4_multicore": fig4_multicore,
     "table_comm": table_comm,
     "kernel_topk": kernel_topk,
+    "wire_codec": wire_codec,
     "remark23_ultra": remark23_ultra,
 }
 

@@ -24,6 +24,12 @@ ap.add_argument("--optimizer", default="memsgd",
                 choices=["memsgd", "memsgd_momentum", "adam_compressed",
                          "dense"])
 ap.add_argument("--ratio", type=float, default=0.01)
+ap.add_argument("--bucketed", action="store_true",
+                help="flat-buffer bucketed sync (repro.core.buckets)")
+ap.add_argument("--wire", default="unpacked", choices=["unpacked", "packed"],
+                help="all-gather wire format (repro.core.encoding)")
+ap.add_argument("--value-dtype", default="float32",
+                choices=["float32", "bfloat16"], help="sync value dtype")
 ap.add_argument("--d-model", type=int, default=512)
 ap.add_argument("--layers", type=int, default=8)
 ap.add_argument("--seq", type=int, default=256)
@@ -74,12 +80,21 @@ def main():
         optimizer=args.optimizer,
         eta=0.5 if args.optimizer.startswith("memsgd") else 3e-3,
         eta_shift=200.0,
-        sync=SyncConfig(ratio=args.ratio),
+        sync=SyncConfig(ratio=args.ratio, bucketed=args.bucketed,
+                        wire=args.wire, value_dtype=args.value_dtype),
     )
     shapes = model.param_shapes()
-    msg = message_bytes(tc.sync, shapes, sync_col_axes(shapes))
+    if args.bucketed:
+        from repro.core import buckets as bk
+        from repro.core.distributed import bucketed_message_bytes
+
+        plan = bk.make_plan(shapes, cols=tc.sync.bucket_cols,
+                            dense_below=tc.sync.dense_below)
+        msg = bucketed_message_bytes(tc.sync, plan)
+    else:
+        msg = message_bytes(tc.sync, shapes, sync_col_axes(shapes))
     dense = message_bytes(SyncConfig(strategy="dense"), shapes)
-    print(f"sync: {args.optimizer} ratio={args.ratio} -> "
+    print(f"sync: {args.optimizer} ratio={args.ratio} wire={args.wire} -> "
           f"{msg/1e6:.2f} MB/worker/step (dense would be {dense/1e6:.1f} MB, "
           f"{dense/max(msg,1):.0f}x reduction)")
 

@@ -8,7 +8,7 @@ Public API:
 * ``repro.core.buckets``     — flat-buffer engine (pytree -> few buckets).
 * ``repro.core.distributed`` — PARALLEL-MEM-SGD sparse all-gather sync.
 * ``repro.core.theory``      — Theorem 2.4 stepsizes / averaging / bounds.
-* ``repro.core.encoding``    — communication bit accounting.
+* ``repro.core.encoding``    — packed sparse wire codec + bit accounting.
 """
 from repro.core.compression import (
     Compressor,
@@ -43,6 +43,7 @@ from repro.core.distributed import (
     message_bytes,
     sparse_sync_gradients,
 )
+from repro.core.encoding import WireSpec, decode as wire_decode, encode as wire_encode
 
 __all__ = [
     "Compressor",
@@ -72,4 +73,7 @@ __all__ = [
     "bucketed_sync_gradients",
     "message_bytes",
     "sparse_sync_gradients",
+    "WireSpec",
+    "wire_decode",
+    "wire_encode",
 ]

@@ -10,7 +10,9 @@ This is the distributed heart of the framework. It runs INSIDE a
   3. selects ROW-BLOCK top-k (values, indices) per tensor (see below),
   4. exchanges ONLY those pairs via ``jax.lax.all_gather`` over the data
      axes (k values + k indices per tensor per worker, vs. d dense values
-     for a vanilla all-reduce),
+     for a vanilla all-reduce) — as raw arrays, or bit-packed into a
+     single uint32 wire buffer per tensor when ``SyncConfig.wire ==
+     "packed"`` (see ``repro.core.encoding`` and DESIGN.md),
   5. scatter-adds the W*k received pairs into a dense update and divides
      by W,
   6. keeps m_w' = u_w - own_selection.
@@ -93,6 +95,17 @@ class SyncConfig:
     #    limit; tiny k (<= LOOP_MAX_K) falls back to the argmax loop.
     selection: str = "argmax_onehot"
     argmax_k_limit: int = 64  # fall back to top_k beyond this
+    # Wire format for the all-gather (repro.core.encoding):
+    #  * "unpacked": separate (value_dtype values, int32 indices) arrays —
+    #    k * (value_bits + 32) bits per row.
+    #  * "packed": one uint32 buffer per leaf/bucket with bf16/f32 values
+    #    and ceil(log2 cols)-bit row-local indices — k * (value_bits +
+    #    ceil(log2 cols)) bits per row plus header/alignment slack. The
+    #    decode + scatter-add runs shard-locally after the gather; results
+    #    are bit-identical to the unpacked path. NB: on model-sharded
+    #    leaves the encode's (rows, k) reshape can force GSPMD gathers —
+    #    the bucketed path (already model-axis-free) is the primary user.
+    wire: str = "unpacked"
     # Bucketed flat-buffer engine (repro.core.buckets): pack the pytree
     # into a few dtype-homogeneous (R, bucket_cols) buffers so the sync
     # runs over <= ~4 big tensors instead of one dispatch per leaf.
@@ -232,43 +245,92 @@ def _gather_pairs(vals, idx, axes):
     return vals, idx
 
 
+def _gather_packed(vals, idx, axes, wspec):
+    """Packed-wire gather: encode (vals, idx) into one uint32 buffer
+    (repro.core.encoding), all-gather the buffer over every data axis,
+    then decode each worker's message shard-locally. Returns (..., W*k)
+    pairs in exactly the tile order ``_gather_pairs`` produces, so the
+    downstream densify/mean is bit-identical to the unpacked path."""
+    from repro.core import encoding as enc
+
+    k = wspec.k
+    buf = enc.encode(
+        wspec, vals.reshape(-1, k), idx.reshape(-1, k).astype(jnp.int32)
+    )
+    for ax in axes:
+        buf = jax.lax.all_gather(buf, ax, axis=0, tiled=True)
+    W = _axis_size(axes)
+    gv, gi = jax.vmap(lambda b: enc.decode(wspec, b))(
+        buf.reshape(W, wspec.words)
+    )
+    gv = jnp.moveaxis(gv, 0, 1).reshape(vals.shape[:-1] + (W * k,))
+    gi = jnp.moveaxis(gi, 0, 1).reshape(idx.shape[:-1] + (W * k,))
+    return gv, gi
+
+
+def _wire_spec(u: Array, k: int, value_dtype):
+    from repro.core import encoding as enc
+
+    return enc.WireSpec(
+        rows=u.size // u.shape[-1], cols=u.shape[-1], k=k,
+        value_dtype=jnp.dtype(value_dtype).name,
+    )
+
+
 def _leaf_sparse_sync(u: Array, k_row: int, axes, value_dtype,
                       constrain=lambda x: x, topk=_row_topk,
-                      densify=None):
+                      densify=None, wire: str = "unpacked"):
     """u: (..., C). Returns (mean update, own selection, bytes/worker)."""
     densify = densify or _row_scatter
     rows = u.size // u.shape[-1]
     vals, idx = topk(u, k_row, constrain)
     own = densify(u.shape, vals, idx, u.dtype, constrain)
-    gv, gi = _gather_pairs(vals.astype(value_dtype), idx, axes)
+    if wire == "packed":
+        wspec = _wire_spec(u, k_row, value_dtype)
+        gv, gi = _gather_packed(vals.astype(value_dtype), idx, axes, wspec)
+        nbytes = wspec.nbytes
+    else:
+        gv, gi = _gather_pairs(vals.astype(value_dtype), idx, axes)
+        nbytes = rows * k_row * (jnp.dtype(value_dtype).itemsize + 4)
     gv, gi = constrain(gv), constrain(gi)
     W = _axis_size(axes)
     update = (densify(u.shape, gv, gi, value_dtype, constrain)
               / W).astype(u.dtype)
-    nbytes = rows * k_row * (jnp.dtype(value_dtype).itemsize + 4)
     return update, own, nbytes
 
 
 def _leaf_hierarchical_sync(u, k_row, k_pod, data_axes, pod_axis, value_dtype,
                             constrain=lambda x: x, topk=_row_topk,
-                            densify=None):
-    """Two-stage: intra-pod gather -> densify -> re-compress -> inter-pod."""
+                            densify=None, wire: str = "unpacked"):
+    """Two-stage: intra-pod gather -> densify -> re-compress -> inter-pod.
+    Both gather stages go over the packed wire when ``wire="packed"``."""
     densify = densify or _row_scatter
     rows = u.size // u.shape[-1]
     vals, idx = topk(u, k_row, constrain)
     own = densify(u.shape, vals, idx, u.dtype, constrain)
-    gv, gi = _gather_pairs(vals.astype(value_dtype), idx, data_axes)
+    if wire == "packed":
+        w1 = _wire_spec(u, k_row, value_dtype)
+        gv, gi = _gather_packed(
+            vals.astype(value_dtype), idx, data_axes, w1
+        )
+    else:
+        gv, gi = _gather_pairs(vals.astype(value_dtype), idx, data_axes)
     n_data = _axis_size(data_axes)
     pod_mean = densify(u.shape, gv, gi, value_dtype, constrain) / n_data
     pvals, pidx = topk(pod_mean, k_pod, constrain)
     pod_sel = densify(u.shape, pvals, pidx, value_dtype, constrain)
     residual = pod_mean - pod_sel  # kept in memory (identical pod-wide)
-    av, ai = _gather_pairs(pvals, pidx, (pod_axis,))
+    if wire == "packed":
+        w2 = _wire_spec(u, k_pod, value_dtype)
+        av, ai = _gather_packed(pvals, pidx, (pod_axis,), w2)
+        nbytes = w1.nbytes + w2.nbytes
+    else:
+        av, ai = _gather_pairs(pvals, pidx, (pod_axis,))
+        itemsize = jnp.dtype(value_dtype).itemsize
+        nbytes = rows * (k_row + k_pod) * (itemsize + 4)
     n_pods = compat.axis_size(pod_axis)
     update = (densify(u.shape, av, ai, value_dtype, constrain)
               / n_pods).astype(u.dtype)
-    itemsize = jnp.dtype(value_dtype).itemsize
-    nbytes = rows * (k_row + k_pod) * (itemsize + 4)
     return update, own, residual.astype(u.dtype), nbytes
 
 
@@ -342,12 +404,13 @@ def sparse_sync_gradients(
             upd, own, residual, nbytes = _leaf_hierarchical_sync(
                 u, cfg.k_for(C), cfg.pod_k_for(C), tuple(cfg.data_axes),
                 cfg.pod_axis, value_dtype, constrain, topk, densify,
+                wire=cfg.wire,
             )
             new_m = (u - own) + residual
         elif cfg.strategy in ("sparse_allgather", "hierarchical"):
             upd, own, nbytes = _leaf_sparse_sync(
                 u, cfg.k_for(C), all_axes, value_dtype, constrain, topk,
-                densify,
+                densify, wire=cfg.wire,
             )
             new_m = u - own
         else:
@@ -379,6 +442,7 @@ def bucketed_sync_gradients(
     memory_bufs,
     grad_tree,
     eta: Array,
+    return_bufs: bool = False,
 ):
     """PARALLEL-MEM-SGD gradient exchange over flat buckets.
 
@@ -386,13 +450,17 @@ def bucketed_sync_gradients(
     into the plan's few big (rows, cols) buffers first (see
     ``repro.core.buckets``): per-worker memory lives in bucket space
     (``memory_bufs``: one f32 buffer per bucket) and the all-gather runs
-    once per bucket instead of once per leaf. Rows never cross leaves'
+    once per bucket instead of once per leaf — over the packed uint32
+    wire buffers when ``cfg.wire == "packed"`` (bit-identical results,
+    ~2x fewer bytes; this path has no model-axis sharding to disturb). Rows never cross leaves'
     dtype groups; note that packing reshapes away any model-axis sharding,
     so this path targets data-parallel (or small-model-axis) meshes — the
     per-leaf path remains the choice for heavily tensor-parallel params.
 
     Returns (update_tree [f32 leaves, SUBTRACT from params],
-    new_memory_bufs, bytes_per_worker_per_step).
+    new_memory_bufs, bytes_per_worker_per_step) — plus the update's
+    bucket-space (rows, cols) buffers when ``return_bufs`` (consumed by
+    the delta stream, which re-encodes them without re-packing the tree).
     """
     from repro.core import buckets as bk
 
@@ -416,40 +484,59 @@ def bucketed_sync_gradients(
             upd, own, residual, nbytes = _leaf_hierarchical_sync(
                 u, k_row, cfg.pod_k_for(spec.cols), tuple(cfg.data_axes),
                 cfg.pod_axis, value_dtype, topk=topk, densify=densify,
+                wire=cfg.wire,
             )
             mems.append((u - own) + residual)
         elif cfg.strategy in ("sparse_allgather", "hierarchical"):
             upd, own, nbytes = _leaf_sparse_sync(
                 u, k_row, all_axes, value_dtype, topk=topk, densify=densify,
+                wire=cfg.wire,
             )
             mems.append(u - own)
         else:
             raise ValueError(f"unknown sync strategy {cfg.strategy!r}")
         ups.append(upd)
         total_bytes += int(nbytes)
+    if return_bufs:
+        return bk.unpack(plan, ups), tuple(mems), total_bytes, ups
     return bk.unpack(plan, ups), tuple(mems), total_bytes
 
 
-def bucketed_message_bytes(cfg: SyncConfig, plan) -> int:
-    """Static per-worker per-step transmitted bytes for a BucketPlan."""
+def _sparse_leaf_bytes(cfg: SyncConfig, rows: int, cols: int) -> int:
+    """Exact per-worker bytes one sparse leaf/bucket puts on the wire:
+    the packed ``WireSpec`` buffer size (header + bit-packed sections) or
+    the raw (value_dtype, int32) pair arrays, per gather stage."""
+    from repro.core import encoding as enc
+
+    ks = [cfg.k_for(cols)]
+    if cfg.strategy == "hierarchical" and cfg.pod_axis is not None:
+        ks.append(cfg.pod_k_for(cols))
+    if cfg.wire == "packed":
+        name = jnp.dtype(cfg.value_dtype).name
+        return sum(
+            enc.WireSpec(rows, cols, k, name).nbytes for k in ks
+        )
     itemsize = jnp.dtype(cfg.value_dtype).itemsize
+    return sum(rows * k * (itemsize + 4) for k in ks)
+
+
+def bucketed_message_bytes(cfg: SyncConfig, plan) -> int:
+    """Per-worker per-step transmitted bytes for a BucketPlan — the exact
+    size of the buffers the sync all-gathers (index cost is the bucket's
+    row-local ceil(log2 cols) bits when ``cfg.wire == "packed"``)."""
     total = 0
     for spec in plan.buckets:
         if cfg.strategy == "dense" or spec.kind == "dense":
             total += spec.rows * spec.cols * 4
-        elif cfg.strategy == "hierarchical" and cfg.pod_axis is not None:
-            total += spec.rows * (
-                cfg.k_for(spec.cols) + cfg.pod_k_for(spec.cols)
-            ) * (itemsize + 4)
         else:
-            total += spec.rows * cfg.k_for(spec.cols) * (itemsize + 4)
+            total += _sparse_leaf_bytes(cfg, spec.rows, spec.cols)
     return total
 
 
 def message_bytes(cfg: SyncConfig, params, col_axes=None) -> int:
-    """Static per-worker per-step transmitted bytes for a parameter pytree."""
+    """Per-worker per-step transmitted bytes for a parameter pytree — the
+    exact size of the gathered arrays (or packed wire buffers)."""
     total = 0
-    itemsize = jnp.dtype(cfg.value_dtype).itemsize
     leaves, treedef = jax.tree.flatten(params)
     if col_axes is None:
         caxes = [None] * len(leaves)
@@ -462,9 +549,5 @@ def message_bytes(cfg: SyncConfig, params, col_axes=None) -> int:
             continue
         ca = (c if c is not None else p.ndim - 1) % max(p.ndim, 1)
         C = p.shape[ca] if p.ndim else 1
-        R = d // max(C, 1)
-        if cfg.strategy == "hierarchical" and cfg.pod_axis is not None:
-            total += R * (cfg.k_for(C) + cfg.pod_k_for(C)) * (itemsize + 4)
-        else:
-            total += R * cfg.k_for(C) * (itemsize + 4)
+        total += _sparse_leaf_bytes(cfg, d // max(C, 1), C)
     return total

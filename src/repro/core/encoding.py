@@ -1,19 +1,64 @@
-"""Communication accounting: bits transmitted per step per scheme.
+"""Packed sparse wire codec + communication accounting.
 
-Reproduces the accounting used in the paper (§4.2, §4.3, Appendix B):
+Two layers live here:
 
-* dense SGD:     32 * d bits (fp32) — or 16*d for bf16.
-* top-k/rand-k:  k * (32 + ceil(log2 d)) bits (value + index).
-* QSGD with s levels (Alistarh et al., Thm 3.2 estimates):
-      min( (log2(s) + 1) * d,  3*s*(s + sqrt(d)) + 32 ) bits.
-* sparse-aware QSGD (RCV1 case): replace d by the gradient's nnz.
+1. **Accounting** (python floats/ints) — bits transmitted per step per
+   scheme, reproducing the paper's formulas (§4.2, §4.3, Appendix B):
 
-These are *accounting* functions (python floats), used by the benchmark
-harness and by the distributed runtime's metrics.
+   * dense SGD:     32 * d bits (fp32) — or 16*d for bf16.
+   * top-k/rand-k:  k * (bits_per_value + ceil(log2 d)) bits.
+   * QSGD with s levels (Alistarh et al., Thm 3.2 estimates):
+         min( (log2(s) + 1) * d,  3*s*(s + sqrt(d)) + 32 ) bits.
+   * sparse-aware QSGD (RCV1 case): replace d by the gradient's nnz.
+
+2. **Codec** (`WireSpec` + `encode`/`decode`) — the wire format the
+   runtime actually transmits. A sparse message of k (value, index)
+   pairs per row of an (rows, cols) buffer is bit-packed into a single
+   dtype-uniform ``uint32`` buffer::
+
+       [ header : HEADER_WORDS words ]
+       [ values : rows * value_words words  (f32 bitcast | bf16 pairs) ]
+       [ packed_indices : rows * index_words words
+                          (row-local indices, ceil(log2 cols) bits each,
+                           LSB-first within each 32-bit word) ]
+
+   Everything is static given the ``WireSpec`` (derived from a
+   ``BucketPlan`` bucket or a leaf's row layout), so encode/decode are
+   pure shift/mask tensor ops — jit/vmap/shard_map compatible, with no
+   python loops over k — and round-trip exactly: ``decode(encode(v, i))``
+   recovers ``i`` bitwise and ``v`` bitwise in the wire value dtype.
+
+   The unpacked baseline ships the same message as separate f32/int32
+   arrays, i.e. k * (32 + 32) bits; the packed format costs
+   k * (value_bits + ceil(log2 cols)) plus word-alignment slack — e.g.
+   2.46x fewer bytes at k=64, cols=1024, bf16 values.
+
+The accounting functions for the packed format are exact: the test suite
+asserts ``WireSpec.nbits == 8 * encoded.nbytes``.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+MAGIC = 0x53505257  # "SPRW"
+VERSION = 1
+HEADER_WORDS = 8
+_DTYPE_CODES = {"float32": 0, "bfloat16": 1}
+_DTYPE_NAMES = {v: k for k, v in _DTYPE_CODES.items()}
+_KIND_CODES = {"sparse": 0, "dense": 1}
+_KIND_NAMES = {v: k for k, v in _KIND_CODES.items()}
+
+
+# ---------------------------------------------------------------------------
+# accounting (paper Appendix B + exact packed-wire byte counts)
+# ---------------------------------------------------------------------------
 
 
 def dense_bits(d: int, bits_per_value: int = 32) -> float:
@@ -21,11 +66,21 @@ def dense_bits(d: int, bits_per_value: int = 32) -> float:
 
 
 def index_bits(d: int) -> int:
+    """Bits to address one of d positions (>= 1)."""
     return max(1, math.ceil(math.log2(max(2, d))))
 
 
+def value_bits(value_dtype) -> int:
+    """Wire bits per value for a sync value dtype (f32: 32, bf16: 16)."""
+    return jnp.dtype(value_dtype).itemsize * 8
+
+
 def sparse_bits(d: int, k: float, bits_per_value: int = 32) -> float:
-    """k (value, index) pairs."""
+    """k (value, index) pairs against a d-long address space.
+
+    Pass ``bits_per_value=value_bits(cfg.value_dtype)`` so bf16 syncs are
+    accounted at 16 bits/value, matching what the codec emits.
+    """
     return k * (bits_per_value + index_bits(d))
 
 
@@ -36,11 +91,201 @@ def qsgd_bits(d: int, s: int) -> float:
     return min(naive, elias)
 
 
-def memsgd_message_bits(d: int, k: int, bits_per_value: int = 32) -> float:
+def memsgd_message_bits(d: int, k: int, value_dtype="float32") -> float:
     """Bits per worker per step for the distributed sparse all-gather."""
-    return sparse_bits(d, k, bits_per_value)
+    return sparse_bits(d, k, value_bits(value_dtype))
 
 
 def reduction_factor(d: int, k: float, bits_per_value: int = 32) -> float:
     """Communication reduction vs dense SGD (the paper's headline d/k gain)."""
     return dense_bits(d, bits_per_value) / sparse_bits(d, k, bits_per_value)
+
+
+# ---------------------------------------------------------------------------
+# packed wire codec
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class WireSpec:
+    """Static layout of one packed wire message.
+
+    ``kind="sparse"``: k (value, row-local index) pairs per row.
+    ``kind="dense"``:  all cols values per row, no index section (used by
+    the delta stream for uncompressed dense buckets); ``k`` is ignored.
+    """
+
+    rows: int
+    cols: int
+    k: int
+    value_dtype: str = "float32"
+    kind: str = "sparse"
+
+    def __post_init__(self):
+        if self.value_dtype not in _DTYPE_CODES:
+            raise ValueError(
+                f"unsupported wire value dtype {self.value_dtype!r}"
+            )
+        if self.kind not in _KIND_CODES:
+            raise ValueError(f"unknown wire kind {self.kind!r}")
+        if self.kind == "sparse" and not 1 <= self.k <= self.cols:
+            raise ValueError(
+                f"k={self.k} out of range for cols={self.cols}"
+            )
+
+    # -- static layout ------------------------------------------------------
+
+    @property
+    def n_sel(self) -> int:
+        """Entries per row on the wire (k, or cols for dense messages)."""
+        return self.cols if self.kind == "dense" else self.k
+
+    @property
+    def index_bits(self) -> int:
+        return 0 if self.kind == "dense" else index_bits(self.cols)
+
+    @property
+    def value_bits(self) -> int:
+        return value_bits(self.value_dtype)
+
+    @property
+    def value_words(self) -> int:
+        """uint32 words per row for the value section."""
+        return -(-(self.n_sel * self.value_bits) // 32)
+
+    @property
+    def index_words(self) -> int:
+        """uint32 words per row for the packed index section."""
+        return -(-(self.n_sel * self.index_bits) // 32)
+
+    @property
+    def words(self) -> int:
+        return HEADER_WORDS + self.rows * (self.value_words + self.index_words)
+
+    @property
+    def nbytes(self) -> int:
+        """Exact bytes of the encoded buffer."""
+        return 4 * self.words
+
+    @property
+    def nbits(self) -> int:
+        return 32 * self.words
+
+    # -- self-describing header --------------------------------------------
+
+    def header(self) -> Array:
+        return jnp.array(
+            [MAGIC, VERSION, self.rows, self.cols, self.n_sel,
+             _DTYPE_CODES[self.value_dtype], _KIND_CODES[self.kind], 0],
+            jnp.uint32,
+        )
+
+    @classmethod
+    def from_header(cls, buf) -> "WireSpec":
+        """Reconstruct the spec from a received buffer's header words
+        (host-side; the payload layout is fully determined by it)."""
+        import numpy as np
+
+        h = np.asarray(buf[:HEADER_WORDS], dtype=np.uint32)
+        if int(h[0]) != MAGIC or int(h[1]) != VERSION:
+            raise ValueError(
+                f"bad wire header magic/version {h[0]:#x}/{h[1]}"
+            )
+        return cls(
+            rows=int(h[2]), cols=int(h[3]), k=int(h[4]),
+            value_dtype=_DTYPE_NAMES[int(h[5])],
+            kind=_KIND_NAMES[int(h[6])],
+        )
+
+
+def _pack_bits(ints: Array, nbits: int, words: int) -> Array:
+    """(R, n) non-negative ints -> (R, words) uint32, an LSB-first bit
+    stream of nbits-wide fields (vectorized shift/mask, no loop over n)."""
+    rows, n = ints.shape
+    bitpos = jnp.arange(nbits, dtype=jnp.uint32)
+    bits = (ints.astype(jnp.uint32)[:, :, None] >> bitpos) & jnp.uint32(1)
+    flat = bits.reshape(rows, n * nbits)
+    pad = words * 32 - n * nbits
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    lanes = flat.reshape(rows, words, 32)
+    shift = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(lanes << shift, axis=-1, dtype=jnp.uint32)
+
+
+def _unpack_bits(packed: Array, nbits: int, n: int) -> Array:
+    """(R, words) uint32 -> (R, n) uint32, inverse of ``_pack_bits``."""
+    rows, words = packed.shape
+    shift = jnp.arange(32, dtype=jnp.uint32)
+    bits = (packed[:, :, None] >> shift) & jnp.uint32(1)
+    fields = bits.reshape(rows, words * 32)[:, : n * nbits]
+    fields = fields.reshape(rows, n, nbits)
+    bitpos = jnp.arange(nbits, dtype=jnp.uint32)
+    return jnp.sum(fields << bitpos, axis=-1, dtype=jnp.uint32)
+
+
+def _pack_values(spec: WireSpec, vals: Array) -> Array:
+    """(R, n_sel) values -> (R, value_words) uint32 (bitcast; bf16 packs
+    two values per word, low half first)."""
+    v = vals.astype(jnp.dtype(spec.value_dtype))
+    if spec.value_dtype == "float32":
+        return jax.lax.bitcast_convert_type(v, jnp.uint32)
+    u16 = jax.lax.bitcast_convert_type(v, jnp.uint16).astype(jnp.uint32)
+    pad = 2 * spec.value_words - spec.n_sel
+    if pad:
+        u16 = jnp.pad(u16, ((0, 0), (0, pad)))
+    pairs = u16.reshape(vals.shape[0], spec.value_words, 2)
+    return pairs[..., 0] | (pairs[..., 1] << jnp.uint32(16))
+
+
+def _unpack_values(spec: WireSpec, packed: Array) -> Array:
+    """(R, value_words) uint32 -> (R, n_sel) values in the wire dtype."""
+    if spec.value_dtype == "float32":
+        return jax.lax.bitcast_convert_type(packed, jnp.float32)
+    lo = packed & jnp.uint32(0xFFFF)
+    hi = packed >> jnp.uint32(16)
+    u16 = jnp.stack([lo, hi], axis=-1).reshape(packed.shape[0], -1)
+    u16 = u16[:, : spec.n_sel].astype(jnp.uint16)
+    return jax.lax.bitcast_convert_type(u16, jnp.bfloat16)
+
+
+def encode(spec: WireSpec, vals: Array, idx: Optional[Array] = None) -> Array:
+    """(values (rows, k), indices (rows, k)) -> flat uint32 wire buffer
+    of exactly ``spec.words`` words (see the module docstring for the
+    layout). For ``kind="dense"`` pass the (rows, cols) values only."""
+    if vals.shape != (spec.rows, spec.n_sel):
+        raise ValueError(
+            f"values shape {vals.shape} != {(spec.rows, spec.n_sel)}"
+        )
+    sections = [spec.header(), _pack_values(spec, vals).reshape(-1)]
+    if spec.kind == "sparse":
+        if idx is None:
+            raise ValueError("sparse wire message needs indices")
+        if idx.shape != (spec.rows, spec.k):
+            raise ValueError(
+                f"index shape {idx.shape} != {(spec.rows, spec.k)}"
+            )
+        sections.append(
+            _pack_bits(idx, spec.index_bits, spec.index_words).reshape(-1)
+        )
+    return jnp.concatenate(sections)
+
+
+def decode(spec: WireSpec, buf: Array) -> Tuple[Array, Optional[Array]]:
+    """Inverse of ``encode``: wire buffer -> (values (rows, n_sel) in the
+    wire dtype, indices (rows, k) int32 | None for dense messages)."""
+    if buf.shape != (spec.words,):
+        raise ValueError(f"buffer shape {buf.shape} != {(spec.words,)}")
+    off = HEADER_WORDS
+    nv = spec.rows * spec.value_words
+    vals = _unpack_values(
+        spec, buf[off : off + nv].reshape(spec.rows, spec.value_words)
+    )
+    if spec.kind == "dense":
+        return vals, None
+    ni = spec.rows * spec.index_words
+    packed_idx = buf[off + nv : off + nv + ni].reshape(
+        spec.rows, spec.index_words
+    )
+    idx = _unpack_bits(packed_idx, spec.index_bits, spec.k)
+    return vals, idx.astype(jnp.int32)

@@ -1,0 +1,140 @@
+"""Trainer -> serving-replica parameter deltas over the packed wire.
+
+A serving replica only needs the per-step change of the parameters, and
+under Mem-SGD that change IS the sparse bucket message: the applied
+update is the densified mean of the workers' top-k selections, so its
+support per (rows, cols) bucket row is at most ``W * k_row`` entries
+(``n_pods * k_pod`` for hierarchical sync). Re-selecting top-k' of the
+update buffer with k' = that support bound therefore captures EVERY
+nonzero, and streaming it through ``repro.core.encoding`` costs
+``k' * (value_bits + ceil(log2 cols))`` bits per row instead of a full
+dense parameter broadcast — the same d/k reduction the training sync
+enjoys, now on the trainer->replica refresh path.
+
+Exactness: the replica re-applies ``p - u.astype(p.dtype)`` with the
+bit-identical ``u`` the trainer subtracted (f32 wire values), so replica
+parameters track trainer parameters bitwise step by step. Dense buckets
+(norm scales, biases) stream uncompressed through a ``kind="dense"``
+wire message. With ``value_dtype="bfloat16"`` the stream is lossy
+(rounded values) but half the size — a knob for bandwidth-starved
+replica fleets.
+
+All specs are static; ``encode_delta``/``decode_delta``/``apply_delta``
+are jit-compatible and run inside the train step / serve step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import buckets as bk
+from repro.core import encoding as enc
+from repro.core.distributed import SyncConfig, _row_scatter, _row_topk
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaSpec:
+    """Static wire layout of one trainer->replica delta message: one
+    ``WireSpec`` per bucket of the training ``BucketPlan``."""
+
+    plan: bk.BucketPlan
+    wires: Tuple[enc.WireSpec, ...]
+
+    @property
+    def nbytes(self) -> int:
+        """Exact bytes per streamed step."""
+        return sum(w.nbytes for w in self.wires)
+
+    @property
+    def dense_nbytes(self) -> int:
+        """Bytes a dense f32 parameter broadcast would cost."""
+        return sum(s.rows * s.cols * 4 for s in self.plan.buckets)
+
+
+def make_delta_spec(
+    plan: bk.BucketPlan,
+    cfg: SyncConfig,
+    workers: int,
+    n_pods: int = 1,
+    value_dtype: str = "float32",
+) -> DeltaSpec:
+    """Derive the per-bucket wire layout from the training sync config.
+
+    ``workers``/``n_pods`` bound the update support per row (see module
+    docstring); ``value_dtype="float32"`` keeps the stream bitwise-exact.
+    """
+    wires: List[enc.WireSpec] = []
+    for spec in plan.buckets:
+        if cfg.strategy == "dense" or spec.kind == "dense":
+            wires.append(
+                enc.WireSpec(spec.rows, spec.cols, spec.cols, value_dtype,
+                             kind="dense")
+            )
+            continue
+        if cfg.strategy == "hierarchical" and cfg.pod_axis is not None:
+            support = n_pods * cfg.pod_k_for(spec.cols)
+        else:
+            support = workers * cfg.k_for(spec.cols)
+        wires.append(
+            enc.WireSpec(spec.rows, spec.cols, min(spec.cols, support),
+                         value_dtype)
+        )
+    return DeltaSpec(plan=plan, wires=tuple(wires))
+
+
+def encode_delta_bufs(dspec: DeltaSpec, bufs: Sequence[Array]) -> List[Array]:
+    """Bucket-space update buffers (e.g. from
+    ``bucketed_sync_gradients(..., return_bufs=True)``) -> one uint32
+    wire buffer per bucket. Sparse buckets re-select top-k' per row;
+    since k' bounds the update's support this captures every nonzero
+    entry exactly (extra slots carry zeros, which scatter as no-ops)."""
+    out = []
+    for wspec, buf in zip(dspec.wires, bufs):
+        buf = buf.astype(jnp.float32)
+        if wspec.kind == "dense":
+            out.append(enc.encode(wspec, buf))
+        else:
+            vals, idx = _row_topk(buf, wspec.k)
+            out.append(enc.encode(wspec, vals, idx))
+    return out
+
+
+def encode_delta(dspec: DeltaSpec, update_tree) -> List[Array]:
+    """Update pytree (the tree the trainer subtracts from params) -> wire
+    buffers. Packs the tree into bucket space first; prefer
+    ``encode_delta_bufs`` when the bucket buffers already exist."""
+    return encode_delta_bufs(
+        dspec, bk.pack(dspec.plan, update_tree, dtype=jnp.float32)
+    )
+
+
+def decode_delta(dspec: DeltaSpec, msgs: Sequence[Array]):
+    """Wire buffers -> dense f32 update pytree (exact on the support)."""
+    bufs = []
+    for wspec, msg in zip(dspec.wires, msgs):
+        vals, idx = enc.decode(wspec, msg)
+        if wspec.kind == "dense":
+            bufs.append(vals.astype(jnp.float32))
+        else:
+            bufs.append(
+                _row_scatter(
+                    (wspec.rows, wspec.cols), vals.astype(jnp.float32),
+                    idx, jnp.float32,
+                )
+            )
+    return bk.unpack(dspec.plan, bufs)
+
+
+def apply_delta(params, dspec: DeltaSpec, msgs: Sequence[Array]):
+    """One replica refresh step: ``params - decode(msgs)`` leaf-wise —
+    the identical subtraction the trainer performed, so an f32 stream
+    keeps replica params bitwise equal to trainer params."""
+    update = decode_delta(dspec, msgs)
+    return jax.tree.map(
+        lambda p, u: (p - u.astype(p.dtype)), params, update
+    )

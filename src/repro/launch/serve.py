@@ -4,6 +4,11 @@
 cache of ``seq_len`` (the assigned decode shapes) and returns greedy next
 tokens. No shard_map needed: decode is pure model-parallel + batch-parallel
 GSPMD (Mem-SGD is a training-time technique; see DESIGN.md).
+
+Replica parameter refresh: ``apply_delta`` consumes the trainer's packed
+per-step delta messages (``repro.launch.delta_stream``) so replicas track
+training without dense parameter broadcasts — see DESIGN.md for the wire
+format.
 """
 from __future__ import annotations
 
@@ -95,6 +100,17 @@ def make_prefill_step(model, mesh, shape_cfg, moe_ep: bool = False):
                 shd.reset_moe_sharding(tok)
 
     return jax.jit(step), pshard, batch_shardings
+
+
+def apply_delta(params, dspec, msgs):
+    """Refresh serving params from one trainer delta message (packed
+    sparse wire buffers; see ``repro.launch.delta_stream``). Bitwise
+    reproduces the trainer's own parameter update for f32 streams.
+    jit-compatible; safe to fold into the serving loop between decode
+    steps."""
+    from repro.launch.delta_stream import apply_delta as _apply
+
+    return _apply(params, dspec, msgs)
 
 
 def decode_loop(model, mesh, params, prompts: Array, n_tokens: int,

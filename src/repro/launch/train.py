@@ -54,6 +54,13 @@ class TrainConfig:
     seq_shard_activations: bool = False  # Megatron-style sequence parallel
     microbatch: int = 1  # gradient accumulation over the local batch
     moe_ep_constraints: bool = False  # expert-parallel a2a dispatch
+    # Emit the applied update as packed per-bucket delta messages for
+    # serving replicas (repro.launch.delta_stream). Requires
+    # sync.bucketed and optimizer="memsgd"/"dense" (the only modes whose
+    # parameter delta equals the synced update). The step then returns a
+    # sixth output: a tuple of uint32 wire buffers.
+    emit_deltas: bool = False
+    delta_value_dtype: str = "float32"  # bf16 halves the stream (lossy)
 
 
 def _eta_schedule(tc: TrainConfig):
@@ -169,6 +176,21 @@ def make_train_step(model, mesh, tc: TrainConfig):
     )
     worker = data_axes if len(data_axes) > 1 else data_axes[0]
     batch_spec = P(worker)
+    dspec = None
+    if tc.emit_deltas:
+        if plan is None or tc.optimizer not in ("memsgd", "dense"):
+            raise ValueError(
+                "emit_deltas requires sync.bucketed and a plain memsgd/"
+                "dense optimizer (the parameter delta must equal the "
+                "synced update)"
+            )
+        from repro.launch import delta_stream as ds
+
+        dspec = ds.make_delta_spec(
+            plan, sync_cfg, workers=W,
+            n_pods=dict(mesh.shape).get("pod", 1),
+            value_dtype=tc.delta_value_dtype,
+        )
 
     def local_loss(params, batch):
         loss, metrics = model.loss(params, batch)
@@ -235,7 +257,12 @@ def make_train_step(model, mesh, tc: TrainConfig):
             eta = eta_fn(count)
         else:  # adam_compressed: memory accumulates raw gradients
             eta = jnp.asarray(1.0, jnp.float32)
-        if plan is not None:
+        up_bufs = None
+        if plan is not None and dspec is not None:
+            update, new_mem, _, up_bufs = bucketed_sync_gradients(
+                sync_cfg, plan, mem_local, grads, eta, return_bufs=True
+            )
+        elif plan is not None:
             update, new_mem, _ = bucketed_sync_gradients(
                 sync_cfg, plan, mem_local, grads, eta
             )
@@ -288,7 +315,14 @@ def make_train_step(model, mesh, tc: TrainConfig):
             "aux": jax.lax.pmean(metrics["aux"], data_axes
                                  if len(data_axes) > 1 else data_axes[0]),
         }
-        return new_params, new_memory, new_opt, count + 1, out_metrics
+        ret = (new_params, new_memory, new_opt, count + 1, out_metrics)
+        if dspec is not None:
+            # the gathered update is identical on every worker, so the
+            # encoded wire buffers are replicated outputs (out_spec P())
+            from repro.launch import delta_stream as ds
+
+            ret += (tuple(ds.encode_delta_bufs(dspec, up_bufs)),)
+        return ret
 
     pspec_P0 = jax.tree.map(lambda s: P(), pspecs,
                             is_leaf=lambda x: isinstance(x, P))
@@ -311,20 +345,27 @@ def make_train_step(model, mesh, tc: TrainConfig):
     def batch_specs(batch_tree):
         return jax.tree.map(lambda _: batch_spec, batch_tree)
 
+    out_specs = (pspec_P0, mem_manual, opt_in, P(),
+                 {"loss": P(), "aux": P()})
+    if dspec is not None:
+        out_specs += (tuple(P() for _ in dspec.wires),)
+
     def step(params, memory, opt, count, batch):
         sm = compat.shard_map(
             step_body,
             mesh=mesh,
             in_specs=(pspec_P0, mem_manual, opt_in, P(),
                       batch_specs(batch)),
-            out_specs=(pspec_P0, mem_manual, opt_in, P(),
-                       {"loss": P(), "aux": P()}),
+            out_specs=out_specs,
             axis_names=set(data_axes),
             check_vma=False,
         )
         return sm(params, memory, opt, count, batch)
 
-    return jax.jit(step, donate_argnums=(0, 1, 2))
+    step = jax.jit(step, donate_argnums=(0, 1, 2))
+    if dspec is not None:
+        step.delta_spec = dspec  # static wire layout for replica decoders
+    return step
 
 
 # ---------------------------------------------------------------------------
@@ -334,9 +375,15 @@ def make_train_step(model, mesh, tc: TrainConfig):
 
 def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
           checkpointer=None, ckpt_every: int = 0, log_every: int = 10,
-          rng=None):
+          rng=None, delta_sink=None):
     """End-to-end training loop. ``batches``: iterator of device-ready
-    global batches (see repro.data.pipeline.ShardedBatcher)."""
+    global batches (see repro.data.pipeline.ShardedBatcher).
+
+    With ``tc.emit_deltas``, ``delta_sink(step_index, wire_msgs)`` is
+    called with the packed per-bucket delta buffers each step (decode
+    them against ``make_train_step(...).delta_spec`` — see
+    ``repro.launch.delta_stream``).
+    """
     params, memory, opt, count = init_train_state(model, mesh, tc, rng=rng)
     pshard, mshard, oshard, cshard = state_shardings(model, mesh, tc)
     params = jax.device_put(params, pshard)
@@ -348,9 +395,13 @@ def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
     for i, batch in enumerate(batches):
         if i >= n_steps:
             break
-        params, memory, opt, count, metrics = step(
-            params, memory, opt, count, batch
-        )
+        out = step(params, memory, opt, count, batch)
+        if tc.emit_deltas:
+            params, memory, opt, count, metrics, delta = out
+            if delta_sink is not None:
+                delta_sink(i, delta)
+        else:
+            params, memory, opt, count, metrics = out
         if log_every and (i % log_every == 0 or i == n_steps - 1):
             loss = float(metrics["loss"])
             history.append((i, loss))
@@ -384,6 +435,12 @@ def main():
     ap.add_argument("--strategy", default="sparse_allgather")
     ap.add_argument("--bucketed", action="store_true",
                     help="flat-buffer bucketed sync (repro.core.buckets)")
+    ap.add_argument("--wire", default="unpacked",
+                    choices=("unpacked", "packed"),
+                    help="sync wire format (repro.core.encoding)")
+    ap.add_argument("--emit-deltas", action="store_true",
+                    help="stream packed parameter deltas for serving "
+                         "replicas (implies --bucketed)")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--ckpt-dir", default="")
@@ -393,15 +450,29 @@ def main():
     cfg = get_smoke_config(args.arch)
     model = build_model(cfg)
     tc = TrainConfig(optimizer=args.optimizer, eta=args.eta,
+                     emit_deltas=args.emit_deltas,
                      sync=SyncConfig(ratio=args.ratio,
                                      strategy=args.strategy,
-                                     bucketed=args.bucketed))
+                                     wire=args.wire,
+                                     bucketed=args.bucketed
+                                     or args.emit_deltas))
     batches = ShardedBatcher(
         mesh, token_batches(cfg.vocab_size, args.batch, args.seq, seed=0)
     )
     ck = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+    streamed = [0]
+    sink = None
+    if args.emit_deltas:
+        sink = lambda i, msgs: streamed.__setitem__(
+            0, streamed[0] + sum(m.nbytes for m in msgs))
     train(model, mesh, tc, batches, n_steps=args.steps, checkpointer=ck,
-          ckpt_every=max(1, args.steps // 2))
+          ckpt_every=max(1, args.steps // 2), delta_sink=sink)
+    if args.emit_deltas:
+        dense = sum(
+            p.size * 4 for p in jax.tree.leaves(model.param_shapes())
+        ) * args.steps
+        print(f"delta stream: {streamed[0]/1e6:.2f} MB over {args.steps} "
+              f"steps (dense refresh would be {dense/1e6:.2f} MB)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,344 @@
+"""Packed sparse wire codec + delta stream tests (repro.core.encoding,
+repro.launch.delta_stream).
+
+Multi-worker cases run in a subprocess with 8 fake CPU devices (same
+contract as test_distributed.py)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import buckets as bk
+from repro.core import encoding as enc
+from repro.core.distributed import SyncConfig, bucketed_message_bytes
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _pairs(rows, cols, k, value_dtype, seed=0):
+    """Random (vals, idx) in the shapes the codec expects (idx need not
+    be distinct — the codec is agnostic)."""
+    kv, ki = jax.random.split(jax.random.PRNGKey(seed))
+    vals = jax.random.normal(kv, (rows, k)).astype(jnp.dtype(value_dtype))
+    idx = jax.random.randint(ki, (rows, k), 0, cols).astype(jnp.int32)
+    return vals, idx
+
+
+def _assert_roundtrip(spec, vals, idx):
+    buf = jax.jit(lambda v, i: enc.encode(spec, v, i))(vals, idx)
+    assert buf.dtype == jnp.uint32
+    assert buf.shape == (spec.words,)
+    v2, i2 = jax.jit(lambda b: enc.decode(spec, b))(buf)
+    np.testing.assert_array_equal(np.asarray(i2), np.asarray(idx))
+    # values round-trip BITWISE in the wire dtype
+    want = np.asarray(vals.astype(jnp.dtype(spec.value_dtype)))
+    got = np.asarray(v2)
+    assert got.dtype == want.dtype
+    assert np.array_equal(
+        got.view(np.uint8), want.view(np.uint8)
+    ), "wire values not bitwise-identical"
+    return buf
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    rows=st.integers(min_value=1, max_value=7),
+    # ordered so the no-hypothesis fallback sweep (first 5 samples) still
+    # covers pow2, non-pow2, tiny and cols=1 shapes
+    cols=st.sampled_from([1024, 700, 3, 1, 17, 2, 100, 1000]),
+    k_mode=st.sampled_from(["one", "interior", "full"]),
+    value_dtype=st.sampled_from(["float32", "bfloat16"]),
+)
+def test_roundtrip_property(rows, cols, k_mode, value_dtype):
+    """decode(encode(v, i)) == (v, i) for non-power-of-two cols and the
+    k=1 / k=cols edges, f32 and bf16 values."""
+    k = {"one": 1, "interior": max(1, cols // 3), "full": cols}[k_mode]
+    spec = enc.WireSpec(rows, cols, k, value_dtype)
+    vals, idx = _pairs(rows, cols, k, value_dtype, seed=rows * cols + k)
+    _assert_roundtrip(spec, vals, idx)
+
+
+def test_roundtrip_tie_heavy_topk_selection():
+    """Tie-heavy input through a real per-row top-k: the selected pairs
+    survive the wire bitwise (including repeated magnitudes and signs)."""
+    from repro.kernels.ref import row_topk_ref
+
+    R, C, k = 6, 257, 16
+    u = jnp.round(jax.random.normal(jax.random.PRNGKey(3), (R, C)) * 2) / 2
+    vals, idx = row_topk_ref(u, k)
+    spec = enc.WireSpec(R, C, k, "float32")
+    _assert_roundtrip(spec, vals, idx)
+
+
+def test_roundtrip_special_values():
+    """Denormals, zeros, infs and extreme indices survive the wire."""
+    C = 1000
+    vals = jnp.array(
+        [[0.0, -0.0, 1e-40, -1e-40, jnp.inf, -jnp.inf, 3.14, -2.5]],
+        jnp.float32,
+    )
+    idx = jnp.array([[0, C - 1, 1, C - 2, 511, 512, 3, 999]], jnp.int32)
+    spec = enc.WireSpec(1, C, 8, "float32")
+    _assert_roundtrip(spec, vals, idx)
+
+
+def test_header_is_self_describing():
+    spec = enc.WireSpec(5, 300, 7, "bfloat16")
+    vals, idx = _pairs(5, 300, 7, "bfloat16")
+    buf = enc.encode(spec, vals, idx)
+    assert enc.WireSpec.from_header(np.asarray(buf)) == spec
+
+
+def test_dense_kind_roundtrip():
+    spec = enc.WireSpec(2, 77, 77, "float32", kind="dense")
+    vals = jax.random.normal(jax.random.PRNGKey(1), (2, 77))
+    buf = enc.encode(spec, vals)
+    v2, i2 = enc.decode(spec, buf)
+    assert i2 is None
+    np.testing.assert_array_equal(np.asarray(v2), np.asarray(vals))
+
+
+# -- accounting == what the codec actually emits ------------------------------
+
+
+def test_wirespec_accounting_matches_encoded_bytes():
+    for rows, cols, k, vd in [
+        (64, 1024, 64, "float32"),
+        (64, 1024, 64, "bfloat16"),
+        (3, 700, 5, "bfloat16"),
+        (1, 1, 1, "float32"),
+    ]:
+        spec = enc.WireSpec(rows, cols, k, vd)
+        vals, idx = _pairs(rows, cols, k, vd)
+        buf = enc.encode(spec, vals, idx)
+        encoded_bits = buf.size * buf.dtype.itemsize * 8
+        assert spec.nbits == encoded_bits
+        assert spec.nbytes * 8 == encoded_bits
+
+
+def test_bucketed_message_bytes_matches_encoded_buffers():
+    """The static accounting equals the realized bytes of the buffers the
+    packed sync would all-gather (per-bucket row-local index_bits)."""
+    tree = {
+        "w": jax.random.normal(jax.random.PRNGKey(0), (100, 300)),
+        "h": jax.random.normal(jax.random.PRNGKey(1), (220, 90)).astype(
+            jnp.bfloat16
+        ),
+        "b": jax.random.normal(jax.random.PRNGKey(2), (40,)),
+    }
+    plan = bk.make_plan(tree, cols=512)
+    for vd in ("float32", "bfloat16"):
+        cfg = SyncConfig(ratio=0.02, wire="packed", value_dtype=vd,
+                         bucketed=True, bucket_cols=512)
+        realized = 0
+        for spec in plan.buckets:
+            if spec.kind == "dense":
+                realized += spec.rows * spec.cols * 4
+                continue
+            k = cfg.k_for(spec.cols)
+            wspec = enc.WireSpec(spec.rows, spec.cols, k, vd)
+            vals, idx = _pairs(spec.rows, spec.cols, k, vd)
+            realized += enc.encode(wspec, vals, idx).size * 4
+        assert bucketed_message_bytes(cfg, plan) == realized
+        # packed accounting uses the bucket's ceil(log2 cols), not 32
+        unpacked = bucketed_message_bytes(
+            SyncConfig(ratio=0.02, value_dtype=vd, bucketed=True,
+                       bucket_cols=512), plan)
+        assert bucketed_message_bytes(cfg, plan) < unpacked
+
+
+def test_sparse_bits_accounts_value_dtype():
+    assert enc.value_bits("bfloat16") == 16
+    assert enc.value_bits(jnp.float32) == 32
+    assert enc.sparse_bits(2**16, 10, enc.value_bits("bfloat16")) == 10 * (
+        16 + 16
+    )
+    assert enc.memsgd_message_bits(2**16, 10, "bfloat16") == 10 * (16 + 16)
+    assert enc.memsgd_message_bits(2**16, 10) == 10 * (32 + 16)
+
+
+def test_message_bytes_packed_smaller_than_unpacked():
+    from repro.core.distributed import message_bytes
+
+    params = {"w": jnp.zeros((128, 1024))}
+    base = SyncConfig(ratio=64 / 1024)
+    packed = message_bytes(
+        SyncConfig(ratio=64 / 1024, wire="packed",
+                   value_dtype="bfloat16"), params)
+    assert packed * 1.8 <= message_bytes(base, params)
+
+
+# -- packed sync == unpacked sync, end to end ---------------------------------
+
+
+def _run_subprocess(body: str) -> dict:
+    script = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys, json
+        sys.path.insert(0, {src!r})
+        import jax, jax.numpy as jnp
+        import numpy as np
+        """
+    ).format(src=SRC) + textwrap.dedent(body)
+    out = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        timeout=560,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+def test_packed_sync_identical_to_unpacked():
+    """Packed-wire sync is bit-identical to the unpacked path on an
+    8-worker mesh: bucketed for both value dtypes, plus the leaf-wise
+    path (flat + hierarchical share the same leaf sync functions)."""
+    rec = _run_subprocess(
+        """
+        import dataclasses
+        from repro.core import buckets as bk
+        from repro.core.distributed import (SyncConfig,
+                                            bucketed_sync_gradients,
+                                            sparse_sync_gradients)
+        from repro.utils.compat import make_mesh, shard_map
+        from jax.sharding import PartitionSpec as P
+
+        tree = {
+            "w1": jax.random.normal(jax.random.PRNGKey(0), (8, 100, 300)),
+            "w2": jax.random.normal(jax.random.PRNGKey(1), (8, 450, 40)),
+            "b": jax.random.normal(jax.random.PRNGKey(2), (8, 64)),
+        }
+        plan = bk.make_plan(jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), tree),
+            cols=512)
+
+        def run(cfg, mesh, axes):
+            W = 8
+            mem = tuple(jnp.zeros((W,) + s.shape, jnp.float32)
+                        for s in plan.buckets)
+            def body(mem, tree):
+                mem = jax.tree.map(lambda m: m[0], mem)
+                tree = jax.tree.map(lambda t: t[0], tree)
+                upd, new_mem, _ = bucketed_sync_gradients(
+                    cfg, plan, mem, tree, jnp.float32(0.3))
+                return upd, jax.tree.map(lambda m: m[None], new_mem)
+            spec_w = jax.tree.map(lambda _: P(axes), mem)
+            return shard_map(
+                body, mesh=mesh,
+                in_specs=(spec_w, jax.tree.map(lambda _: P(axes), tree)),
+                out_specs=(jax.tree.map(lambda _: P(), {k: 0 for k in tree}),
+                           spec_w),
+                axis_names=set(mesh.axis_names))(mem, tree)
+
+        def bitwise(a, b):
+            return all(
+                np.array_equal(np.asarray(x).view(np.uint8),
+                               np.asarray(y).view(np.uint8))
+                for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+        results = {}
+        flat_mesh = make_mesh((8,), ("data",))
+        pod_mesh = make_mesh((2, 4), ("pod", "data"))
+        for vd in ("float32", "bfloat16"):
+            base = SyncConfig(ratio=0.02, bucketed=True, bucket_cols=512,
+                              value_dtype=vd)
+            for label, cfg, mesh, axes in (
+                ("flat", base, flat_mesh, "data"),
+                ("hier", dataclasses.replace(
+                    base, strategy="hierarchical", pod_axis="pod",
+                    pod_ratio=0.01), pod_mesh, ("pod", "data")),
+            ):
+                u1, m1 = run(cfg, mesh, axes)
+                u2, m2 = run(dataclasses.replace(cfg, wire="packed"),
+                             mesh, axes)
+                results[f"{label}_{vd}"] = bool(
+                    bitwise(u1, u2) and bitwise(m1, m2))
+
+        # leaf-wise path (no buckets): batched layout, flat strategy
+        def run_leaf(cfg):
+            mem0 = jax.tree.map(
+                lambda t: jnp.zeros(t.shape[1:], jnp.float32), tree)
+            def body(tree):
+                tree = jax.tree.map(lambda t: t[0], tree)
+                return sparse_sync_gradients(
+                    cfg, mem0, tree, jnp.float32(0.3))[:2]
+            return shard_map(
+                body, mesh=flat_mesh,
+                in_specs=(jax.tree.map(lambda _: P("data"), tree),),
+                out_specs=(jax.tree.map(lambda _: P(), tree),) * 2,
+                axis_names={"data"})(tree)
+
+        leaf_cfg = SyncConfig(ratio=0.02, dense_below=256)
+        u1, m1 = run_leaf(leaf_cfg)
+        u2, m2 = run_leaf(dataclasses.replace(leaf_cfg, wire="packed"))
+        results["leafwise_float32"] = bool(bitwise(u1, u2)
+                                           and bitwise(m1, m2))
+        print(json.dumps(results))
+        """
+    )
+    assert all(rec.values()), rec
+
+
+@pytest.mark.slow
+def test_delta_stream_replica_tracks_trainer_bitwise():
+    """3 trainer steps with emit_deltas; streaming the packed deltas to a
+    fresh replica reproduces the trainer's params bitwise."""
+    rec = _run_subprocess(
+        """
+        from repro.configs import get_smoke_config
+        from repro.models import build_model
+        from repro.launch.mesh import make_debug_mesh
+        from repro.launch.train import (TrainConfig, make_train_step,
+                                        init_train_state, state_shardings)
+        from repro.launch.serve import apply_delta
+        from repro.core.distributed import SyncConfig
+        from repro.data import token_batches
+        from repro.data.pipeline import ShardedBatcher
+
+        mesh = make_debug_mesh(4, 1)
+        cfg = get_smoke_config("rwkv6-3b")
+        model = build_model(cfg)
+        tc = TrainConfig(optimizer="memsgd", eta=0.5, emit_deltas=True,
+                         sync=SyncConfig(ratio=0.02, bucketed=True,
+                                         wire="packed",
+                                         selection="threshold_onehot"))
+        params, memory, opt, count = init_train_state(
+            model, mesh, tc, rng=jax.random.PRNGKey(0))
+        replica = jax.tree.map(lambda x: jnp.array(np.asarray(x)), params)
+        pshard, mshard, _, _ = state_shardings(model, mesh, tc)
+        params = jax.device_put(params, pshard)
+        memory = jax.device_put(memory, mshard)
+        step = make_train_step(model, mesh, tc)
+        dspec = step.delta_spec
+        it = ShardedBatcher(mesh, token_batches(cfg.vocab_size, 8, 32,
+                            seed=1), prefetch=0)
+        streamed = 0
+        for i, batch in enumerate(it):
+            if i >= 3: break
+            params, memory, opt, count, m, delta = step(
+                params, memory, opt, count, batch)
+            assert sum(b.size * 4 for b in delta) == dspec.nbytes
+            streamed += dspec.nbytes
+            replica = apply_delta(replica, dspec, delta)
+        bitwise = all(
+            np.array_equal(np.asarray(a).view(np.uint8),
+                           np.asarray(b).view(np.uint8))
+            for a, b in zip(jax.tree.leaves(params),
+                            jax.tree.leaves(replica)))
+        print(json.dumps({"bitwise": bool(bitwise),
+                          "streamed": streamed,
+                          "dense": dspec.dense_nbytes * 3}))
+        """
+    )
+    assert rec["bitwise"]
+    assert rec["streamed"] * 4 < rec["dense"]
