@@ -1,0 +1,200 @@
+"""Bench regression gate: fresh BENCH_*.json vs committed baselines.
+
+CI stashes the committed baselines, re-runs ``benchmarks/run.py
+kernel_topk wire_codec fanout`` (which overwrite the repo-root
+``BENCH_*.json``), then runs this checker. A check FAILS when:
+
+* throughput regresses: the wire codec's raw encode/decode ``*_us``
+  timings are gated at ``--max-slowdown`` (default 1.15 — a >15% drop
+  fails on a like-for-like machine; CI passes a wider budget because
+  runner wall-clock is not comparable to the committed baseline's
+  machine and even same-machine runs swing ~30% — the raw-us gate is a
+  coarse net for order-of-magnitude regressions such as losing the
+  jit). The kernel benches are gated on their MACHINE-NORMALIZED
+  speedups (single-pass vs the k-loop oracle measured in the same run)
+  at ``--kernel-retention`` (default 0.5: fail when the speedup
+  halves), sized to the ~40% run-to-run variance of interpret-mode
+  Pallas timings — a real regression (the single-pass kernel losing
+  its edge over the loop) blows through 0.5 immediately;
+* a wire byte ratio regresses: packed-vs-unpacked, fan-out-vs-dense or
+  snapshot-vs-dense shrinks below the baseline (deterministic layouts:
+  compared with 0.1% float slack, no timing noise);
+* a correctness bit recorded in the payload flipped
+  (``bitwise_equal``, ``roundtrip_exact``, snapshot ``exact``);
+* a tracked key present in the baseline disappears from the fresh
+  payload (a renamed metric must not silently disable its gate).
+
+Baselines that do not exist yet (a bench added in the same PR) are
+skipped with a warning so the gate never blocks its own introduction.
+
+Usage:
+    python benchmarks/check_regression.py --baseline-dir /tmp/bench-baseline
+        [--fresh-dir .] [--max-slowdown 1.15]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List
+
+RATIO_SLACK = 0.999  # deterministic byte ratios, float-serialization slack
+
+
+def _missing(fresh: dict, base: dict, key: str, label: str) -> List[str]:
+    """A key the baseline tracks must exist in the fresh payload —
+    renaming a metric must not silently disable its gate."""
+    if key in base and key not in fresh:
+        return [f"{label}: tracked key {key} missing from fresh payload"]
+    return []
+
+
+def _slower(fresh: dict, base: dict, key: str, max_slowdown: float,
+            label: str) -> List[str]:
+    if key not in base:
+        return []
+    if key not in fresh:
+        return _missing(fresh, base, key, label)
+    if fresh[key] > base[key] * max_slowdown:
+        return [
+            f"{label}: {key} {fresh[key]:.1f}us vs baseline "
+            f"{base[key]:.1f}us (> x{max_slowdown:.2f} slowdown)"
+        ]
+    return []
+
+
+def _ratio_regressed(fresh: dict, base: dict, key: str, label: str,
+                     slack: float = RATIO_SLACK) -> List[str]:
+    if key not in base:
+        return []
+    if key not in fresh:
+        return _missing(fresh, base, key, label)
+    if fresh[key] < base[key] * slack:
+        return [
+            f"{label}: {key} {fresh[key]:.3f} regressed vs baseline "
+            f"{base[key]:.3f}"
+        ]
+    return []
+
+
+def _flag_off(fresh: dict, base: dict, key: str, label: str) -> List[str]:
+    if key not in fresh:
+        return _missing(fresh, base, key, label)
+    if not fresh[key]:
+        return [f"{label}: correctness flag {key} is no longer true"]
+    return []
+
+
+def _fused_speedup(payload: dict) -> dict:
+    """Derive the fused kernel's loop-vs-single-pass speedup (same-run
+    normalized, like the payload's own ``speedup`` field)."""
+    if "fused_loop_us" in payload and "fused_singlepass_us" in payload:
+        return {"fused_speedup": payload["fused_loop_us"]
+                / payload["fused_singlepass_us"]}
+    return {}
+
+
+def check_topk(base: dict, fresh: dict, max_slowdown: float,
+               kernel_retention: float = 0.5) -> List[str]:
+    errs = _flag_off(fresh, base, "bitwise_equal", "kernel_topk")
+    # machine-normalized throughput: the single-pass kernels must retain
+    # their same-run speedup over the k-loop oracle (threshold sized to
+    # the ~40% interpret-mode variance — see module docstring)
+    errs += _ratio_regressed(fresh, base, "speedup", "kernel_topk",
+                             slack=kernel_retention)
+    errs += _ratio_regressed(
+        dict(fresh, **_fused_speedup(fresh)),
+        dict(base, **_fused_speedup(base)),
+        "fused_speedup", "kernel_topk", slack=kernel_retention,
+    )
+    return errs
+
+
+def check_wire(base: dict, fresh: dict, max_slowdown: float,
+               kernel_retention: float = 0.5) -> List[str]:
+    errs: List[str] = []
+    for vd in ("float32", "bfloat16"):
+        b, f = base.get(vd, {}), fresh.get(vd, {})
+        label = f"wire_codec[{vd}]"
+        errs += _flag_off(f, b, "roundtrip_exact", label)
+        errs += _ratio_regressed(f, b, "ratio_vs_unpacked", label)
+        errs += _ratio_regressed(f, b, "ratio_vs_dense", label)
+        for key in ("encode_us", "decode_us"):
+            errs += _slower(f, b, key, max_slowdown, label)
+    return errs
+
+
+def check_fanout(base: dict, fresh: dict, max_slowdown: float,
+                 kernel_retention: float = 0.5) -> List[str]:
+    errs: List[str] = []
+    for n, b in base.get("per_N", {}).items():
+        f = fresh.get("per_N", {}).get(n, {})
+        label = f"fanout[N={n}]"
+        if not f:
+            errs.append(f"{label}: missing from fresh run")
+            continue
+        errs += _ratio_regressed(f, b, "ratio_vs_dense", label)
+        errs += _ratio_regressed(f, b, "publisher_ratio_vs_dense", label)
+    bs, fs = base.get("snapshot", {}), fresh.get("snapshot", {})
+    errs += _ratio_regressed(fs, bs, "ratio_vs_dense", "fanout[snapshot]")
+    errs += _flag_off(fs, bs, "exact", "fanout[snapshot]")
+    return errs
+
+
+CHECKS = {
+    "BENCH_topk.json": check_topk,
+    "BENCH_wire.json": check_wire,
+    "BENCH_fanout.json": check_fanout,
+}
+
+
+def run(baseline_dir: str, fresh_dir: str, max_slowdown: float,
+        kernel_retention: float = 0.5) -> List[str]:
+    errors: List[str] = []
+    for fname, checker in CHECKS.items():
+        bpath = os.path.join(baseline_dir, fname)
+        fpath = os.path.join(fresh_dir, fname)
+        if not os.path.exists(bpath):
+            print(f"[gate] no baseline {fname} — skipping (new bench?)")
+            continue
+        if not os.path.exists(fpath):
+            errors.append(f"{fname}: fresh run produced no file at {fpath}")
+            continue
+        with open(bpath) as f:
+            base = json.load(f)
+        with open(fpath) as f:
+            fresh = json.load(f)
+        errs = checker(base, fresh, max_slowdown, kernel_retention)
+        status = "FAIL" if errs else "ok"
+        print(f"[gate] {fname}: {status}")
+        errors += errs
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline-dir", required=True,
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--fresh-dir", default=".",
+                    help="directory the bench run wrote into (repo root)")
+    ap.add_argument("--max-slowdown", type=float, default=1.15,
+                    help="fail when a tracked timing grows beyond this "
+                         "factor (1.15 == >15%% throughput drop)")
+    ap.add_argument("--kernel-retention", type=float, default=0.5,
+                    help="fail when a kernel's same-run speedup drops "
+                         "below this fraction of the baseline's (wide "
+                         "budget: interpret-mode variance is ~40%%)")
+    args = ap.parse_args()
+    errors = run(args.baseline_dir, args.fresh_dir, args.max_slowdown,
+                 args.kernel_retention)
+    for e in errors:
+        print(f"[gate] REGRESSION: {e}", file=sys.stderr)
+    if errors:
+        return 1
+    print("[gate] all benchmarks within budget")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,6 +12,8 @@ to experiments/bench/*.json.
   kernel_topk        Pallas kernel wall-time (interpret mode) vs oracle
   wire_codec         packed wire codec throughput + bytes-on-wire vs the
                      unpacked (f32 value, int32 index) baseline
+  fanout             delta fan-out hub: bytes/replica vs dense broadcast
+                     at N=1/4/16, bf16 tier, snapshot-resync bytes
 
 Fast mode (default) uses reduced n/T; ``--full`` approaches paper scale.
 """
@@ -361,6 +363,116 @@ def wire_codec(full: bool = False):
     return payload
 
 
+def fanout(full: bool = False):
+    """Fan-out hub (repro.launch.fanout): bytes per replica per step vs a
+    dense parameter broadcast at N=1/4/16 replicas, the bf16 tier's
+    savings, and the wire-compressed snapshot-resync bytes vs the dense
+    f32 params dump — on the rwkv6-3b smoke plan with a synthetic
+    support-bounded update stream. Writes BENCH_fanout.json."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke_config
+    from repro.core import buckets as bk
+    from repro.core.distributed import SyncConfig, _row_scatter, _row_topk
+    from repro.launch import delta_stream as ds
+    from repro.launch.fanout import FanoutHub
+    from repro.models import build_model
+
+    model = build_model(get_smoke_config("rwkv6-3b"))
+    shapes = model.param_shapes()
+    plan = bk.make_plan(shapes)
+    dspec = ds.make_delta_spec(
+        plan, SyncConfig(ratio=0.02, bucketed=True), workers=4
+    )
+    params = jax.tree.map(
+        lambda s: jax.random.normal(
+            jax.random.PRNGKey(hash(s.shape) % 2**31), s.shape
+        ).astype(s.dtype),
+        shapes,
+    )
+    T = 12 if full else 6
+
+    def step_msgs(t):
+        bufs = []
+        for i, (spec, w) in enumerate(zip(plan.buckets, dspec.wires)):
+            g = jax.random.normal(
+                jax.random.PRNGKey(t * 17 + i), spec.shape
+            )
+            if spec.kind == "dense":
+                bufs.append(g * 0.01)
+            else:
+                vals, idx = _row_topk(g, w.k)
+                bufs.append(_row_scatter(spec.shape, vals, idx, jnp.float32))
+        return ds.encode_delta_bufs(dspec, bufs)
+
+    msgs = [jax.block_until_ready(step_msgs(t)) for t in range(T)]
+    bf16_nbytes = dspec.with_value_dtype("bfloat16").nbytes
+    payload = {
+        "plan": "rwkv6-3b-smoke", "steps": T,
+        "delta_nbytes": dspec.nbytes,
+        "delta_bf16_nbytes": bf16_nbytes,
+        "dense_nbytes": dspec.dense_nbytes,
+        "per_N": {},
+    }
+    for N in (1, 4, 16):
+        hub = FanoutHub(dspec, params, log_bound=T)
+        # one bf16 edge replica once there is a fleet, the rest exact
+        replicas = [
+            hub.join("bfloat16" if N > 1 and r == N - 1 else "float32")
+            for r in range(N)
+        ]
+        t0 = time.time()
+        for t in range(T):
+            hub.publish(t, msgs[t])
+            for r in replicas:
+                hub.sync(r)
+        us_step = (time.time() - t0) / T * 1e6
+        s = hub.stats()
+        # replica egress: every subscriber gets the packed (or bf16)
+        # message instead of a dense param dump
+        ratio = s["dense_broadcast_bytes"] / s["served_bytes"]
+        # trainer ingress: ONE packed message per step feeds the hub no
+        # matter how many replicas subscribe — this is the fan-out win
+        pub_ratio = s["dense_broadcast_bytes"] / s["published_bytes"]
+        payload["per_N"][str(N)] = {
+            "served_bytes": s["served_bytes"],
+            "published_bytes": s["published_bytes"],
+            "dense_broadcast_bytes": s["dense_broadcast_bytes"],
+            "ratio_vs_dense": ratio,
+            "publisher_ratio_vs_dense": pub_ratio,
+            "bytes_per_replica_step": s["served_bytes"] / (N * T),
+            "publish_sync_us_per_step": us_step,
+        }
+        _emit(f"fanout_N{N}", us_step,
+              f"bytes/replica/step={s['served_bytes'] / (N * T):.0f};"
+              f"x_vs_dense_broadcast={ratio:.1f};"
+              f"publisher_x={pub_ratio:.1f}")
+    # snapshot resync cost after T steps vs the dense f32 params dump
+    snap_step, recs, snap_bytes = hub.snapshot()
+    snap_dense = sum(r.dense_nbytes for r in recs)
+    payload["snapshot"] = {
+        "nbytes": snap_bytes, "dense_nbytes": snap_dense,
+        "ratio_vs_dense": snap_dense / snap_bytes,
+        "exact": all(r.exact for r in recs),
+    }
+    _emit("fanout_snapshot", 0.0,
+          f"bytes={snap_bytes};dense={snap_dense};"
+          f"x{snap_dense / snap_bytes:.1f};step={snap_step}")
+    _save("fanout", payload)
+    with open(os.path.join(_ROOT, "BENCH_fanout.json"), "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    # the falsifiable fan-out property: publish cost is independent of N
+    # (the hub never re-encodes per subscriber), and every exact-tier
+    # subscriber costs exactly one packed message per step
+    pub = {n: p["published_bytes"] for n, p in payload["per_N"].items()}
+    assert len(set(pub.values())) == 1, f"publish cost grew with N: {pub}"
+    assert pub["1"] == T * dspec.nbytes, (pub, dspec.nbytes)
+    for n, p in payload["per_N"].items():
+        assert p["bytes_per_replica_step"] <= dspec.nbytes + 1e-9, (n, p)
+    return payload
+
+
 def remark23_ultra(full: bool = False):
     """Remark 2.3 ultra-sparsification: transmit on average LESS THAN ONE
     coordinate per step (k < 1) and still converge (with memory)."""
@@ -401,6 +513,7 @@ BENCHES = {
     "table_comm": table_comm,
     "kernel_topk": kernel_topk,
     "wire_codec": wire_codec,
+    "fanout": fanout,
     "remark23_ultra": remark23_ultra,
 }
 

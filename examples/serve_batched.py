@@ -8,7 +8,12 @@ Demonstrates the serving path of the framework on three cache families:
 plus the trainer->replica **delta stream**: a serving replica tracks a
 live Mem-SGD trainer through packed sparse parameter deltas
 (repro.launch.delta_stream) instead of dense parameter broadcasts, then
-serves from the refreshed weights.
+serves from the refreshed weights,
+
+plus the **fan-out hub** (repro.launch.fanout): one encoded delta
+message per step serves a whole replica fleet — a steady f32 replica, a
+half-bandwidth bf16 edge replica, and a late joiner that resyncs from a
+wire-compressed snapshot instead of a dense broadcast.
 
 Run:  PYTHONPATH=src python examples/serve_batched.py
 """
@@ -52,6 +57,7 @@ def main():
               f"sample: {toks[0, :8].tolist()}")
         assert int(jnp.max(toks)) < cfg.vocab_size
     delta_stream_demo()
+    fanout_demo()
 
 
 def delta_stream_demo(arch: str = "rwkv6-3b", steps: int = 3):
@@ -60,6 +66,7 @@ def delta_stream_demo(arch: str = "rwkv6-3b", steps: int = 3):
     from repro.core.distributed import SyncConfig
     from repro.data import token_batches
     from repro.data.pipeline import ShardedBatcher
+    from repro.launch.serve import replica_copy
     from repro.launch.train import (TrainConfig, init_train_state,
                                     make_train_step, state_shardings)
 
@@ -73,8 +80,9 @@ def delta_stream_demo(arch: str = "rwkv6-3b", steps: int = 3):
     params, memory, opt, count = init_train_state(
         model, mesh, tc, rng=jax.random.PRNGKey(0))
     # replica bootstraps from the same checkpoint (one dense broadcast,
-    # ever); every refresh after that is a sparse delta message.
-    replica = jax.tree.map(lambda x: jnp.array(np.asarray(x)), params)
+    # ever); every refresh after that is a sparse delta message. The
+    # deep copy keeps it alive across the donating train step.
+    replica = replica_copy(params)
     pshard, mshard, _, _ = state_shardings(model, mesh, tc)
     params = jax.device_put(params, pshard)
     memory = jax.device_put(memory, mshard)
@@ -102,6 +110,71 @@ def delta_stream_demo(arch: str = "rwkv6-3b", steps: int = 3):
     toks = decode_loop(model, mesh, replica, prompts, n_tokens=8,
                        max_len=64)
     print(f"replica serves: {toks[0].tolist()}")
+
+
+def fanout_demo(arch: str = "rwkv6-3b", steps: int = 6):
+    """One trainer, one hub, three replicas with different consumption:
+    steady f32 (bitwise), bf16 edge (half bytes, bounded drift), and a
+    late joiner that fell off the replay log (snapshot resync)."""
+    from repro.core.distributed import SyncConfig
+    from repro.data import token_batches
+    from repro.data.pipeline import ShardedBatcher
+    from repro.launch.fanout import FanoutHub
+    from repro.launch.train import (TrainConfig, init_train_state,
+                                    make_train_step, state_shardings)
+
+    print(f"\n=== fan-out hub ({arch}) ===")
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    tc = TrainConfig(optimizer="memsgd", eta=0.5, emit_deltas=True,
+                     sync=SyncConfig(ratio=0.02, bucketed=True,
+                                     wire="packed"))
+    params, memory, opt, count = init_train_state(
+        model, mesh, tc, rng=jax.random.PRNGKey(0))
+    step = make_train_step(model, mesh, tc)
+    dspec = step.delta_spec
+    # the hub deep-copies the boot params BEFORE the donating train step
+    hub = FanoutHub(dspec, params, log_bound=3, snapshot_every=2)
+    steady = hub.join()             # synced every step: pure replay
+    edge = hub.join("bfloat16")     # lossy half-size tier
+    pshard, mshard, _, _ = state_shardings(model, mesh, tc)
+    params = jax.device_put(params, pshard)
+    memory = jax.device_put(memory, mshard)
+    batches = ShardedBatcher(
+        mesh, token_batches(cfg.vocab_size, 8, 32, seed=1), prefetch=0)
+    for i, batch in enumerate(batches):
+        if i >= steps:
+            break
+        params, memory, opt, count, m, delta = step(
+            params, memory, opt, count, batch)
+        hub.publish(i, delta)
+        hub.sync(steady)
+        hub.sync(edge)
+    late = hub.join()  # cursor 0 fell off the log -> snapshot resync
+    hub.sync(late)
+    drift = max(
+        float(jnp.max(jnp.abs(a - b)))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(edge.params)))
+    exact = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(params),
+                        jax.tree.leaves(steady.params)))
+    late_exact = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(late.params)))
+    s = hub.stats()
+    print(f"steady replica bitwise: {exact}; late joiner (snapshot "
+          f"resync x{late.resyncs}) bitwise: {late_exact}; "
+          f"bf16 edge drift: {drift:.2e}")
+    for rid, r in s["replicas"].items():
+        print(f"  replica {rid} [{r['tier']}]: {r['bytes_rx']/1e6:.2f} MB rx "
+              f"(dense broadcast would be "
+              f"{r['dense_equiv_bytes']/1e6:.2f} MB)")
+    print(f"fleet total: {s['served_bytes']/1e6:.2f} MB served vs "
+          f"{s['dense_broadcast_bytes']/1e6:.2f} MB dense broadcast "
+          f"(x{s['fanout_ratio']:.1f})")
+    assert exact and late_exact
 
 
 if __name__ == "__main__":

@@ -171,6 +171,11 @@ class WireSpec:
     def nbits(self) -> int:
         return 32 * self.words
 
+    def with_value_dtype(self, value_dtype: str) -> "WireSpec":
+        """Same message layout with another wire value dtype (the index
+        section and k are unchanged; bf16 halves the value words)."""
+        return dataclasses.replace(self, value_dtype=value_dtype)
+
     # -- self-describing header --------------------------------------------
 
     def header(self) -> Array:
@@ -289,3 +294,163 @@ def decode(spec: WireSpec, buf: Array) -> Tuple[Array, Optional[Array]]:
     )
     idx = _unpack_bits(packed_idx, spec.index_bits, spec.k)
     return vals, idx.astype(jnp.int32)
+
+
+def transcode(
+    spec: WireSpec, buf: Array, value_dtype: str = "bfloat16"
+) -> Array:
+    """Re-encode a wire message's VALUE section in another dtype without
+    touching the (already minimal) index section — the fan-out hub's
+    lossy tier: one f32 message from the trainer, transcoded once, serves
+    every bandwidth-starved bf16 replica. f32 -> bf16 is
+    round-to-nearest-even truncation (lossy); bf16 -> f32 is exact.
+    Pure tensor ops — jit-safe, so the hub can fold it into its publish
+    path. The returned buffer's layout is the static
+    ``spec.with_value_dtype(value_dtype)``."""
+    new_spec = spec.with_value_dtype(value_dtype)
+    vals, idx = decode(spec, buf)
+    return encode(new_spec, vals, idx)
+
+
+# ---------------------------------------------------------------------------
+# snapshot records (wire-compressed buffer dumps; checkpoint + fan-out resync)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SnapshotRecord:
+    """One (rows, cols) buffer serialized through the packed wire codec.
+
+    Three encodings, chosen by ``snapshot_encode``:
+
+    * exact sparse  — every entry differing from the reference (``base``
+      buffer, or zero) is on the wire; decode reproduces the buffer
+      BITWISE. Used for parameter buckets, whose drift from the boot
+      checkpoint has bounded support under sparse training.
+    * lossy sparse  — per-row top-k by magnitude (``k=`` cap); decode
+      reproduces the selected support bitwise and zeros the rest.
+      ``dropped_frac`` reports the discarded mass. Used for the
+      heavy-tailed error-feedback memory.
+    * dense fallback — when the sparse layout would not be smaller than
+      the dense one, the buffer ships as a ``kind="dense"`` message
+      (exact in the wire dtype).
+    """
+
+    spec: WireSpec
+    buf: Array  # uint32 wire buffer of exactly spec.words words
+    vs_base: bool  # decode overlays onto the base buffer (else onto zeros)
+    exact: bool  # True when decode(..) reproduces the buffer bitwise
+    dense_nbytes: int  # what the dense f32-per-item dump would have cost
+    dropped_frac: float  # squared-mass fraction lost (0.0 when exact)
+
+    @property
+    def nbytes(self) -> int:
+        """Exact bytes on the wire / in the checkpoint file."""
+        return self.spec.nbytes
+
+
+def _bitpattern(x: Array) -> Array:
+    """Values -> unsigned bit patterns, so the support mask sees every
+    BITWISE difference (float != misses -0.0 vs +0.0, which would break
+    the exact records' bitwise-restore guarantee)."""
+    nbits = jnp.dtype(x.dtype).itemsize * 8
+    return jax.lax.bitcast_convert_type(
+        x, {16: jnp.uint16, 32: jnp.uint32}[nbits]
+    )
+
+
+def _snapshot_indices_exact(mask: Array, k: int) -> Array:
+    """Per row: the indices of True entries (ascending), padded with
+    False-entry indices (ascending). All indices within a row are
+    distinct, so a scatter-SET with the buffer's own values at these
+    positions is always exact."""
+    order = jnp.argsort(~mask, axis=1, stable=True)
+    return order[:, :k].astype(jnp.int32)
+
+
+def snapshot_encode(
+    buf: Array,
+    base: Optional[Array] = None,
+    *,
+    k: Optional[int] = None,
+    value_dtype: Optional[str] = None,
+) -> SnapshotRecord:
+    """Serialize one 2D buffer through the packed codec.
+
+    ``base``: encode only entries that differ from ``base`` (exact
+    delta-vs-reference; decode needs the same base). ``k``: lossy per-row
+    top-|.| cap (only without ``base``). With neither, every nonzero is
+    encoded exactly. Falls back to a dense message whenever sparse would
+    not be smaller — so the record is never worse than a dense dump plus
+    one header."""
+    if buf.ndim != 2:
+        raise ValueError(f"snapshot_encode wants a 2D buffer, got {buf.shape}")
+    rows, cols = buf.shape
+    vd = value_dtype or jnp.dtype(buf.dtype).name
+    if base is not None and k is not None:
+        raise ValueError("lossy k-cap and diff-vs-base are exclusive")
+    if base is not None and base.shape != buf.shape:
+        raise ValueError(f"base shape {base.shape} != buffer {buf.shape}")
+    dense_nbytes = int(rows * cols * 4)
+
+    if base is not None:
+        mask = _bitpattern(buf) != _bitpattern(base)
+    else:
+        mask = _bitpattern(buf) != 0  # -0.0 counts as a set entry
+    nnz = int(jnp.max(jnp.sum(mask, axis=1)))
+    need_k = max(1, nnz)
+    k_use = need_k if k is None else max(1, min(k, cols))
+    exact = k is None or need_k <= k_use
+    if exact:
+        k_use = need_k  # never ship more slots than the support needs
+
+    sparse_spec = WireSpec(rows, cols, min(k_use, cols), vd)
+    dense_spec = WireSpec(rows, cols, cols, vd, kind="dense")
+    if sparse_spec.nbytes >= dense_spec.nbytes:
+        # dense fallback: exact (in the wire dtype), one header of slack
+        lossless = vd == jnp.dtype(buf.dtype).name
+        return SnapshotRecord(
+            spec=dense_spec, buf=encode(dense_spec, buf.astype(jnp.dtype(vd))),
+            vs_base=False, exact=lossless, dense_nbytes=dense_nbytes,
+            dropped_frac=0.0,
+        )
+    if exact:
+        idx = _snapshot_indices_exact(mask, sparse_spec.k)
+        dropped = 0.0
+    else:  # lossy top-k by magnitude (base is None here)
+        _, idx = jax.lax.top_k(jnp.abs(buf.astype(jnp.float32)), sparse_spec.k)
+        idx = idx.astype(jnp.int32)
+        total = float(jnp.sum(jnp.square(buf.astype(jnp.float32))))
+        kept = float(
+            jnp.sum(
+                jnp.square(
+                    jnp.take_along_axis(buf, idx, axis=1).astype(jnp.float32)
+                )
+            )
+        )
+        dropped = 0.0 if total == 0.0 else max(0.0, 1.0 - kept / total)
+    vals = jnp.take_along_axis(buf, idx, axis=1)
+    return SnapshotRecord(
+        spec=sparse_spec, buf=encode(sparse_spec, vals, idx),
+        vs_base=base is not None,
+        exact=exact and vd == jnp.dtype(buf.dtype).name,
+        dense_nbytes=dense_nbytes, dropped_frac=dropped,
+    )
+
+
+def snapshot_decode(rec: SnapshotRecord, base: Optional[Array] = None) -> Array:
+    """Inverse of ``snapshot_encode``: record (+ the same ``base`` for
+    ``vs_base`` records) -> the (rows, cols) buffer, bitwise for exact
+    records."""
+    spec = rec.spec
+    vals, idx = decode(spec, rec.buf)
+    if spec.kind == "dense":
+        return vals
+    if rec.vs_base:
+        if base is None:
+            raise ValueError("record was encoded vs a base buffer")
+        out = base.astype(jnp.dtype(spec.value_dtype))
+    else:
+        out = jnp.zeros((spec.rows, spec.cols), jnp.dtype(spec.value_dtype))
+    rows_iota = jnp.arange(spec.rows, dtype=jnp.int32)[:, None]
+    return out.at[rows_iota, idx].set(vals)

@@ -55,6 +55,14 @@ class DeltaSpec:
         """Bytes a dense f32 parameter broadcast would cost."""
         return sum(s.rows * s.cols * 4 for s in self.plan.buckets)
 
+    def with_value_dtype(self, value_dtype: str) -> "DeltaSpec":
+        """Same per-bucket layout with another wire value dtype (the
+        static spec of a ``transcode_delta``'d message set)."""
+        return DeltaSpec(
+            plan=self.plan,
+            wires=tuple(w.with_value_dtype(value_dtype) for w in self.wires),
+        )
+
 
 def make_delta_spec(
     plan: bk.BucketPlan,
@@ -128,6 +136,18 @@ def decode_delta(dspec: DeltaSpec, msgs: Sequence[Array]):
                 )
             )
     return bk.unpack(dspec.plan, bufs)
+
+
+def transcode_delta(
+    dspec: DeltaSpec, msgs: Sequence[Array], value_dtype: str = "bfloat16"
+) -> List[Array]:
+    """Re-encode one step's wire buffers in another value dtype (see
+    ``repro.core.encoding.transcode``). f32 -> bf16 halves the value
+    sections at the cost of rounded (non-bitwise) replica tracking; the
+    result decodes against ``dspec.with_value_dtype(value_dtype)``."""
+    return [
+        enc.transcode(w, m, value_dtype) for w, m in zip(dspec.wires, msgs)
+    ]
 
 
 def apply_delta(params, dspec: DeltaSpec, msgs: Sequence[Array]):

@@ -1,0 +1,289 @@
+"""Pub/sub fan-out of trainer delta streams to N serving replicas.
+
+``repro.launch.delta_stream`` turned the trainer's per-step parameter
+update into ONE packed wire message set; this module is where that
+message pays for itself N times. A :class:`FanoutHub` sits between the
+trainer's ``delta_sink`` and any number of replicas with heterogeneous
+consumption patterns:
+
+* **replay log** — the hub keeps the last ``log_bound`` steps' wire
+  messages (host copies) keyed by step. A replica that missed steps
+  catches up by replaying the EXACT bytes it missed, in order; on the
+  f32 tier this reproduces the trainer's parameters bitwise, because
+  ``apply_delta`` performs the identical subtraction per step.
+* **per-replica cursors** — each replica knows only its cursor (next
+  step to apply); the hub serves any cursor still inside the log. One
+  encoded message serves every subscriber: publish cost is independent
+  of N, unlike a dense broadcast whose bytes scale as ``N * 4d``.
+* **bf16 tier** — bandwidth-starved replicas subscribe with
+  ``tier="bfloat16"``: the hub transcodes each f32 message ONCE
+  (``encoding.transcode``: value section re-encoded, index section
+  untouched) and serves the half-size buffer to every bf16 subscriber.
+  Tracking is no longer bitwise; the drift after T steps is bounded by
+  ``sum_t || u_t - bf16(u_t) ||_inf`` (each step contributes at most
+  its own rounding error, ~2^-9 relative), which the hub exposes via
+  ``drift_bound`` and the tests pin down.
+* **snapshot resync** — a replica whose cursor fell off the log restores
+  from a wire-compressed snapshot instead of a dense broadcast: the
+  hub's shadow params are packed into bucket buffers and diff-encoded
+  against the BASE checkpoint every replica booted from
+  (``encoding.snapshot_encode(cur, base=...)``). Under sparse training
+  the params' drift from base has bounded support, so the snapshot costs
+  a few percent of the dense dump and restores bitwise.
+
+The hub itself is transport-agnostic: ``publish``/``sync`` move uint32
+numpy buffers, exactly what a real network fabric would move.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import buckets as bk
+from repro.core import encoding as enc
+from repro.launch import delta_stream as ds
+from repro.launch.serve import replica_copy
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class ReplicaHandle:
+    """One subscriber's state. ``params`` are always fresh buffers (never
+    aliased to the trainer); ``cursor`` is the next step to apply."""
+
+    rid: int
+    tier: str  # "float32" (bitwise) | "bfloat16" (lossy half-size)
+    cursor: int
+    params: Any
+    joined_at: int = 0  # hub step at join time (for dense-equivalent cost)
+    bytes_rx: int = 0
+    steps_replayed: int = 0
+    resyncs: int = 0
+
+
+class FanoutHub:
+    """Fan one trainer delta stream out to N replicas (see module doc).
+
+    ``dspec``/``base_params`` come from the trainer side:
+    ``make_train_step(...).delta_spec`` and the boot checkpoint every
+    replica starts from. ``base_params`` is deep-copied (`replica_copy`)
+    so trainer-side donation can never invalidate the hub's reference.
+    """
+
+    TIERS = ("float32", "bfloat16")
+
+    def __init__(
+        self,
+        dspec: ds.DeltaSpec,
+        base_params,
+        *,
+        log_bound: int = 64,
+        snapshot_every: Optional[int] = None,
+    ):
+        if log_bound < 1:
+            raise ValueError("log_bound must be >= 1")
+        if snapshot_every is not None and snapshot_every > log_bound:
+            raise ValueError(
+                "snapshot_every > log_bound would leave un-replayable gaps"
+            )
+        self.dspec = dspec
+        self.src_tier = dspec.wires[0].value_dtype
+        self.base = replica_copy(base_params)
+        self.base_bufs = bk.pack(dspec.plan, self.base)
+        self.shadow = replica_copy(base_params)  # tracks the stream exactly
+        self.log_bound = log_bound
+        self.snapshot_every = snapshot_every
+        self.step = 0  # next step index to publish
+        self.published_bytes = 0
+        self._log: Dict[int, Tuple[np.ndarray, ...]] = {}
+        self._transcoded: Dict[str, Dict[int, Tuple[np.ndarray, ...]]] = {}
+        self._snap: Optional[Tuple[int, List[enc.SnapshotRecord], int]] = None
+        self._replicas: Dict[int, ReplicaHandle] = {}
+        self._next_rid = 0
+        self._appliers: Dict[str, Any] = {}
+        self._specs: Dict[str, ds.DeltaSpec] = {self.src_tier: dspec}
+
+    # -- trainer side -------------------------------------------------------
+
+    @property
+    def log_start(self) -> int:
+        """Oldest step still replayable from the log."""
+        return max(0, self.step - self.log_bound)
+
+    def publish(self, step: int, msgs: Sequence[Array]) -> None:
+        """Ingest one trainer step's wire messages (``delta_sink``
+        signature). Steps must arrive consecutively from 0."""
+        if step != self.step:
+            raise ValueError(
+                f"publish out of order: got step {step}, expected {self.step}"
+            )
+        if len(msgs) != len(self.dspec.wires):
+            raise ValueError(
+                f"{len(msgs)} buffers for {len(self.dspec.wires)} buckets"
+            )
+        host = tuple(np.asarray(m) for m in msgs)
+        self._log[step] = host
+        self.shadow = self._apply(self.src_tier)(self.shadow, host)
+        self.step = step + 1
+        self.published_bytes += self.dspec.nbytes
+        evict = self.log_start
+        for s in [s for s in self._log if s < evict]:
+            del self._log[s]
+            for cache in self._transcoded.values():
+                cache.pop(s, None)
+        if self.snapshot_every and self.step % self.snapshot_every == 0:
+            self._snap = self._take_snapshot()
+
+    # -- snapshots ----------------------------------------------------------
+
+    def _take_snapshot(self) -> Tuple[int, List[enc.SnapshotRecord], int]:
+        cur = bk.pack(self.dspec.plan, self.shadow)
+        records = [
+            enc.snapshot_encode(c, base=b)
+            for c, b in zip(cur, self.base_bufs)
+        ]
+        return self.step, records, sum(r.nbytes for r in records)
+
+    def snapshot(self) -> Tuple[int, List[enc.SnapshotRecord], int]:
+        """(step, records, nbytes): the current shadow params diff-encoded
+        against the boot checkpoint (exact; dense fallback per bucket)."""
+        return self._take_snapshot()
+
+    def _restore(self, records: Sequence[enc.SnapshotRecord]):
+        bufs = [
+            enc.snapshot_decode(r, base=b)
+            for r, b in zip(records, self.base_bufs)
+        ]
+        return bk.unpack(self.dspec.plan, bufs, cast=True)
+
+    # -- replica side -------------------------------------------------------
+
+    def join(self, tier: str = "float32") -> ReplicaHandle:
+        """Subscribe a new replica: it boots from the shared base
+        checkpoint with its cursor at step 0 — ``sync`` brings it to the
+        head via replay and/or snapshot."""
+        if tier not in self.TIERS:
+            raise ValueError(f"tier {tier!r} not in {self.TIERS}")
+        r = ReplicaHandle(
+            rid=self._next_rid, tier=tier, cursor=0,
+            params=replica_copy(self.base), joined_at=self.step,
+        )
+        self._next_rid += 1
+        self._replicas[r.rid] = r
+        return r
+
+    def sync(self, replica: ReplicaHandle) -> ReplicaHandle:
+        """Advance ``replica`` to the head of the stream: replay every
+        logged step it missed in order; if its cursor fell off the log,
+        resync from a wire-compressed snapshot first (cached periodic
+        snapshot when fresh enough, else one taken now)."""
+        while replica.cursor < self.step:
+            if replica.cursor < self.log_start:
+                self._snapshot_resync(replica)
+                continue
+            msgs, spec_bytes = self._serve(replica.cursor, replica.tier)
+            replica.params = self._apply(replica.tier)(replica.params, msgs)
+            replica.cursor += 1
+            replica.steps_replayed += 1
+            replica.bytes_rx += spec_bytes
+        return replica
+
+    def _snapshot_resync(self, replica: ReplicaHandle) -> None:
+        snap = self._snap
+        if snap is None or snap[0] < self.log_start:
+            # cache the fresh snapshot: every other lagged replica at
+            # this step resyncs from the same records for free
+            snap = self._snap = self._take_snapshot()
+        step, records, nbytes = snap
+        replica.params = self._restore(records)
+        replica.cursor = step
+        replica.bytes_rx += nbytes
+        replica.resyncs += 1
+
+    def _spec(self, tier: str) -> ds.DeltaSpec:
+        """Static per-tier delta spec, derived once and cached."""
+        if tier not in self._specs:
+            self._specs[tier] = self.dspec.with_value_dtype(tier)
+        return self._specs[tier]
+
+    def _serve(self, step: int, tier: str) -> Tuple[Tuple[np.ndarray, ...], int]:
+        """The wire buffers for ``step`` in ``tier``'s encoding; lossy
+        tiers are transcoded once per step and cached for all
+        subscribers."""
+        if tier == self.src_tier:
+            return self._log[step], self.dspec.nbytes
+        cache = self._transcoded.setdefault(tier, {})
+        if step not in cache:
+            cache[step] = tuple(
+                np.asarray(m)
+                for m in ds.transcode_delta(self.dspec, self._log[step], tier)
+            )
+        return cache[step], self._spec(tier).nbytes
+
+    def _apply(self, tier: str):
+        """jit-cached ``apply_delta`` for one tier's static spec."""
+        if tier not in self._appliers:
+            spec = self._spec(tier)
+            self._appliers[tier] = jax.jit(
+                lambda params, msgs: ds.apply_delta(params, spec, msgs)
+            )
+        return self._appliers[tier]
+
+    # -- accounting ---------------------------------------------------------
+
+    def drift_bound(self, tier: str = "bfloat16") -> float:
+        """Upper bound on a ``tier`` replica's parameter drift from the
+        trainer over the steps still in the log: the sum of per-step
+        transcode rounding errors ``||u_t - tier(u_t)||_inf`` (each step's
+        update enters the replica exactly once; f32 accumulation error is
+        second-order and covered by the tests' slack)."""
+        bound = 0.0
+        for step in sorted(self._log):
+            exact = ds.decode_delta(self.dspec, self._log[step])
+            lossy = ds.decode_delta(
+                self._spec(tier), self._serve(step, tier)[0]
+            )
+            bound += max(
+                float(jnp.max(jnp.abs(a - b)))
+                for a, b in zip(jax.tree.leaves(exact), jax.tree.leaves(lossy))
+            )
+        return bound
+
+    def _dense_equiv(self, r: ReplicaHandle) -> int:
+        """What a dense-broadcast world would have shipped this replica:
+        one full param dump at join (if it joined mid-stream) plus one
+        dense refresh per step published since."""
+        boot = 1 if r.joined_at > 0 else 0
+        return (boot + self.step - r.joined_at) * self.dspec.dense_nbytes
+
+    def stats(self) -> dict:
+        """Bytes accounting: what the hub shipped vs what dense
+        broadcasts to the same fleet (respecting each replica's join
+        step) would have cost."""
+        per_replica = {
+            r.rid: {
+                "tier": r.tier, "cursor": r.cursor,
+                "joined_at": r.joined_at, "bytes_rx": r.bytes_rx,
+                "dense_equiv_bytes": self._dense_equiv(r),
+                "steps_replayed": r.steps_replayed, "resyncs": r.resyncs,
+            }
+            for r in self._replicas.values()
+        }
+        served = sum(r.bytes_rx for r in self._replicas.values())
+        dense = sum(self._dense_equiv(r) for r in self._replicas.values())
+        if not self._replicas:
+            dense = self.step * self.dspec.dense_nbytes
+        return {
+            "published_steps": self.step,
+            "published_bytes": self.published_bytes,
+            "log": (self.log_start, self.step),
+            "replicas": per_replica,
+            "served_bytes": served,
+            "dense_broadcast_bytes": dense,
+            "fanout_ratio": dense / max(1, served),
+        }

@@ -17,11 +17,24 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.launch import sharding as shd
 
 Array = jax.Array
+
+
+def replica_copy(tree):
+    """Deep copy of a pytree into fresh, unaliased device buffers.
+
+    ``make_train_step`` donates (params, memory, opt) — stepping the
+    trainer invalidates every alias of those buffers, including a
+    serving replica that was created by reference. Any replica held
+    across trainer steps (serve, fan-out hub, snapshot base) MUST go
+    through this helper; plain ``jax.tree.map(lambda x: x, tree)`` or
+    ``jax.device_put`` may alias and die with the donation."""
+    return jax.tree.map(lambda x: jnp.array(np.asarray(x)), tree)
 
 
 def serve_shardings(model, mesh, batch: int, max_len: int,

@@ -375,7 +375,8 @@ def make_train_step(model, mesh, tc: TrainConfig):
 
 def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
           checkpointer=None, ckpt_every: int = 0, log_every: int = 10,
-          rng=None, delta_sink=None):
+          rng=None, delta_sink=None, ckpt_wire: bool = False,
+          ckpt_memory_ratio: float = 0.05):
     """End-to-end training loop. ``batches``: iterator of device-ready
     global batches (see repro.data.pipeline.ShardedBatcher).
 
@@ -383,8 +384,22 @@ def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
     called with the packed per-bucket delta buffers each step (decode
     them against ``make_train_step(...).delta_spec`` — see
     ``repro.launch.delta_stream``).
+
+    With ``ckpt_wire`` (requires ``tc.sync.bucketed``), checkpoints go
+    through the packed wire codec (``Checkpointer.save_wire``): params
+    diff-encoded against the boot state, the error-feedback memory
+    top-k'-compressed at ``ckpt_memory_ratio`` — instead of dense f32
+    dumps.
     """
+    plan = _bucket_plan(tc, model.param_shapes())
+    if ckpt_wire and plan is None:
+        raise ValueError("ckpt_wire requires sync.bucketed (a BucketPlan)")
     params, memory, opt, count = init_train_state(model, mesh, tc, rng=rng)
+    base_params = None
+    if ckpt_wire and checkpointer is not None:
+        from repro.launch.serve import replica_copy
+
+        base_params = replica_copy(params)  # survives the donated step
     pshard, mshard, oshard, cshard = state_shardings(model, mesh, tc)
     params = jax.device_put(params, pshard)
     memory = jax.device_put(memory, mshard)
@@ -407,7 +422,14 @@ def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
             history.append((i, loss))
             print(f"step {i:5d}  loss {loss:.4f}")
         if checkpointer is not None and ckpt_every and (i + 1) % ckpt_every == 0:
-            checkpointer.save(i + 1, {"params": params})
+            if ckpt_wire:
+                checkpointer.save_wire(
+                    i + 1, params, memory, plan,
+                    base_params=base_params,
+                    memory_ratio=ckpt_memory_ratio,
+                )
+            else:
+                checkpointer.save(i + 1, {"params": params})
     return params, memory, opt, count, history
 
 
@@ -444,6 +466,13 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-wire", action="store_true",
+                    help="checkpoint params+memory through the packed "
+                         "wire codec instead of dense f32 dumps "
+                         "(implies --bucketed)")
+    ap.add_argument("--ckpt-memory-ratio", type=float, default=0.05,
+                    help="per-row top-k ratio for the lossy memory "
+                         "section of wire checkpoints")
     args = ap.parse_args()
 
     mesh = compat.make_mesh((jax.device_count(), 1), ("data", "model"))
@@ -455,7 +484,8 @@ def main():
                                      strategy=args.strategy,
                                      wire=args.wire,
                                      bucketed=args.bucketed
-                                     or args.emit_deltas))
+                                     or args.emit_deltas
+                                     or args.ckpt_wire))
     batches = ShardedBatcher(
         mesh, token_batches(cfg.vocab_size, args.batch, args.seq, seed=0)
     )
@@ -466,7 +496,17 @@ def main():
         sink = lambda i, msgs: streamed.__setitem__(
             0, streamed[0] + sum(m.nbytes for m in msgs))
     train(model, mesh, tc, batches, n_steps=args.steps, checkpointer=ck,
-          ckpt_every=max(1, args.steps // 2), delta_sink=sink)
+          ckpt_every=max(1, args.steps // 2), delta_sink=sink,
+          ckpt_wire=args.ckpt_wire,
+          ckpt_memory_ratio=args.ckpt_memory_ratio)
+    if args.ckpt_wire and ck is not None:
+        import json as _json
+
+        with open(ck._wire_path(ck.latest_wire_step()) + ".json") as f:
+            w = _json.load(f)["wire"]
+        print(f"wire checkpoint: {w['nbytes']/1e6:.2f} MB "
+              f"(dense f32 dump: {w['dense_nbytes']/1e6:.2f} MB, "
+              f"x{w['ratio_vs_dense']:.1f} smaller)")
     if args.emit_deltas:
         dense = sum(
             p.size * 4 for p in jax.tree.leaves(model.param_shapes())

@@ -1,0 +1,112 @@
+"""The CI bench regression gate (benchmarks/check_regression.py):
+identical payloads pass; slowdowns beyond the budget, regressed byte
+ratios, and flipped correctness flags fail; missing baselines skip."""
+import copy
+import importlib.util
+import json
+import os
+
+import pytest
+
+_GATE = os.path.join(
+    os.path.dirname(__file__), "..", "benchmarks", "check_regression.py"
+)
+spec = importlib.util.spec_from_file_location("check_regression", _GATE)
+gate = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(gate)
+
+TOPK = {
+    "loop_us": 450.0, "singlepass_us": 100.0, "speedup": 4.5,
+    "fused_loop_us": 1000.0, "fused_singlepass_us": 250.0,
+    "bitwise_equal": True,
+}
+WIRE = {
+    "float32": {"ratio_vs_unpacked": 1.52, "ratio_vs_dense": 10.0,
+                "roundtrip_exact": True, "encode_us": 50.0,
+                "decode_us": 40.0},
+    "bfloat16": {"ratio_vs_unpacked": 2.46, "ratio_vs_dense": 16.0,
+                 "roundtrip_exact": True, "encode_us": 45.0,
+                 "decode_us": 42.0},
+}
+FANOUT = {
+    "per_N": {"1": {"ratio_vs_dense": 8.2,
+                    "publisher_ratio_vs_dense": 8.2},
+              "16": {"ratio_vs_dense": 8.4,
+                     "publisher_ratio_vs_dense": 130.0}},
+    "snapshot": {"ratio_vs_dense": 1.8, "exact": True},
+}
+
+
+def test_identical_payloads_pass():
+    assert gate.check_topk(TOPK, copy.deepcopy(TOPK), 1.15) == []
+    assert gate.check_wire(WIRE, copy.deepcopy(WIRE), 1.15) == []
+    assert gate.check_fanout(FANOUT, copy.deepcopy(FANOUT), 1.15) == []
+
+
+def test_throughput_drop_fails_but_budget_holds():
+    # the kernel gate runs on machine-normalized same-run speedups with
+    # a wide retention budget (interpret-mode variance is ~40%), not on
+    # raw wall-clock (not comparable across baseline/CI machines)
+    fresh = copy.deepcopy(TOPK)
+    fresh["speedup"] = 3.0  # -33%: noise-level for interpret mode
+    assert gate.check_topk(TOPK, fresh, 1.15) == []
+    fresh["speedup"] = 2.0  # speedup halved: a real kernel regression
+    errs = gate.check_topk(TOPK, fresh, 1.15)
+    assert len(errs) == 1 and "speedup" in errs[0]
+    fresh2 = copy.deepcopy(TOPK)
+    fresh2["fused_singlepass_us"] = 600.0  # fused speedup 4.0 -> 1.67
+    errs = gate.check_topk(TOPK, fresh2, 1.15)
+    assert len(errs) == 1 and "fused_speedup" in errs[0]
+    # raw-us gating at 15% still applies to the low-variance wire codec
+    fresh3 = copy.deepcopy(WIRE)
+    fresh3["float32"]["encode_us"] = 60.0
+    assert any("encode_us" in e for e in gate.check_wire(WIRE, fresh3, 1.15))
+
+
+def test_missing_tracked_key_fails():
+    fresh = copy.deepcopy(TOPK)
+    del fresh["speedup"]
+    assert any("missing" in e for e in gate.check_topk(TOPK, fresh, 1.15))
+    fresh2 = copy.deepcopy(WIRE)
+    del fresh2["bfloat16"]["ratio_vs_unpacked"]
+    assert any("missing" in e for e in gate.check_wire(WIRE, fresh2, 1.15))
+    # correctness flags are tracked keys too: dropping one must fail
+    fresh3 = copy.deepcopy(TOPK)
+    del fresh3["bitwise_equal"]
+    assert any("missing" in e for e in gate.check_topk(TOPK, fresh3, 1.15))
+
+
+def test_byte_ratio_regression_fails():
+    fresh = copy.deepcopy(WIRE)
+    fresh["bfloat16"]["ratio_vs_unpacked"] = 2.0
+    errs = gate.check_wire(WIRE, fresh, 1.15)
+    assert len(errs) == 1 and "bfloat16" in errs[0]
+    fresh2 = copy.deepcopy(FANOUT)
+    fresh2["per_N"]["16"]["publisher_ratio_vs_dense"] = 100.0
+    assert len(gate.check_fanout(FANOUT, fresh2, 1.15)) == 1
+
+
+def test_correctness_flag_flip_fails():
+    fresh = copy.deepcopy(TOPK)
+    fresh["bitwise_equal"] = False
+    assert any("bitwise_equal" in e for e in gate.check_topk(TOPK, fresh, 1.15))
+    fresh2 = copy.deepcopy(FANOUT)
+    fresh2["snapshot"]["exact"] = False
+    assert any("exact" in e for e in gate.check_fanout(FANOUT, fresh2, 1.15))
+
+
+def test_run_end_to_end(tmp_path):
+    basedir, freshdir = tmp_path / "base", tmp_path / "fresh"
+    basedir.mkdir(), freshdir.mkdir()
+    for name, payload in [("BENCH_topk.json", TOPK),
+                          ("BENCH_wire.json", WIRE),
+                          ("BENCH_fanout.json", FANOUT)]:
+        (basedir / name).write_text(json.dumps(payload))
+        (freshdir / name).write_text(json.dumps(payload))
+    assert gate.run(str(basedir), str(freshdir), 1.15) == []
+    # a fresh file missing is a failure; a BASELINE missing is a skip
+    os.remove(freshdir / "BENCH_fanout.json")
+    errs = gate.run(str(basedir), str(freshdir), 1.15)
+    assert len(errs) == 1 and "BENCH_fanout.json" in errs[0]
+    os.remove(basedir / "BENCH_fanout.json")
+    assert gate.run(str(basedir), str(freshdir), 1.15) == []
