@@ -1,8 +1,11 @@
 """Bench regression gate: fresh BENCH_*.json vs committed baselines.
 
 CI stashes the committed baselines, re-runs ``benchmarks/run.py
-kernel_topk wire_codec fanout`` (which overwrite the repo-root
-``BENCH_*.json``), then runs this checker. A check FAILS when:
+kernel_topk wire_codec fanout hierarchy`` (which overwrite the
+repo-root ``BENCH_*.json``), then runs this checker. Alongside the
+pass/fail verdict it emits a markdown comparison table (baseline vs
+fresh per tracked metric) to ``$GITHUB_STEP_SUMMARY`` and to
+``--summary-file`` for artifact upload. A check FAILS when:
 
 * throughput regresses: the wire codec's raw encode/decode ``*_us``
   timings are gated at ``--max-slowdown`` (default 1.15 — a >15% drop
@@ -16,9 +19,10 @@ kernel_topk wire_codec fanout`` (which overwrite the repo-root
   halves), sized to the ~40% run-to-run variance of interpret-mode
   Pallas timings — a real regression (the single-pass kernel losing
   its edge over the loop) blows through 0.5 immediately;
-* a wire byte ratio regresses: packed-vs-unpacked, fan-out-vs-dense or
-  snapshot-vs-dense shrinks below the baseline (deterministic layouts:
-  compared with 0.1% float slack, no timing noise);
+* a wire byte ratio regresses: packed-vs-unpacked, fan-out-vs-dense,
+  snapshot-vs-dense, or the two-level sync's cross-pod reduction
+  shrinks below the baseline (deterministic layouts: compared with
+  0.1% float slack, no timing noise);
 * a correctness bit recorded in the payload flipped
   (``bitwise_equal``, ``roundtrip_exact``, snapshot ``exact``);
 * a tracked key present in the baseline disappears from the fresh
@@ -142,10 +146,23 @@ def check_fanout(base: dict, fresh: dict, max_slowdown: float,
     return errs
 
 
+def check_hierarchy(base: dict, fresh: dict, max_slowdown: float,
+                    kernel_retention: float = 0.5) -> List[str]:
+    errs = _flag_off(fresh, base, "bit_identical", "hierarchy")
+    errs += _flag_off(fresh, base, "conservation_ok", "hierarchy")
+    errs += _flag_off(fresh, base, "accounting_exact", "hierarchy")
+    for wire in ("packed", "unpacked"):
+        b, f = base.get(wire, {}), fresh.get(wire, {})
+        errs += _ratio_regressed(f, b, "cross_reduction",
+                                 f"hierarchy[{wire}]")
+    return errs
+
+
 CHECKS = {
     "BENCH_topk.json": check_topk,
     "BENCH_wire.json": check_wire,
     "BENCH_fanout.json": check_fanout,
+    "BENCH_hierarchy.json": check_hierarchy,
 }
 
 
@@ -172,6 +189,65 @@ def run(baseline_dir: str, fresh_dir: str, max_slowdown: float,
     return errors
 
 
+def _flatten(d: dict, prefix: str = "") -> dict:
+    """Nested payload -> {dotted.path: scalar} (lists are skipped)."""
+    out = {}
+    for k, v in d.items():
+        key = f"{prefix}.{k}" if prefix else str(k)
+        if isinstance(v, dict):
+            out.update(_flatten(v, key))
+        elif isinstance(v, (int, float, bool, str)):
+            out[key] = v
+    return out
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return "—"
+    if isinstance(v, bool):
+        return "true" if v else "false"
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def write_summary(baseline_dir: str, fresh_dir: str, errors: List[str],
+                  fh) -> None:
+    """Markdown comparison table (baseline vs fresh, per tracked file)
+    for ``$GITHUB_STEP_SUMMARY`` / the uploaded artifact — bench
+    regressions should be readable without log-diving."""
+    fh.write("## Bench regression gate\n\n")
+    if errors:
+        fh.write(f"**FAIL** — {len(errors)} regression(s):\n\n")
+        for e in errors:
+            fh.write(f"- :x: {e}\n")
+        fh.write("\n")
+    else:
+        fh.write("**ok** — all benchmarks within budget\n\n")
+    for fname in CHECKS:
+        fpath = os.path.join(fresh_dir, fname)
+        if not os.path.exists(fpath):
+            continue
+        with open(fpath) as f:
+            fresh = _flatten(json.load(f))
+        bpath = os.path.join(baseline_dir, fname)
+        base: dict = {}
+        if os.path.exists(bpath):
+            with open(bpath) as f:
+                base = _flatten(json.load(f))
+        fh.write(f"### {fname}\n\n")
+        fh.write("| metric | baseline | fresh | Δ |\n|---|---:|---:|---:|\n")
+        for key in sorted(set(base) | set(fresh)):
+            b, f = base.get(key), fresh.get(key)
+            delta = ""
+            if (isinstance(b, (int, float)) and not isinstance(b, bool)
+                    and isinstance(f, (int, float))
+                    and not isinstance(f, bool) and b):
+                delta = f"{(f - b) / abs(b) * 100:+.1f}%"
+            fh.write(f"| {key} | {_fmt(b)} | {_fmt(f)} | {delta} |\n")
+        fh.write("\n")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline-dir", required=True,
@@ -185,9 +261,23 @@ def main() -> int:
                     help="fail when a kernel's same-run speedup drops "
                          "below this fraction of the baseline's (wide "
                          "budget: interpret-mode variance is ~40%%)")
+    ap.add_argument("--summary-file", default=None,
+                    help="also write the markdown comparison table here "
+                         "(uploaded as a CI artifact); "
+                         "$GITHUB_STEP_SUMMARY is appended to "
+                         "automatically when set")
     args = ap.parse_args()
     errors = run(args.baseline_dir, args.fresh_dir, args.max_slowdown,
                  args.kernel_retention)
+    targets = []
+    if args.summary_file:
+        targets.append((args.summary_file, "w"))
+    step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if step_summary:
+        targets.append((step_summary, "a"))
+    for path, mode in targets:
+        with open(path, mode) as fh:
+            write_summary(args.baseline_dir, args.fresh_dir, errors, fh)
     for e in errors:
         print(f"[gate] REGRESSION: {e}", file=sys.stderr)
     if errors:

@@ -14,6 +14,10 @@ to experiments/bench/*.json.
                      unpacked (f32 value, int32 index) baseline
   fanout             delta fan-out hub: bytes/replica vs dense broadcast
                      at N=1/4/16, bf16 tier, snapshot-resync bytes
+  hierarchy          two-level pod-aware bucketed sync: intra- vs
+                     cross-pod bytes vs the flat bucketed baseline on a
+                     2-pod mesh, packed==unpacked bit-identity, exact
+                     mass conservation
 
 Fast mode (default) uses reduced n/T; ``--full`` approaches paper scale.
 """
@@ -473,6 +477,156 @@ def fanout(full: bool = False):
     return payload
 
 
+def hierarchy(full: bool = False):
+    """Two-level pod-aware bucketed sync (strategy="hierarchical" on a
+    (pod, data) mesh): intra- vs cross-pod bytes per step vs the flat
+    bucketed baseline on the rwkv6-3b smoke plan with the smoke_2pod
+    mesh config, for both wire formats. A subprocess run on the real
+    8-device 2-pod mesh autotunes the per-bucket pod ratios from the
+    first batch, trains a few steps under the packed AND unpacked
+    wires (must be bit-identical), and checks the two-level mass-
+    conservation invariant mean_w(u) == update + mean_w(new_memory).
+    Writes BENCH_hierarchy.json at the repo root."""
+    import dataclasses
+    import subprocess
+    import textwrap
+
+    from repro.core import buckets as bk
+    from repro.core.distributed import SyncConfig, bucketed_message_bytes
+    from repro.configs import MESHES, get_smoke_config
+    from repro.models import build_model
+
+    mc = MESHES["smoke_2pod"]
+    steps = 6 if full else 3
+    script = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys, json
+        sys.path.insert(0, {src!r})
+        import jax, jax.numpy as jnp
+        import numpy as np
+        from repro.configs import MESHES, get_smoke_config
+        from repro.core import buckets as bk
+        from repro.core.distributed import SyncConfig
+        from repro.core.selfcheck import two_level_selfcheck
+        from repro.data import token_batches
+        from repro.data.pipeline import ShardedBatcher
+        from repro.launch.mesh import mesh_from_config
+        from repro.launch.train import (TrainConfig, make_train_step,
+                                        init_train_state, state_shardings,
+                                        _maybe_autotune_pod_ratios)
+        from repro.models import build_model
+
+        STEPS = {steps}
+        mesh = mesh_from_config(MESHES["smoke_2pod"])
+        cfg = get_smoke_config("rwkv6-3b")
+        model = build_model(cfg)
+        plan = bk.make_plan(model.param_shapes())
+        import itertools
+        batch_list = list(itertools.islice(iter(ShardedBatcher(
+            mesh, token_batches(cfg.vocab_size, 8, 32, seed=3),
+            batch_axes=("pod", "data"), prefetch=0)), STEPS + 1))
+
+        def run(wire):
+            tc = TrainConfig(optimizer="memsgd", eta=0.3,
+                             sync=SyncConfig(ratio=0.02,
+                                             strategy="hierarchical",
+                                             bucketed=True, wire=wire))
+            params, memory, opt, count = init_train_state(
+                model, mesh, tc, rng=jax.random.PRNGKey(0))
+            tc, it = _maybe_autotune_pod_ratios(
+                model, mesh, tc, plan, params, iter(batch_list))
+            pshard, mshard, _, _ = state_shardings(model, mesh, tc)
+            params = jax.device_put(params, pshard)
+            memory = jax.device_put(memory, mshard)
+            step = make_train_step(model, mesh, tc)
+            losses = []
+            for i, batch in enumerate(it):
+                if i >= STEPS: break
+                params, memory, opt, count, m = step(
+                    params, memory, opt, count, batch)
+                losses.append(float(m["loss"]))
+            return params, tc.sync.pod_ratios, losses
+
+        p_pk, ratios_pk, loss_pk = run("packed")
+        p_un, ratios_un, loss_un = run("unpacked")
+        bit_identical = all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(jax.tree.leaves(p_pk), jax.tree.leaves(p_un)))
+
+        # two-level invariants on the shared synthetic probe
+        # (repro.core.selfcheck -- the same harness the slow property
+        # test runs, so the invariant definitions live in one place)
+        chk = two_level_selfcheck(mesh)
+        print(json.dumps({{
+            "pod_ratios": list(ratios_pk),
+            "ratios_match": list(ratios_pk) == list(ratios_un),
+            "bit_identical": bool(bit_identical),
+            "conservation_max_err": chk["conservation_max_err"],
+            "probe_bit_identical": chk["bit_identical"],
+            "accounting_exact": chk["accounting_exact"],
+            "losses_packed": loss_pk, "losses_unpacked": loss_un}}))
+        """
+    ).format(src=os.path.join(_ROOT, "src"), steps=steps)
+    t0 = time.time()
+    out = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        timeout=1800,
+    )
+    assert out.returncode == 0, out.stderr[-4000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    wall_us = (time.time() - t0) * 1e6
+
+    # exact per-level byte accounting with the realized autotuned ratios
+    plan = bk.make_plan(build_model(get_smoke_config("rwkv6-3b")).param_shapes())
+    base = SyncConfig(ratio=0.02, bucketed=True, pod_axis="pod",
+                      pod_ratios=tuple(rec["pod_ratios"]))
+    payload = {
+        "plan": "rwkv6-3b-smoke",
+        "mesh": {"name": mc.name, "n_pods": mc.n_pods, "n_data": mc.n_data},
+        "steps": steps,
+        "pod_ratios": rec["pod_ratios"],
+        "bit_identical": (rec["bit_identical"] and rec["ratios_match"]
+                          and rec["probe_bit_identical"]),
+        "conservation_max_err": rec["conservation_max_err"],
+        "conservation_ok": rec["conservation_max_err"] < 1e-5,
+        "accounting_exact": rec["accounting_exact"],
+        "losses_packed": rec["losses_packed"],
+        "losses_unpacked": rec["losses_unpacked"],
+    }
+    for wire in ("packed", "unpacked"):
+        two = bucketed_message_bytes(
+            dataclasses.replace(base, strategy="hierarchical", wire=wire),
+            plan, by_level=True)
+        flat = bucketed_message_bytes(
+            dataclasses.replace(base, strategy="sparse_allgather",
+                                wire=wire),
+            plan, by_level=True, n_data=mc.n_data)
+        payload[wire] = {
+            "two_level_intra": two["intra"], "two_level_cross": two["cross"],
+            "flat_intra": flat["intra"], "flat_cross": flat["cross"],
+            "cross_reduction": flat["cross"] / two["cross"],
+        }
+        _emit(f"hierarchy_{wire}", wall_us / max(1, 2 * steps),
+              f"cross={two['cross']};flat_cross={flat['cross']};"
+              f"x{flat['cross'] / two['cross']:.2f}")
+    _emit("hierarchy_claims", 0.0,
+          f"bit_identical={payload['bit_identical']};"
+          f"conservation_max_err={rec['conservation_max_err']:.2e}")
+    _save("hierarchy", payload)
+    with open(os.path.join(_ROOT, "BENCH_hierarchy.json"), "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    # the acceptance claims: strictly fewer cross-pod bytes than the
+    # flat bucketed baseline, bit-identical wires, exact conservation
+    for wire in ("packed", "unpacked"):
+        assert payload[wire]["two_level_cross"] < payload[wire]["flat_cross"], payload
+    assert payload["bit_identical"], rec
+    assert payload["conservation_ok"], rec
+    assert payload["accounting_exact"], rec
+    return payload
+
+
 def remark23_ultra(full: bool = False):
     """Remark 2.3 ultra-sparsification: transmit on average LESS THAN ONE
     coordinate per step (k < 1) and still converge (with memory)."""
@@ -514,6 +668,7 @@ BENCHES = {
     "kernel_topk": kernel_topk,
     "wire_codec": wire_codec,
     "fanout": fanout,
+    "hierarchy": hierarchy,
     "remark23_ultra": remark23_ultra,
 }
 

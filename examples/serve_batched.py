@@ -27,9 +27,8 @@ import jax.numpy as jnp  # noqa: E402
 from repro.utils.compat import make_mesh  # noqa: E402
 
 from repro.configs import get_smoke_config  # noqa: E402
-from repro.launch.serve import apply_delta, decode_loop, make_serve_step  # noqa: E402
+from repro.launch.serve import apply_delta, decode_loop  # noqa: E402
 from repro.models import build_model  # noqa: E402
-from repro.utils.tree import tree_size  # noqa: E402
 
 
 def cache_bytes(cache) -> int:

@@ -14,7 +14,13 @@ from __future__ import annotations
 
 import importlib
 
-from repro.configs.base import ModelConfig, ShapeConfig, SHAPES
+from repro.configs.base import (
+    MESHES,
+    MeshConfig,
+    ModelConfig,
+    SHAPES,
+    ShapeConfig,
+)
 
 ARCH_IDS = (
     "rwkv6-3b",
@@ -49,6 +55,8 @@ def get_smoke_config(arch_id: str) -> ModelConfig:
 
 __all__ = [
     "ModelConfig",
+    "MeshConfig",
+    "MESHES",
     "ShapeConfig",
     "SHAPES",
     "ARCH_IDS",

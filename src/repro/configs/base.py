@@ -103,3 +103,46 @@ SHAPES = {
     "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
     "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
 }
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    """One named device-mesh layout.
+
+    ``n_pods > 1`` declares a ``(pod, data, model)`` mesh: the data
+    axes become ``("pod", "data")``, the two-level hierarchical sync
+    re-compresses at the pod boundary, and the batch shards over both.
+    ``launch.mesh.mesh_from_config`` materializes it.
+    """
+
+    name: str
+    n_pods: int
+    n_data: int
+    n_model: int = 1
+
+    @property
+    def n_devices(self) -> int:
+        return self.n_pods * self.n_data * self.n_model
+
+    @property
+    def axis_names(self) -> Tuple[str, ...]:
+        if self.n_pods > 1:
+            return ("pod", "data", "model")
+        return ("data", "model")
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        if self.n_pods > 1:
+            return (self.n_pods, self.n_data, self.n_model)
+        return (self.n_data, self.n_model)
+
+
+MESHES = {
+    # CPU smoke meshes (8 forced host devices — the subprocess-test and
+    # bench mesh for the two-level pod sync)
+    "smoke_1pod": MeshConfig("smoke_1pod", 1, 8, 1),
+    "smoke_2pod": MeshConfig("smoke_2pod", 2, 4, 1),
+    # production pods: 16x16 per pod, 2 pods across the DCI link
+    "pod_256": MeshConfig("pod_256", 1, 16, 16),
+    "pod_2x256": MeshConfig("pod_2x256", 2, 16, 16),
+}

@@ -163,6 +163,27 @@ def unpack(plan: BucketPlan, buffers: Sequence[Array], cast: bool = False):
     return plan.treedef.unflatten(leaves)
 
 
+def bucket_mass_capture(buf: Array, max_k: int) -> Array:
+    """Mean per-row captured squared-mass fraction of a (rows, cols)
+    buffer for every k in 1..max_k: ``out[k-1]`` is the fraction of each
+    row's squared mass the k largest-|.| entries hold, averaged over
+    rows (all-zero rows count as fully captured). Monotone
+    non-decreasing in k and exactly 1.0 at k = cols.
+
+    This is the "realized mass capture" the two-level sync autotunes its
+    per-bucket pod re-compression ratio from: attention-sized buckets
+    with heavy tails need a larger pod-level k than bias-sized buckets
+    whose mass concentrates in a few coordinates (see
+    ``repro.core.distributed.autotune_pod_ratios``)."""
+    max_k = max(1, min(int(max_k), buf.shape[-1]))
+    sq = jnp.square(jnp.abs(buf.astype(jnp.float32)))
+    desc = -jnp.sort(-sq, axis=-1)[..., :max_k]
+    captured = jnp.cumsum(desc, axis=-1)
+    total = jnp.sum(sq, axis=-1, keepdims=True)
+    frac = jnp.where(total > 0, captured / jnp.maximum(total, 1e-30), 1.0)
+    return jnp.mean(frac, axis=0)
+
+
 def init_bucket_memory(plan: BucketPlan, dtype=jnp.float32) -> Tuple[Array, ...]:
     """Zero error-feedback memory, one buffer per bucket (m_0 = 0)."""
     return tuple(

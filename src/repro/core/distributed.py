@@ -38,7 +38,12 @@ Sync strategies
   inter-pod bytes drop from W_pod*k to k_pod; the re-compression residual
   is folded back into the local memory, preserving the error-feedback
   guarantee (composition of contractions with feedback is again a
-  contraction with feedback).
+  contraction with feedback). On the bucketed path this is a true
+  two-level scheme: each bucket re-selects the intra-pod mean at its OWN
+  pod k (``SyncConfig.pod_ratios``, autotuned by ``autotune_pod_ratios``
+  from the bucket's realized mass capture), and
+  ``bucketed_message_bytes(by_level=True)`` accounts the intra- vs
+  cross-pod bytes exactly per level.
 * ``dense``            — vanilla data-parallel all-reduce baseline.
 """
 from __future__ import annotations
@@ -64,6 +69,16 @@ class SyncConfig:
     k_max: Optional[int] = None
     # hierarchical only: re-compression ratio for the intra-pod mean
     pod_ratio: Optional[float] = None
+    # hierarchical + bucketed: per-bucket pod re-compression ratios
+    # (index-aligned with BucketPlan.buckets), overriding the global
+    # ``pod_ratio`` bucket by bucket. Produced by ``autotune_pod_ratios``
+    # from each bucket's realized mass capture so attention-sized and
+    # bias-sized buckets don't share one k.
+    pod_ratios: Optional[Tuple[float, ...]] = None
+    # mass-capture target the autotuner sizes each bucket's pod k for:
+    # the smallest k whose top-k captures this fraction of the bucket's
+    # per-row squared mass (clamped to the pod mean's support bound).
+    pod_mass_target: float = 0.9
     data_axes: Tuple[str, ...] = ("data",)
     pod_axis: Optional[str] = None  # set on multi-pod meshes
     value_dtype: str = "float32"
@@ -121,6 +136,16 @@ class SyncConfig:
     def pod_k_for(self, row_len: int) -> int:
         r = self.pod_ratio if self.pod_ratio is not None else self.ratio
         k = max(self.k_min, int(round(r * row_len)))
+        if self.k_max is not None:
+            k = min(k, self.k_max)
+        return min(k, row_len)
+
+    def pod_k_for_bucket(self, bucket: int, row_len: int) -> int:
+        """Pod-stage k for one bucket: the autotuned per-bucket ratio
+        when ``pod_ratios`` is set, the global ``pod_ratio`` otherwise."""
+        if self.pod_ratios is None or bucket >= len(self.pod_ratios):
+            return self.pod_k_for(row_len)
+        k = max(self.k_min, int(round(self.pod_ratios[bucket] * row_len)))
         if self.k_max is not None:
             k = min(k, self.k_max)
         return min(k, row_len)
@@ -302,10 +327,19 @@ def _leaf_sparse_sync(u: Array, k_row: int, axes, value_dtype,
 def _leaf_hierarchical_sync(u, k_row, k_pod, data_axes, pod_axis, value_dtype,
                             constrain=lambda x: x, topk=_row_topk,
                             densify=None, wire: str = "unpacked"):
-    """Two-stage: intra-pod gather -> densify -> re-compress -> inter-pod.
-    Both gather stages go over the packed wire when ``wire="packed"``."""
+    """Two-level scheme: worker selections gather intra-pod at ``k_row``,
+    the intra-pod mean is re-selected at ``k_pod`` and only that summary
+    crosses the pod boundary; the pod-level residual is returned for the
+    caller to fold into error-feedback memory (mass conservation:
+    mean_w(u) == update + mean_w(new_memory) holds exactly up to
+    float-sum association). Both gather stages go over the packed wire
+    when ``wire="packed"``. Returns
+    (update, own, residual, (intra_pod_bytes, cross_pod_bytes))."""
+    from repro.core import encoding as enc
+
     densify = densify or _row_scatter
     rows = u.size // u.shape[-1]
+    cols = u.shape[-1]
     vals, idx = topk(u, k_row, constrain)
     own = densify(u.shape, vals, idx, u.dtype, constrain)
     if wire == "packed":
@@ -323,15 +357,17 @@ def _leaf_hierarchical_sync(u, k_row, k_pod, data_axes, pod_axis, value_dtype,
     if wire == "packed":
         w2 = _wire_spec(u, k_pod, value_dtype)
         av, ai = _gather_packed(pvals, pidx, (pod_axis,), w2)
-        nbytes = w1.nbytes + w2.nbytes
     else:
         av, ai = _gather_pairs(pvals, pidx, (pod_axis,))
-        itemsize = jnp.dtype(value_dtype).itemsize
-        nbytes = rows * (k_row + k_pod) * (itemsize + 4)
+    name = jnp.dtype(value_dtype).name
+    level_bytes = (
+        enc.message_nbytes(rows, cols, k_row, name, wire),
+        enc.message_nbytes(rows, cols, k_pod, name, wire),
+    )
     n_pods = compat.axis_size(pod_axis)
     update = (densify(u.shape, av, ai, value_dtype, constrain)
               / n_pods).astype(u.dtype)
-    return update, own, residual.astype(u.dtype), nbytes
+    return update, own, residual.astype(u.dtype), level_bytes
 
 
 def _leaf_dense_sync(u: Array, axes):
@@ -401,11 +437,12 @@ def sparse_sync_gradients(
         C = u.shape[-1]
         topk, densify = _pick_selection(cfg, cfg.k_for(C))
         if cfg.strategy == "hierarchical" and cfg.pod_axis is not None:
-            upd, own, residual, nbytes = _leaf_hierarchical_sync(
+            upd, own, residual, level_bytes = _leaf_hierarchical_sync(
                 u, cfg.k_for(C), cfg.pod_k_for(C), tuple(cfg.data_axes),
                 cfg.pod_axis, value_dtype, constrain, topk, densify,
                 wire=cfg.wire,
             )
+            nbytes = sum(level_bytes)
             new_m = (u - own) + residual
         elif cfg.strategy in ("sparse_allgather", "hierarchical"):
             upd, own, nbytes = _leaf_sparse_sync(
@@ -470,7 +507,7 @@ def bucketed_sync_gradients(
     )
     g_bufs = bk.pack(plan, grad_tree, dtype=jnp.float32)
     ups, mems, total_bytes = [], [], 0
-    for spec, m, g in zip(plan.buckets, memory_bufs, g_bufs):
+    for b, (spec, m, g) in enumerate(zip(plan.buckets, memory_bufs, g_bufs)):
         u = m + eta * g
         if cfg.strategy == "dense" or spec.kind == "dense":
             upd, own, nbytes = _leaf_dense_sync(u, all_axes)
@@ -481,11 +518,15 @@ def bucketed_sync_gradients(
         k_row = cfg.k_for(spec.cols)
         topk, densify = _pick_selection(cfg, k_row)
         if cfg.strategy == "hierarchical" and cfg.pod_axis is not None:
-            upd, own, residual, nbytes = _leaf_hierarchical_sync(
-                u, k_row, cfg.pod_k_for(spec.cols), tuple(cfg.data_axes),
-                cfg.pod_axis, value_dtype, topk=topk, densify=densify,
-                wire=cfg.wire,
+            # true two-level: worker->pod at k_row, pod mean re-selected
+            # at this bucket's own pod k (autotuned via cfg.pod_ratios),
+            # pod residual folded into the bucket-space memory
+            upd, own, residual, level_bytes = _leaf_hierarchical_sync(
+                u, k_row, cfg.pod_k_for_bucket(b, spec.cols),
+                tuple(cfg.data_axes), cfg.pod_axis, value_dtype,
+                topk=topk, densify=densify, wire=cfg.wire,
             )
+            nbytes = sum(level_bytes)
             mems.append((u - own) + residual)
         elif cfg.strategy in ("sparse_allgather", "hierarchical"):
             upd, own, nbytes = _leaf_sparse_sync(
@@ -502,7 +543,8 @@ def bucketed_sync_gradients(
     return bk.unpack(plan, ups), tuple(mems), total_bytes
 
 
-def _sparse_leaf_bytes(cfg: SyncConfig, rows: int, cols: int) -> int:
+def _sparse_leaf_bytes(cfg: SyncConfig, rows: int, cols: int,
+                       pod_k: Optional[int] = None) -> int:
     """Exact per-worker bytes one sparse leaf/bucket puts on the wire:
     the packed ``WireSpec`` buffer size (header + bit-packed sections) or
     the raw (value_dtype, int32) pair arrays, per gather stage."""
@@ -510,26 +552,127 @@ def _sparse_leaf_bytes(cfg: SyncConfig, rows: int, cols: int) -> int:
 
     ks = [cfg.k_for(cols)]
     if cfg.strategy == "hierarchical" and cfg.pod_axis is not None:
-        ks.append(cfg.pod_k_for(cols))
-    if cfg.wire == "packed":
-        name = jnp.dtype(cfg.value_dtype).name
-        return sum(
-            enc.WireSpec(rows, cols, k, name).nbytes for k in ks
-        )
-    itemsize = jnp.dtype(cfg.value_dtype).itemsize
-    return sum(rows * k * (itemsize + 4) for k in ks)
+        ks.append(pod_k if pod_k is not None else cfg.pod_k_for(cols))
+    name = jnp.dtype(cfg.value_dtype).name
+    return sum(enc.message_nbytes(rows, cols, k, name, cfg.wire) for k in ks)
 
 
-def bucketed_message_bytes(cfg: SyncConfig, plan) -> int:
+def autotune_pod_ratios(cfg: SyncConfig, plan, u_bufs, n_data: int,
+                        mass_target: Optional[float] = None) -> tuple:
+    """Per-bucket pod re-compression ratios from realized mass capture.
+
+    The pod-stage selection sees the intra-pod mean, whose per-row
+    support is bounded by ``n_data * k_row`` — shipping more slots than
+    that is pure waste, and shipping the same k for every bucket wastes
+    slots on buckets whose mass concentrates early. For each sparse
+    bucket this picks the smallest k whose top-k captures
+    ``cfg.pod_mass_target`` of the mass the pod stage can see at all,
+    clamped to [k_min, support bound], and returns ratio = k / cols.
+    Normalizing within the visible support (not the full row) is what
+    makes the target meaningful per bucket: a heavy-tailed bucket
+    reaches it in a handful of slots, a flat one keeps most of the
+    bound.
+
+    ``u_bufs`` leaves are concrete bucket buffers of u = m + eta*g:
+
+    * ``(n_shards, rows, cols)`` — per-data-shard buffers. The pod
+      stage is SIMULATED exactly: per-shard top-``k_row`` selection,
+      densify, mean — the mass-capture curve is measured on the
+      realized pod-mean proxy, so overlapping worker selections (highly
+      correlated shard gradients) concentrate mass and shrink k.
+    * ``(rows, cols)`` — a single global buffer; its top-``support``
+      tail curve is the (more conservative) proxy.
+
+    Host-side calibration: call once on concrete buffers, bake the
+    result into ``SyncConfig.pod_ratios`` before building the jitted
+    step (wire layouts need static k). Dense buckets get ratio 1.0
+    (never consulted)."""
+    import numpy as np
+
+    from repro.core import buckets as bk
+
+    target = cfg.pod_mass_target if mass_target is None else mass_target
+    ratios = []
+    for spec, u in zip(plan.buckets, u_bufs):
+        if spec.kind == "dense":
+            ratios.append(1.0)
+            continue
+        k_row = cfg.k_for(spec.cols)
+        support = max(1, min(spec.cols, n_data * k_row))
+        if u.ndim == 3:  # simulate the realized pod mean from shards
+            _, idx = jax.lax.top_k(jnp.abs(u.astype(jnp.float32)), k_row)
+            vals = jnp.take_along_axis(u, idx.astype(jnp.int32), axis=-1)
+            sel = _row_scatter(u.shape, vals, idx.astype(jnp.int32),
+                               jnp.float32)
+            u = jnp.mean(sel, axis=0)
+        frac = np.asarray(bk.bucket_mass_capture(u, support))
+        rel = frac / max(float(frac[-1]), 1e-30)  # within-support capture
+        k = int(np.searchsorted(rel, target, side="left")) + 1
+        k = max(cfg.k_min, min(k, support))
+        ratios.append(k / spec.cols)
+    return tuple(ratios)
+
+
+def bucketed_message_bytes(cfg: SyncConfig, plan, *, by_level: bool = False,
+                           n_data: Optional[int] = None):
     """Per-worker per-step transmitted bytes for a BucketPlan — the exact
     size of the buffers the sync all-gathers (index cost is the bucket's
-    row-local ceil(log2 cols) bits when ``cfg.wire == "packed"``)."""
-    total = 0
-    for spec in plan.buckets:
+    row-local ceil(log2 cols) bits when ``cfg.wire == "packed"``).
+
+    With ``by_level=True`` returns ``{"intra", "cross", "total"}`` —
+    the per-worker bytes that stay inside a pod vs cross the pod
+    boundary on a ``(pod, data)`` mesh:
+
+    * hierarchical: level 1 (k_row pairs, data-axis gather) is intra;
+      only the re-compressed level-2 summary (this bucket's pod k)
+      crosses pods.
+    * flat strategies: the data-axis gather is intra, but the pod-axis
+      gather then ships the CONCATENATED data-axis buffer — every
+      worker lane re-transmits ``n_data`` messages across the boundary
+      (pass ``n_data``; this is the fan-in the two-level scheme wins
+      back).
+    * dense buckets/strategy: the all-reduce moves ~buffer-size bytes
+      at each level.
+
+    ``total`` keeps the historical meaning (sum of the per-stage
+    messages this worker emits) and equals the no-argument return.
+    """
+    from repro.core import encoding as enc
+
+    if by_level and cfg.pod_axis is not None and n_data is None and (
+        cfg.strategy not in ("hierarchical", "dense")
+    ):
+        raise ValueError(
+            "by_level accounting for a flat strategy on a pod mesh needs "
+            "n_data (the concatenated data-axis buffer is what crosses "
+            "the pod boundary)"
+        )
+    name = jnp.dtype(cfg.value_dtype).name
+    intra = cross = total = 0
+    pod = cfg.pod_axis is not None
+    for b, spec in enumerate(plan.buckets):
         if cfg.strategy == "dense" or spec.kind == "dense":
-            total += spec.rows * spec.cols * 4
+            nb = spec.rows * spec.cols * 4
+            total += nb
+            intra += nb
+            cross += nb if pod else 0
+        elif cfg.strategy == "hierarchical" and pod:
+            lvl1 = enc.message_nbytes(
+                spec.rows, spec.cols, cfg.k_for(spec.cols), name, cfg.wire)
+            lvl2 = enc.message_nbytes(
+                spec.rows, spec.cols, cfg.pod_k_for_bucket(b, spec.cols),
+                name, cfg.wire)
+            total += lvl1 + lvl2
+            intra += lvl1
+            cross += lvl2
         else:
-            total += _sparse_leaf_bytes(cfg, spec.rows, spec.cols)
+            msg = _sparse_leaf_bytes(cfg, spec.rows, spec.cols)
+            total += msg
+            intra += msg
+            if pod and n_data is not None:
+                cross += n_data * msg
+    if by_level:
+        return {"intra": intra, "cross": cross, "total": total}
     return total
 
 

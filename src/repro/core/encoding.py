@@ -101,6 +101,20 @@ def reduction_factor(d: int, k: float, bits_per_value: int = 32) -> float:
     return dense_bits(d, bits_per_value) / sparse_bits(d, k, bits_per_value)
 
 
+def message_nbytes(
+    rows: int, cols: int, k: int, value_dtype="float32",
+    wire: str = "unpacked",
+) -> int:
+    """Exact bytes one sparse (rows, cols, k) message puts on the wire:
+    the packed ``WireSpec`` buffer size (header + bit-packed sections) or
+    the raw (value_dtype values, int32 indices) pair arrays. This is the
+    single source of truth for per-gather-stage byte accounting — the
+    two-level bucketed sync calls it once per level."""
+    if wire == "packed":
+        return WireSpec(rows, cols, k, jnp.dtype(value_dtype).name).nbytes
+    return rows * k * (jnp.dtype(value_dtype).itemsize + 4)
+
+
 # ---------------------------------------------------------------------------
 # packed wire codec
 # ---------------------------------------------------------------------------

@@ -1,0 +1,102 @@
+"""Shared diagnostic harness for the two-level pod sync invariants.
+
+One synthetic probe used by BOTH the `hierarchy` bench subprocess and
+the slow property test (`tests/test_hierarchical_bucketed.py`) — the
+invariant definitions live here once instead of in two embedded script
+string literals. Runs the two-level bucketed sync on a tiny 2-bucket
+tree over a real ``(pod, data)`` mesh, once per wire format, and
+reports everything the scheme guarantees:
+
+* **conservation_max_err** — exact two-level mass conservation:
+  ``mean_w(u) == update + mean_w(new_memory)`` (both residual levels
+  fold back into bucket memory; float-sum association is the only
+  slack).
+* **bit_identical** — packed and unpacked wires produce bitwise equal
+  updates AND memories.
+* **accounting_exact** — the bytes the sync realizes equal the static
+  ``bucketed_message_bytes`` prediction, per wire.
+
+Must run under enough host devices for the mesh (see the subprocess
+pattern in tests/test_distributed.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import buckets as bk
+from repro.core.distributed import (
+    SyncConfig,
+    bucketed_message_bytes,
+    bucketed_sync_gradients,
+)
+from repro.utils.compat import shard_map
+
+
+def two_level_selfcheck(mesh, ratio: float = 0.05, pod_ratio: float = 0.1,
+                        eta: float = 0.3) -> dict:
+    """Probe the two-level sync invariants on ``mesh`` (must have axes
+    ``("pod", "data")``). Returns a dict of the three invariant
+    measurements plus the per-wire byte accounting."""
+    W = int(np.prod([mesh.shape[a] for a in ("pod", "data")]))
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(0), (16, 384)),
+            "b": jax.random.normal(jax.random.PRNGKey(1), (40,))}
+    plan = bk.make_plan(tree, cols=128, dense_below=64)
+    gs = jax.tree.map(lambda x: jnp.stack(
+        [x * (1 + 0.1 * i) + 0.01 * i for i in range(W)]), tree)
+    mem = tuple(
+        jax.random.normal(jax.random.PRNGKey(9 + b), (W,) + s.shape)
+        * (0.1 if s.kind == "sparse" else 0.0)
+        for b, s in enumerate(plan.buckets))
+
+    realized = {}
+
+    def run(wire):
+        cfg = SyncConfig(ratio=ratio, strategy="hierarchical",
+                         data_axes=("data",), pod_axis="pod",
+                         bucketed=True, bucket_cols=128, wire=wire,
+                         pod_ratios=(1.0, pod_ratio))
+
+        def sync(mem, g):
+            upd, new_mem, nbytes = bucketed_sync_gradients(
+                cfg, plan, jax.tree.map(lambda m: m[0], mem),
+                jax.tree.map(lambda x: x[0], g), jnp.float32(eta))
+            realized[wire] = nbytes  # static python int, trace-time
+            return upd, jax.tree.map(lambda m: m[None], new_mem)
+
+        wspec = jax.tree.map(lambda _: P(("pod", "data")), mem)
+        gspec = jax.tree.map(lambda _: P(("pod", "data")), gs)
+        upd, new_mem = shard_map(
+            sync, mesh=mesh, in_specs=(wspec, gspec),
+            out_specs=(jax.tree.map(lambda _: P(), tree), wspec))(mem, gs)
+        return upd, new_mem, cfg
+
+    upd_p, mem_p, cfg_p = run("packed")
+    upd_u, mem_u, cfg_u = run("unpacked")
+    bit = all(np.array_equal(np.asarray(a), np.asarray(b))
+              for a, b in zip(jax.tree.leaves((upd_p, mem_p)),
+                              jax.tree.leaves((upd_u, mem_u))))
+
+    err = 0.0
+    upd_bufs = bk.pack(plan, upd_p, dtype=jnp.float32)
+    for b in range(len(plan.buckets)):
+        u_w = jnp.stack([
+            mem[b][w] + eta * bk.pack(
+                plan, jax.tree.map(lambda x, w=w: x[w], gs),
+                dtype=jnp.float32)[b]
+            for w in range(W)])
+        lhs = jnp.mean(u_w, axis=0)
+        rhs = upd_bufs[b] + jnp.mean(mem_p[b], axis=0)
+        err = max(err, float(jnp.max(jnp.abs(lhs - rhs))))
+
+    acc = {w: bucketed_message_bytes(c, plan)
+           for w, c in (("packed", cfg_p), ("unpacked", cfg_u))}
+    return {
+        "bit_identical": bool(bit),
+        "conservation_max_err": err,
+        "accounting_exact": realized == acc,
+        "realized_bytes": realized,
+        "accounted_bytes": acc,
+    }

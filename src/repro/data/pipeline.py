@@ -6,10 +6,9 @@ sharded over the data axes, everything else replicated.
 """
 from __future__ import annotations
 
-import collections
 import threading
 import queue
-from typing import Callable, Iterator, Optional
+from typing import Iterator
 
 import jax
 import numpy as np

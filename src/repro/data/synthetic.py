@@ -13,7 +13,7 @@ Two kinds:
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional, Tuple
+from typing import Iterator
 
 import numpy as np
 

@@ -77,7 +77,7 @@ def make_delta_spec(
     docstring); ``value_dtype="float32"`` keeps the stream bitwise-exact.
     """
     wires: List[enc.WireSpec] = []
-    for spec in plan.buckets:
+    for b, spec in enumerate(plan.buckets):
         if cfg.strategy == "dense" or spec.kind == "dense":
             wires.append(
                 enc.WireSpec(spec.rows, spec.cols, spec.cols, value_dtype,
@@ -85,7 +85,7 @@ def make_delta_spec(
             )
             continue
         if cfg.strategy == "hierarchical" and cfg.pod_axis is not None:
-            support = n_pods * cfg.pod_k_for(spec.cols)
+            support = n_pods * cfg.pod_k_for_bucket(b, spec.cols)
         else:
             support = workers * cfg.k_for(spec.cols)
         wires.append(

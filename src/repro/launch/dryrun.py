@@ -36,7 +36,7 @@ from repro.configs import ARCH_IDS, SHAPES, get_config
 from repro.core.distributed import SyncConfig, message_bytes
 from repro.launch import sharding as shd
 from repro.launch.mesh import make_production_mesh, n_chips
-from repro.launch.serve import make_serve_step, serve_shardings, make_prefill_step
+from repro.launch.serve import make_serve_step, make_prefill_step
 from repro.launch.train import (
     TrainConfig,
     init_train_state,

@@ -23,6 +23,17 @@ def make_debug_mesh(n_data: int = 4, n_model: int = 2):
     return make_mesh((n_data, n_model), ("data", "model"))
 
 
+def make_pod_debug_mesh(n_pods: int = 2, n_data: int = 4, n_model: int = 1):
+    """Multi-pod mesh for CPU tests of the two-level pod sync (requires
+    ``XLA_FLAGS=--xla_force_host_platform_device_count>=n_pods*n_data``)."""
+    return make_mesh((n_pods, n_data, n_model), ("pod", "data", "model"))
+
+
+def mesh_from_config(mc):
+    """Materialize a ``repro.configs.MeshConfig`` (named mesh layout)."""
+    return make_mesh(mc.shape, mc.axis_names)
+
+
 def data_axes_of(mesh) -> tuple:
     return tuple(a for a in mesh.axis_names if a == "data")
 

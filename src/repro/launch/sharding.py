@@ -16,7 +16,6 @@ Conventions (per pod: mesh ("data", "model"); multi-pod adds leading
 from __future__ import annotations
 
 import contextvars
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -23,8 +23,6 @@ Optimizer modes:
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,7 +35,6 @@ from repro.core.distributed import (
     sparse_sync_gradients,
 )
 from repro.launch import sharding as shd
-from repro.optim import adam as adam_lib
 from repro.utils import compat
 
 Array = jax.Array
@@ -61,6 +58,12 @@ class TrainConfig:
     # sixth output: a tuple of uint32 wire buffers.
     emit_deltas: bool = False
     delta_value_dtype: str = "float32"  # bf16 halves the stream (lossy)
+    # Two-level pod sync: autotune per-bucket pod re-compression ratios
+    # (SyncConfig.pod_ratios) from the first batch's realized gradient
+    # mass capture when training hierarchical+bucketed on a pod mesh and
+    # no explicit ratios were given (see
+    # repro.core.distributed.autotune_pod_ratios).
+    pod_autotune: bool = True
 
 
 def _eta_schedule(tc: TrainConfig):
@@ -373,6 +376,72 @@ def make_train_step(model, mesh, tc: TrainConfig):
 # ---------------------------------------------------------------------------
 
 
+def _maybe_autotune_pod_ratios(model, mesh, tc: TrainConfig, plan, params,
+                               batches):
+    """Calibration pass for the two-level pod sync: when training
+    hierarchical + bucketed on a pod mesh with no explicit
+    ``SyncConfig.pod_ratios``, peek the first batch, measure each
+    bucket's realized gradient mass capture (u = eta*g at zero memory),
+    and bake per-bucket pod ratios into the static sync config before
+    the jitted step is built (wire layouts need static k). Returns
+    ``(tc, batches)`` with the peeked batch pushed back."""
+    import itertools
+
+    from repro.core.distributed import autotune_pod_ratios
+
+    if not (tc.pod_autotune and plan is not None
+            and tc.sync.strategy == "hierarchical"
+            and "pod" in mesh.axis_names
+            and tc.sync.pod_ratios is None):
+        return tc, batches
+    first = next(batches, None)
+    if first is None:
+        return tc, batches
+    n_data = int(mesh.shape["data"])
+    B = jax.tree.leaves(first)[0].shape[0]
+    gfn = jax.jit(jax.grad(lambda p, b: model.loss(p, b), has_aux=True))
+
+    def u_of(batch):
+        g, _ = gfn(params, batch)
+        return bk.pack(
+            plan,
+            jax.tree.map(lambda x: tc.eta * x.astype(jnp.float32), g),
+            dtype=jnp.float32,
+        )
+
+    if B % n_data == 0 and n_data > 1:
+        # per-data-shard gradients: the autotuner simulates the realized
+        # pod mean (per-shard top-k, densify, mean), so overlapping
+        # worker selections shrink the pod k
+        per_shard = [
+            u_of(jax.tree.map(
+                lambda x: x[i * (B // n_data):(i + 1) * (B // n_data)],
+                first))
+            for i in range(n_data)
+        ]
+        u_bufs = [
+            jnp.stack([s[b] for s in per_shard])
+            for b in range(len(plan.buckets))
+        ]
+    else:
+        u_bufs = u_of(first)
+    ratios = autotune_pod_ratios(tc.sync, plan, u_bufs, n_data=n_data)
+    tc = dataclasses.replace(
+        tc, sync=dataclasses.replace(tc.sync, pod_ratios=ratios)
+    )
+    from repro.core.distributed import bucketed_message_bytes
+
+    lv = bucketed_message_bytes(
+        dataclasses.replace(tc.sync, pod_axis="pod"), plan, by_level=True
+    )
+    print(
+        "pod autotune: ratios="
+        + ",".join(f"{r:.4g}" for r in ratios)
+        + f"  intra-pod {lv['intra']}B cross-pod {lv['cross']}B /step/worker"
+    )
+    return tc, itertools.chain([first], batches)
+
+
 def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
           checkpointer=None, ckpt_every: int = 0, log_every: int = 10,
           rng=None, delta_sink=None, ckpt_wire: bool = False,
@@ -395,6 +464,10 @@ def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
     if ckpt_wire and plan is None:
         raise ValueError("ckpt_wire requires sync.bucketed (a BucketPlan)")
     params, memory, opt, count = init_train_state(model, mesh, tc, rng=rng)
+    batches = iter(batches)
+    tc, batches = _maybe_autotune_pod_ratios(
+        model, mesh, tc, plan, params, batches
+    )
     base_params = None
     if ckpt_wire and checkpointer is not None:
         from repro.launch.serve import replica_copy
@@ -443,7 +516,7 @@ def main():
     import argparse
 
     from repro.checkpoint import Checkpointer
-    from repro.configs import ARCH_IDS, get_smoke_config
+    from repro.configs import ARCH_IDS, MESHES, get_smoke_config
     from repro.data import token_batches
     from repro.data.pipeline import ShardedBatcher
     from repro.models import build_model
@@ -455,6 +528,22 @@ def main():
     ap.add_argument("--eta", type=float, default=0.5)
     ap.add_argument("--ratio", type=float, default=0.01)
     ap.add_argument("--strategy", default="sparse_allgather")
+    ap.add_argument("--mesh", default=None, choices=sorted(MESHES),
+                    help="named MeshConfig (repro.configs.MESHES); the "
+                         "smoke_2pod layout exercises the two-level pod "
+                         "sync on 8 forced host devices")
+    ap.add_argument("--pods", type=int, default=1,
+                    help="ad-hoc (pod, data) mesh: split the available "
+                         "devices into this many pods (hierarchical "
+                         "strategy re-compresses at the pod boundary)")
+    ap.add_argument("--pod-ratio", type=float, default=None,
+                    help="global pod re-compression ratio (hierarchical); "
+                         "autotuned per bucket by default")
+    ap.add_argument("--pod-mass-target", type=float, default=0.9,
+                    help="mass-capture target for the per-bucket pod-"
+                         "ratio autotune")
+    ap.add_argument("--no-pod-autotune", action="store_true",
+                    help="disable the per-bucket pod-ratio calibration")
     ap.add_argument("--bucketed", action="store_true",
                     help="flat-buffer bucketed sync (repro.core.buckets)")
     ap.add_argument("--wire", default="unpacked",
@@ -475,19 +564,38 @@ def main():
                          "section of wire checkpoints")
     args = ap.parse_args()
 
-    mesh = compat.make_mesh((jax.device_count(), 1), ("data", "model"))
+    if args.mesh:
+        from repro.launch.mesh import mesh_from_config
+
+        mesh = mesh_from_config(MESHES[args.mesh])
+    elif args.pods > 1:
+        n = jax.device_count()
+        if n % args.pods:
+            ap.error(f"--pods {args.pods} does not divide {n} devices")
+        mesh = compat.make_mesh(
+            (args.pods, n // args.pods, 1), ("pod", "data", "model")
+        )
+    else:
+        mesh = compat.make_mesh((jax.device_count(), 1), ("data", "model"))
+    batch_axes = (
+        ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    )
     cfg = get_smoke_config(args.arch)
     model = build_model(cfg)
     tc = TrainConfig(optimizer=args.optimizer, eta=args.eta,
                      emit_deltas=args.emit_deltas,
+                     pod_autotune=not args.no_pod_autotune,
                      sync=SyncConfig(ratio=args.ratio,
                                      strategy=args.strategy,
                                      wire=args.wire,
+                                     pod_ratio=args.pod_ratio,
+                                     pod_mass_target=args.pod_mass_target,
                                      bucketed=args.bucketed
                                      or args.emit_deltas
                                      or args.ckpt_wire))
     batches = ShardedBatcher(
-        mesh, token_batches(cfg.vocab_size, args.batch, args.seq, seed=0)
+        mesh, token_batches(cfg.vocab_size, args.batch, args.seq, seed=0),
+        batch_axes=batch_axes,
     )
     ck = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
     streamed = [0]

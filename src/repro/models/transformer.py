@@ -12,7 +12,6 @@ models on 512 dry-run devices. Optional full remat via cfg.remat.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

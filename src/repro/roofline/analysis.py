@@ -20,7 +20,6 @@ factor, which we fold in as 1.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Dict, List, Optional
 

@@ -6,8 +6,6 @@ import importlib.util
 import json
 import os
 
-import pytest
-
 _GATE = os.path.join(
     os.path.dirname(__file__), "..", "benchmarks", "check_regression.py"
 )
@@ -35,12 +33,60 @@ FANOUT = {
                      "publisher_ratio_vs_dense": 130.0}},
     "snapshot": {"ratio_vs_dense": 1.8, "exact": True},
 }
+HIER = {
+    "bit_identical": True, "conservation_ok": True,
+    "accounting_exact": True, "conservation_max_err": 2.4e-7,
+    "packed": {"two_level_cross": 100_000, "flat_cross": 400_000,
+               "cross_reduction": 4.0},
+    "unpacked": {"two_level_cross": 150_000, "flat_cross": 450_000,
+                 "cross_reduction": 3.0},
+}
 
 
 def test_identical_payloads_pass():
     assert gate.check_topk(TOPK, copy.deepcopy(TOPK), 1.15) == []
     assert gate.check_wire(WIRE, copy.deepcopy(WIRE), 1.15) == []
     assert gate.check_fanout(FANOUT, copy.deepcopy(FANOUT), 1.15) == []
+    assert gate.check_hierarchy(HIER, copy.deepcopy(HIER), 1.15) == []
+
+
+def test_hierarchy_regressions_fail():
+    # cross-pod reduction shrinking is a regression
+    fresh = copy.deepcopy(HIER)
+    fresh["packed"]["cross_reduction"] = 3.2
+    errs = gate.check_hierarchy(HIER, fresh, 1.15)
+    assert len(errs) == 1 and "packed" in errs[0]
+    # flipped correctness flags fail
+    for flag in ("bit_identical", "conservation_ok", "accounting_exact"):
+        fresh2 = copy.deepcopy(HIER)
+        fresh2[flag] = False
+        assert any(flag in e for e in gate.check_hierarchy(HIER, fresh2, 1.15))
+    # a tracked key going missing fails
+    fresh3 = copy.deepcopy(HIER)
+    del fresh3["unpacked"]["cross_reduction"]
+    assert any("missing" in e for e in gate.check_hierarchy(HIER, fresh3, 1.15))
+
+
+def test_summary_markdown(tmp_path):
+    basedir, freshdir = tmp_path / "base", tmp_path / "fresh"
+    basedir.mkdir(), freshdir.mkdir()
+    fresh_hier = copy.deepcopy(HIER)
+    fresh_hier["packed"]["cross_reduction"] = 4.2
+    (basedir / "BENCH_hierarchy.json").write_text(json.dumps(HIER))
+    (freshdir / "BENCH_hierarchy.json").write_text(json.dumps(fresh_hier))
+    out = tmp_path / "summary.md"
+    with open(out, "w") as fh:
+        gate.write_summary(str(basedir), str(freshdir), [], fh)
+    text = out.read_text()
+    assert "Bench regression gate" in text and "**ok**" in text
+    # nested metrics flatten to dotted rows with baseline/fresh/delta
+    assert "| packed.cross_reduction | 4 | 4.2 | +5.0% |" in text
+    assert "| bit_identical | true | true |" in text
+    with open(out, "w") as fh:
+        gate.write_summary(str(basedir), str(freshdir),
+                           ["hierarchy[packed]: regressed"], fh)
+    text = out.read_text()
+    assert "**FAIL**" in text and "hierarchy[packed]: regressed" in text
 
 
 def test_throughput_drop_fails_but_budget_holds():

@@ -1,6 +1,5 @@
 """Substrate tests: data pipeline, checkpointing, encoding accounting,
 roofline HLO parsing."""
-import os
 import tempfile
 
 import jax

@@ -1,12 +1,10 @@
 """End-to-end system tests on a 1x1 mesh (single real CPU device):
 train -> checkpoint -> restore -> serve."""
-import os
 import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import Checkpointer
 from repro.configs import get_smoke_config
