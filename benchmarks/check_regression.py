@@ -158,12 +158,53 @@ def check_hierarchy(base: dict, fresh: dict, max_slowdown: float,
     return errs
 
 
+def check_refresh(base: dict, fresh: dict, max_slowdown: float,
+                  kernel_retention: float = 0.5) -> List[str]:
+    """Live pod-ratio refresh (BENCH_refresh.json): the 2-pod smoke
+    run's correctness flags (>= 2 refreshes with ZERO recompiles after
+    step 1, replay-schedule bitwise identity, dynamic==static wire) and
+    the drifting-mass synthetic's guarantees — refresh-on holds its
+    realized mass-capture floor, refresh-off's shortfall stays visible
+    (capture_advantage), and re-packing to the live k keeps its byte
+    edge over the padded gather buffer."""
+    smoke_b, smoke_f = base.get("smoke", {}), fresh.get("smoke", {})
+    errs = _flag_off(smoke_f, smoke_b, "zero_recompiles", "refresh[smoke]")
+    errs += _flag_off(smoke_f, smoke_b, "replay_bitwise", "refresh[smoke]")
+    errs += _flag_off(smoke_f, smoke_b, "dynamic_matches_static",
+                      "refresh[smoke]")
+    drift_b, drift_f = base.get("drift", {}), fresh.get("drift", {})
+    errs += _ratio_regressed(
+        drift_f.get("refresh_on", {}), drift_b.get("refresh_on", {}),
+        "min_capture", "refresh[drift:on]")
+    errs += _ratio_regressed(drift_f, drift_b, "capture_advantage",
+                             "refresh[drift]")
+    errs += _ratio_regressed(drift_f, drift_b,
+                             "byte_ratio_padded_vs_effective",
+                             "refresh[drift]")
+    return errs
+
+
 CHECKS = {
     "BENCH_topk.json": check_topk,
     "BENCH_wire.json": check_wire,
     "BENCH_fanout.json": check_fanout,
     "BENCH_hierarchy.json": check_hierarchy,
+    "BENCH_refresh.json": check_refresh,
 }
+
+
+def _load_payload(path: str, role: str, fname: str):
+    """(payload, errors): an EXISTING but unreadable/corrupt payload is
+    a loud named gate failure, not a stack trace — a truncated baseline
+    must not silently disable every gate in the file."""
+    try:
+        with open(path) as f:
+            return json.load(f), []
+    except (OSError, ValueError) as e:
+        return None, [
+            f"{fname}: unreadable {role} payload at {path} "
+            f"({type(e).__name__}: {e})"
+        ]
 
 
 def run(baseline_dir: str, fresh_dir: str, max_slowdown: float,
@@ -178,10 +219,12 @@ def run(baseline_dir: str, fresh_dir: str, max_slowdown: float,
         if not os.path.exists(fpath):
             errors.append(f"{fname}: fresh run produced no file at {fpath}")
             continue
-        with open(bpath) as f:
-            base = json.load(f)
-        with open(fpath) as f:
-            fresh = json.load(f)
+        base, errs_b = _load_payload(bpath, "baseline", fname)
+        fresh, errs_f = _load_payload(fpath, "fresh", fname)
+        if errs_b or errs_f:
+            errors += errs_b + errs_f
+            print(f"[gate] {fname}: FAIL (unreadable)")
+            continue
         errs = checker(base, fresh, max_slowdown, kernel_retention)
         status = "FAIL" if errs else "ok"
         print(f"[gate] {fname}: {status}")
@@ -228,13 +271,16 @@ def write_summary(baseline_dir: str, fresh_dir: str, errors: List[str],
         fpath = os.path.join(fresh_dir, fname)
         if not os.path.exists(fpath):
             continue
-        with open(fpath) as f:
-            fresh = _flatten(json.load(f))
+        payload, errs = _load_payload(fpath, "fresh", fname)
+        if errs:  # already reported as a gate failure above
+            fh.write(f"### {fname}\n\nunreadable fresh payload\n\n")
+            continue
+        fresh = _flatten(payload)
         bpath = os.path.join(baseline_dir, fname)
         base: dict = {}
         if os.path.exists(bpath):
-            with open(bpath) as f:
-                base = _flatten(json.load(f))
+            payload, errs = _load_payload(bpath, "baseline", fname)
+            base = {} if errs else _flatten(payload)
         fh.write(f"### {fname}\n\n")
         fh.write("| metric | baseline | fresh | Δ |\n|---|---:|---:|---:|\n")
         for key in sorted(set(base) | set(fresh)):

@@ -18,6 +18,10 @@ to experiments/bench/*.json.
                      cross-pod bytes vs the flat bucketed baseline on a
                      2-pod mesh, packed==unpacked bit-identity, exact
                      mass conservation
+  refresh            live pod-ratio refresh on the k-padded dynamic
+                     wire: drifting-mass capture refresh-on vs -off,
+                     2-pod smoke run with zero recompiles + bitwise
+                     schedule replay
 
 Fast mode (default) uses reduced n/T; ``--full`` approaches paper scale.
 """
@@ -627,6 +631,228 @@ def hierarchy(full: bool = False):
     return payload
 
 
+def refresh(full: bool = False):
+    """Live pod-ratio refresh on the k-padded dynamic wire
+    (--pod-refresh-every): (a) a host-side DRIFTING-MASS synthetic run —
+    a bucket whose per-row mass concentration decays over training —
+    comparing realized cross-pod mass capture and effective cross-pod
+    bytes with the refresh ON vs OFF (off keeps the step-0 autotuned k
+    and drifts out of the target band); (b) a 2-pod rwkv6-3b smoke run
+    in a subprocess asserting >= 2 live refreshes with ZERO recompiles
+    after step 1 (the jit cache gains no entry past the one-time step-1
+    sharding settle — in particular none at a refresh), bitwise identity
+    against a fresh run replaying the recorded k schedule, and the
+    dynamic==static / conservation / accounting probe
+    (repro.core.selfcheck.dynamic_k_selfcheck). Writes
+    BENCH_refresh.json at the repo root."""
+    import subprocess
+    import textwrap
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import buckets as bk
+    from repro.core import encoding as enc
+    from repro.core.distributed import SyncConfig, autotune_pod_ratios
+
+    # -- (a) drifting-mass synthetic --------------------------------------
+    T = 16 if full else 10
+    every = 2
+    n_data = 4
+    rows, cols = 32, 512
+    target = 0.9
+    cfg = SyncConfig(ratio=0.02, strategy="hierarchical", pod_axis="pod",
+                     bucketed=True, bucket_cols=cols, wire="packed",
+                     pod_mass_target=target, pod_dynamic=True)
+    plan = bk.make_plan(
+        {"w": jax.ShapeDtypeStruct((rows * cols,), jnp.float32)},
+        cols=cols, dense_below=cols,
+    )
+    k_row = cfg.k_for(cols)
+    support = min(cols, n_data * k_row)
+    k_max = cfg.pod_k_max_for_bucket(0, cols, n_data)
+    rng = np.random.default_rng(7)
+    perm = np.stack([rng.permutation(cols) for _ in range(rows)])
+    signs = np.where(rng.random((rows, cols)) < 0.5, -1.0, 1.0)
+
+    def u_shards(t):
+        """Per-shard buffers whose per-row mass concentration DECAYS
+        over training: power-law exponent 1.6 -> 0.15 (heavy tail at
+        step 0, nearly flat at the end)."""
+        alpha = 1.6 - (1.6 - 0.15) * t / max(1, T - 1)
+        mag = (np.arange(1, cols + 1) ** (-alpha))[perm] * signs
+        shards = np.stack([
+            mag * (1.0 + 0.08 * rng.standard_normal((rows, cols)))
+            for _ in range(n_data)
+        ])
+        return [jnp.asarray(shards, jnp.float32)]
+
+    def capture_at(bufs, k):
+        pm = bk.simulate_pod_mean(bufs[0], k_row)
+        rel = bk.support_relative_capture(pm, support)
+        return float(rel[min(k, support) - 1])
+
+    def tuned_k(bufs):
+        r = autotune_pod_ratios(cfg, plan, bufs, n_data=n_data,
+                                k_caps=[k_max])[0]
+        return int(round(r * cols))
+
+    bufs0 = u_shards(0)
+    k_off = k_on = tuned_k(bufs0)
+    cap_on, cap_off, k_on_hist, eff_bytes = [], [], [], []
+    for t in range(T):
+        bufs = bufs0 if t == 0 else u_shards(t)
+        if t > 0 and t % every == 0:
+            k_on = tuned_k(bufs)  # the live refresh
+        cap_on.append(capture_at(bufs, k_on))
+        cap_off.append(capture_at(bufs, k_off))
+        k_on_hist.append(k_on)
+        eff_bytes.append(
+            enc.message_nbytes(rows, cols, k_on, "float32", "packed"))
+    padded = enc.message_nbytes(rows, cols, k_max, "float32", "packed")
+    mean_eff = sum(eff_bytes) / len(eff_bytes)
+    drift = {
+        "steps": T, "refresh_every": every, "mass_target": target,
+        "k_row": k_row, "support": support, "k_max": k_max,
+        "k_on": k_on_hist, "k_off": k_off,
+        "capture_on": cap_on, "capture_off": cap_off,
+        "refresh_on": {
+            "min_capture": min(cap_on),
+            "mean_capture": sum(cap_on) / T,
+            "mean_effective_cross_bytes": mean_eff,
+        },
+        "refresh_off": {
+            "min_capture": min(cap_off),
+            "mean_capture": sum(cap_off) / T,
+            "mean_effective_cross_bytes": enc.message_nbytes(
+                rows, cols, k_off, "float32", "packed"),
+        },
+        "capture_advantage": min(cap_on) - min(cap_off),
+        "padded_cross_bytes": padded,
+        "byte_ratio_padded_vs_effective": padded / mean_eff,
+    }
+    _emit("refresh_drift", 0.0,
+          f"min_capture_on={min(cap_on):.3f};"
+          f"min_capture_off={min(cap_off):.3f};"
+          f"k_on={k_on_hist[0]}->{k_on_hist[-1]};"
+          f"eff_bytes={eff_bytes[0]}->{eff_bytes[-1]};padded={padded}")
+
+    # -- (b) 2-pod rwkv6-3b smoke: zero recompiles + bitwise replay --------
+    steps = 6 if full else 5
+    script = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys, json, itertools
+        sys.path.insert(0, {src!r})
+        import jax, jax.numpy as jnp
+        import numpy as np
+        from repro.configs import MESHES, PodRefreshConfig, get_smoke_config
+        from repro.core.distributed import SyncConfig
+        from repro.core.selfcheck import bitwise_equal, dynamic_k_selfcheck
+        from repro.data import token_batches
+        from repro.data.pipeline import ShardedBatcher, take
+        from repro.launch.mesh import mesh_from_config
+        from repro.launch.train import TrainConfig, train
+        from repro.models import build_model
+
+        STEPS, EVERY = {steps}, 2
+        mesh = mesh_from_config(MESHES["smoke_2pod"])
+        cfg = get_smoke_config("rwkv6-3b")
+        model = build_model(cfg)
+        batch_list = list(take(iter(ShardedBatcher(
+            mesh, token_batches(cfg.vocab_size, 8, 32, seed=5),
+            batch_axes=("pod", "data"), prefetch=0)), STEPS))
+        sync = SyncConfig(ratio=0.02, strategy="hierarchical",
+                          bucketed=True, wire="packed")
+
+        # run A: live refresh every EVERY steps
+        sched, diag_a = [], {{}}
+        tc_a = TrainConfig(optimizer="memsgd", eta=0.3, sync=sync,
+                           pod_refresh=PodRefreshConfig(every=EVERY))
+        pa, ma, _, _, _ = train(
+            model, mesh, tc_a, iter(batch_list), n_steps=STEPS,
+            log_every=0, rng=jax.random.PRNGKey(0),
+            refresh_cb=lambda i, ks: sched.append((i, list(ks))),
+            diagnostics=diag_a)
+
+        # run B: FRESH run replaying the recorded k schedule
+        diag_b = {{}}
+        tc_b = TrainConfig(optimizer="memsgd", eta=0.3, sync=sync)
+        pb, mb, _, _, _ = train(
+            model, mesh, tc_b, iter(batch_list), n_steps=STEPS,
+            log_every=0, rng=jax.random.PRNGKey(0),
+            pod_k_schedule=[(i, tuple(ks)) for i, ks in sched],
+            diagnostics=diag_b)
+
+        probe = dynamic_k_selfcheck(mesh)
+        # the jit cache may gain ONE entry at step 1 as donated/committed
+        # shardings settle (any run does that, refresh or not); entries
+        # added after that are real recompiles and must be zero — in
+        # particular at the refresh boundaries (steps 2 and 4)
+        print(json.dumps({{
+            "refreshes": len(sched),
+            "k_schedule": sched,
+            "initial_pod_ks": list(diag_a["initial_pod_ks"]),
+            "step_cache_sizes": [diag_a["step_cache_sizes"],
+                                 diag_b["step_cache_sizes"]],
+            "zero_recompiles": (diag_a["steady_state_recompiles"] == 0
+                                and diag_b["steady_state_recompiles"] == 0),
+            "replay_bitwise": bool(bitwise_equal(pa, pb)
+                                   and bitwise_equal(ma, mb)),
+            "dynamic_matches_static": probe["dynamic_matches_static"],
+            "conservation_max_err": probe["conservation_max_err"],
+            "accounting_exact": probe["accounting_exact"]}}))
+        """
+    ).format(src=os.path.join(_ROOT, "src"), steps=steps)
+    t0 = time.time()
+    out = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        timeout=1800,
+    )
+    assert out.returncode == 0, out.stderr[-4000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    wall_us = (time.time() - t0) * 1e6
+    smoke = {
+        "plan": "rwkv6-3b-smoke", "mesh": "smoke_2pod", "steps": steps,
+        "refresh_every": 2,
+        "refreshes": rec["refreshes"],
+        "k_schedule": rec["k_schedule"],
+        "initial_pod_ks": rec["initial_pod_ks"],
+        "step_cache_sizes": rec["step_cache_sizes"],
+        "zero_recompiles": rec["zero_recompiles"],
+        "replay_bitwise": rec["replay_bitwise"],
+        "dynamic_matches_static": rec["dynamic_matches_static"],
+        "conservation_max_err": rec["conservation_max_err"],
+        "accounting_exact": rec["accounting_exact"],
+    }
+    _emit("refresh_smoke", wall_us / max(1, 2 * steps),
+          f"refreshes={rec['refreshes']};"
+          f"zero_recompiles={rec['zero_recompiles']};"
+          f"replay_bitwise={rec['replay_bitwise']};"
+          f"dynamic_matches_static={rec['dynamic_matches_static']}")
+
+    payload = {"drift": drift, "smoke": smoke}
+    _save("refresh", payload)
+    with open(os.path.join(_ROOT, "BENCH_refresh.json"), "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    # acceptance claims: >= 2 refreshes, zero recompiles after step 1,
+    # bitwise replay, dynamic == static; refresh-on holds the capture
+    # band the frozen step-0 k drifts out of, at fewer effective bytes
+    # than the padded gather
+    assert smoke["refreshes"] >= 2, smoke
+    assert smoke["zero_recompiles"], smoke
+    assert smoke["replay_bitwise"], smoke
+    assert smoke["dynamic_matches_static"], smoke
+    assert smoke["conservation_max_err"] < 1e-5, smoke
+    assert smoke["accounting_exact"], smoke
+    assert drift["refresh_on"]["min_capture"] >= target - 0.1, drift
+    assert drift["refresh_off"]["min_capture"] < target - 0.15, drift
+    assert drift["capture_advantage"] > 0.1, drift
+    assert drift["byte_ratio_padded_vs_effective"] > 1.0, drift
+    return payload
+
+
 def remark23_ultra(full: bool = False):
     """Remark 2.3 ultra-sparsification: transmit on average LESS THAN ONE
     coordinate per step (k < 1) and still converge (with memory)."""
@@ -669,6 +895,7 @@ BENCHES = {
     "wire_codec": wire_codec,
     "fanout": fanout,
     "hierarchy": hierarchy,
+    "refresh": refresh,
     "remark23_ultra": remark23_ultra,
 }
 

@@ -18,6 +18,7 @@ from repro.configs.base import (
     MESHES,
     MeshConfig,
     ModelConfig,
+    PodRefreshConfig,
     SHAPES,
     ShapeConfig,
 )
@@ -57,6 +58,7 @@ __all__ = [
     "ModelConfig",
     "MeshConfig",
     "MESHES",
+    "PodRefreshConfig",
     "ShapeConfig",
     "SHAPES",
     "ARCH_IDS",

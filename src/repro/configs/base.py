@@ -106,6 +106,30 @@ SHAPES = {
 
 
 @dataclasses.dataclass(frozen=True)
+class PodRefreshConfig:
+    """Cadence + targets for the LIVE pod-ratio refresh (two-level
+    bucketed sync only): every ``every`` steps the train driver
+    re-measures each bucket's realized mass capture on the live
+    memory+gradient buffers (``distributed.autotune_pod_ratios``) and
+    feeds the new per-bucket pod ks into the SAME jitted step — the
+    k-padded wire (``SyncConfig.pod_dynamic``) makes that a pure data
+    change, zero recompiles.
+    """
+
+    every: int = 0  # steps between re-calibrations (0 = off)
+    # mass-capture target for refreshes (None: SyncConfig.pod_mass_target)
+    mass_target: Optional[float] = None
+    # cap on the static padded pod k as a fraction of bucket cols
+    # (None: the n_data * k_row support bound) — smaller caps shrink the
+    # padded gather buffer but bound how far a refresh can raise k
+    k_max_ratio: Optional[float] = None
+
+    @property
+    def enabled(self) -> bool:
+        return self.every > 0
+
+
+@dataclasses.dataclass(frozen=True)
 class MeshConfig:
     """One named device-mesh layout.
 

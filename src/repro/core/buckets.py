@@ -184,6 +184,37 @@ def bucket_mass_capture(buf: Array, max_k: int) -> Array:
     return jnp.mean(frac, axis=0)
 
 
+def simulate_pod_mean(u: Array, k_row: int) -> Array:
+    """(n_shards, rows, cols) per-shard bucket buffers -> the realized
+    intra-pod mean the pod-stage selection sees: per-shard top-``k_row``
+    by |.|, densify, mean over shards. Overlapping shard selections
+    (correlated gradients) concentrate mass here, which is exactly why
+    the autotuner and the refresh bench measure capture on this proxy
+    instead of the raw buffers."""
+    n, rows, _ = u.shape
+    _, idx = jax.lax.top_k(jnp.abs(u.astype(jnp.float32)), k_row)
+    idx = idx.astype(jnp.int32)
+    vals = jnp.take_along_axis(u.astype(jnp.float32), idx, axis=-1)
+    sel = jnp.zeros(u.shape, jnp.float32)
+    ni = jnp.arange(n, dtype=jnp.int32)[:, None, None]
+    ri = jnp.arange(rows, dtype=jnp.int32)[None, :, None]
+    sel = sel.at[ni, ri, idx].add(vals)
+    return jnp.mean(sel, axis=0)
+
+
+def support_relative_capture(buf: Array, support: int):
+    """Mean per-row capture curve of a (rows, cols) buffer NORMALIZED
+    within the visible ``support`` (numpy array, length ``support``):
+    ``out[k-1]`` is the fraction of the mass the pod stage can see at
+    all that the k largest-|.| entries hold. Normalizing within the
+    support (not the full row) is what makes a mass target meaningful
+    per bucket — see ``distributed.autotune_pod_ratios``."""
+    import numpy as np
+
+    frac = np.asarray(bucket_mass_capture(buf, support))
+    return frac / max(float(frac[-1]), 1e-30)
+
+
 def init_bucket_memory(plan: BucketPlan, dtype=jnp.float32) -> Tuple[Array, ...]:
     """Zero error-feedback memory, one buffer per bucket (m_0 = 0)."""
     return tuple(

@@ -79,6 +79,20 @@ class SyncConfig:
     # the smallest k whose top-k captures this fraction of the bucket's
     # per-row squared mass (clamped to the pod mean's support bound).
     pod_mass_target: float = 0.9
+    # Runtime pod k (bucketed hierarchical only): shape every buffer,
+    # wire message and all-gather at the static per-bucket
+    # ``pod_k_max_for_bucket`` while the LIVE k arrives as a traced
+    # ``pod_ks`` argument to ``bucketed_sync_gradients`` — slots past
+    # the live k are masked to (-0.0, 0) no-ops (-0.0 is the additive
+    # identity; see ``kernels.topk_select.mask_live_k``) and the live
+    # count rides in the packed header (``encoding.LIVE_N_WORD``). This is what
+    # lets ``autotune_pod_ratios`` re-calibrate mid-run with ZERO
+    # recompiles (see launch.train ``--pod-refresh-every``).
+    pod_dynamic: bool = False
+    # optional cap (fraction of cols) on the static padded pod k —
+    # bounds the gathered buffer below the full n_data*k_row support
+    # bound at the cost of clamping how far a refresh can raise k.
+    pod_k_max_ratio: Optional[float] = None
     data_axes: Tuple[str, ...] = ("data",)
     pod_axis: Optional[str] = None  # set on multi-pod meshes
     value_dtype: str = "float32"
@@ -142,13 +156,56 @@ class SyncConfig:
 
     def pod_k_for_bucket(self, bucket: int, row_len: int) -> int:
         """Pod-stage k for one bucket: the autotuned per-bucket ratio
-        when ``pod_ratios`` is set, the global ``pod_ratio`` otherwise."""
-        if self.pod_ratios is None or bucket >= len(self.pod_ratios):
+        when ``pod_ratios`` is set, the global ``pod_ratio`` otherwise.
+
+        An out-of-range bucket index RAISES: ``pod_ratios`` must be
+        index-aligned with the bucket plan (``validate_pod_ratios``) —
+        the old silent fallback to the global ratio quietly desynced the
+        byte accounting from the wire layout."""
+        if self.pod_ratios is None:
             return self.pod_k_for(row_len)
+        if bucket >= len(self.pod_ratios):
+            raise ValueError(
+                f"SyncConfig.pod_ratios has {len(self.pod_ratios)} entries "
+                f"but bucket {bucket} was requested — pod_ratios must be "
+                "index-aligned with the BucketPlan (one ratio per bucket; "
+                "regenerate with autotune_pod_ratios)"
+            )
         k = max(self.k_min, int(round(self.pod_ratios[bucket] * row_len)))
         if self.k_max is not None:
             k = min(k, self.k_max)
         return min(k, row_len)
+
+    def pod_k_max_for_bucket(self, bucket: int, row_len: int,
+                             n_data: int) -> int:
+        """Static ceiling for one bucket's pod-stage k — the size the
+        dynamic (k-padded) path shapes its buffers/wire at, and the
+        support bound the delta spec must honour so a live ratio
+        refresh can never overflow it. Covers the pod mean's support
+        bound (``n_data * k_row`` — the most entries the pod stage can
+        see), optionally tightened by ``pod_k_max_ratio``, and never
+        below the statically configured pod k."""
+        cap = min(row_len, max(1, n_data * self.k_for(row_len)))
+        if self.pod_k_max_ratio is not None:
+            cap = min(cap, max(self.k_min,
+                               int(round(self.pod_k_max_ratio * row_len))))
+        return min(row_len, max(cap, self.pod_k_for_bucket(bucket, row_len)))
+
+
+def validate_pod_ratios(cfg: SyncConfig, plan) -> None:
+    """Raise when ``cfg.pod_ratios`` is not index-aligned with ``plan``
+    — a shorter tuple used to fall back silently to the global
+    ``pod_ratio`` for the tail buckets, desyncing the byte accounting
+    (and the delta-spec support bound) from what the wire ships."""
+    if cfg.pod_ratios is None:
+        return
+    if len(cfg.pod_ratios) != len(plan.buckets):
+        raise ValueError(
+            f"SyncConfig.pod_ratios has {len(cfg.pod_ratios)} entries for "
+            f"a {len(plan.buckets)}-bucket plan — regenerate them with "
+            "autotune_pod_ratios (one ratio per bucket, dense buckets "
+            "included)"
+        )
 
 
 def _axis_size(axis_names: Sequence[str]) -> int:
@@ -270,17 +327,20 @@ def _gather_pairs(vals, idx, axes):
     return vals, idx
 
 
-def _gather_packed(vals, idx, axes, wspec):
+def _gather_packed(vals, idx, axes, wspec, live_n=None):
     """Packed-wire gather: encode (vals, idx) into one uint32 buffer
     (repro.core.encoding), all-gather the buffer over every data axis,
     then decode each worker's message shard-locally. Returns (..., W*k)
     pairs in exactly the tile order ``_gather_pairs`` produces, so the
-    downstream densify/mean is bit-identical to the unpacked path."""
+    downstream densify/mean is bit-identical to the unpacked path.
+    ``live_n`` stamps a runtime live-slot count into the k-padded
+    message's header (the pairs past it must already be masked)."""
     from repro.core import encoding as enc
 
     k = wspec.k
     buf = enc.encode(
-        wspec, vals.reshape(-1, k), idx.reshape(-1, k).astype(jnp.int32)
+        wspec, vals.reshape(-1, k), idx.reshape(-1, k).astype(jnp.int32),
+        live_n=live_n,
     )
     for ax in axes:
         buf = jax.lax.all_gather(buf, ax, axis=0, tiled=True)
@@ -326,7 +386,8 @@ def _leaf_sparse_sync(u: Array, k_row: int, axes, value_dtype,
 
 def _leaf_hierarchical_sync(u, k_row, k_pod, data_axes, pod_axis, value_dtype,
                             constrain=lambda x: x, topk=_row_topk,
-                            densify=None, wire: str = "unpacked"):
+                            densify=None, wire: str = "unpacked",
+                            k_pod_live=None):
     """Two-level scheme: worker selections gather intra-pod at ``k_row``,
     the intra-pod mean is re-selected at ``k_pod`` and only that summary
     crosses the pod boundary; the pod-level residual is returned for the
@@ -334,7 +395,17 @@ def _leaf_hierarchical_sync(u, k_row, k_pod, data_axes, pod_axis, value_dtype,
     mean_w(u) == update + mean_w(new_memory) holds exactly up to
     float-sum association). Both gather stages go over the packed wire
     when ``wire="packed"``. Returns
-    (update, own, residual, (intra_pod_bytes, cross_pod_bytes))."""
+    (update, own, residual, (intra_pod_bytes, cross_pod_bytes)).
+
+    ``k_pod_live`` (traced scalar) switches the pod stage to RUNTIME k:
+    ``k_pod`` then acts as the static padded ceiling — selection runs at
+    ``k_pod`` and the tail slots past ``k_pod_live`` are masked to
+    (-0.0, 0) no-ops (``kernels.topk_select.mask_live_k``), so the live k
+    can move between steps without changing any shape, and mass
+    conservation holds for every live k (pod_sel + residual == pod_mean
+    exactly, whatever the selection kept). The reported cross-pod bytes
+    are the PADDED gather size — the in-jit cost; a header-aware
+    transport ships ``message_nbytes(..., live_k)`` instead."""
     from repro.core import encoding as enc
 
     densify = densify or _row_scatter
@@ -352,11 +423,17 @@ def _leaf_hierarchical_sync(u, k_row, k_pod, data_axes, pod_axis, value_dtype,
     n_data = _axis_size(data_axes)
     pod_mean = densify(u.shape, gv, gi, value_dtype, constrain) / n_data
     pvals, pidx = topk(pod_mean, k_pod, constrain)
+    if k_pod_live is not None:
+        from repro.kernels.topk_select import mask_live_k
+
+        pvals, pidx = mask_live_k(pvals, pidx, k_pod_live)
+        pvals, pidx = constrain(pvals), constrain(pidx)
     pod_sel = densify(u.shape, pvals, pidx, value_dtype, constrain)
     residual = pod_mean - pod_sel  # kept in memory (identical pod-wide)
     if wire == "packed":
         w2 = _wire_spec(u, k_pod, value_dtype)
-        av, ai = _gather_packed(pvals, pidx, (pod_axis,), w2)
+        av, ai = _gather_packed(pvals, pidx, (pod_axis,), w2,
+                                live_n=k_pod_live)
     else:
         av, ai = _gather_pairs(pvals, pidx, (pod_axis,))
     name = jnp.dtype(value_dtype).name
@@ -480,6 +557,7 @@ def bucketed_sync_gradients(
     grad_tree,
     eta: Array,
     return_bufs: bool = False,
+    pod_ks=None,
 ):
     """PARALLEL-MEM-SGD gradient exchange over flat buckets.
 
@@ -498,9 +576,34 @@ def bucketed_sync_gradients(
     new_memory_bufs, bytes_per_worker_per_step) — plus the update's
     bucket-space (rows, cols) buffers when ``return_bufs`` (consumed by
     the delta stream, which re-encodes them without re-packing the tree).
+
+    With ``cfg.pod_dynamic`` the hierarchical pod stage runs at RUNTIME
+    k: ``pod_ks`` (one int32 scalar per bucket, e.g. a traced (n_buckets,)
+    array indexed here) carries each bucket's live pod k, clipped to
+    [1, ``pod_k_max_for_bucket``]; every buffer/wire/all-gather keeps
+    the static k_max shape, so the same jitted step serves any k
+    schedule with zero recompiles.
     """
     from repro.core import buckets as bk
 
+    validate_pod_ratios(cfg, plan)
+    if cfg.pod_dynamic:
+        if cfg.strategy != "hierarchical" or cfg.pod_axis is None:
+            # the converse misconfiguration must be loud too: a flat/
+            # pod-less sync would otherwise silently drop the k schedule
+            # and run fully static
+            raise ValueError(
+                "SyncConfig.pod_dynamic (runtime pod k) requires "
+                "strategy='hierarchical' and a pod_axis — this config "
+                "would silently ignore the live k schedule"
+            )
+        if pod_ks is None:
+            raise ValueError(
+                "SyncConfig.pod_dynamic needs pod_ks (one live pod k "
+                "per bucket) — pass the traced schedule the train step "
+                "threads through, or unset pod_dynamic for static pod "
+                "ratios"
+            )
     value_dtype = jnp.dtype(cfg.value_dtype)
     all_axes = tuple(cfg.data_axes) + (
         (cfg.pod_axis,) if cfg.pod_axis else ()
@@ -521,10 +624,23 @@ def bucketed_sync_gradients(
             # true two-level: worker->pod at k_row, pod mean re-selected
             # at this bucket's own pod k (autotuned via cfg.pod_ratios),
             # pod residual folded into the bucket-space memory
+            if cfg.pod_dynamic:
+                # runtime k: shapes at the static k_max, live k masks
+                # the tail (clipped so a bad schedule can never overflow
+                # the padded wire layout)
+                n_data = _axis_size(tuple(cfg.data_axes))
+                k_pod = cfg.pod_k_max_for_bucket(b, spec.cols, n_data)
+                k_live = jnp.clip(
+                    jnp.asarray(pod_ks[b], jnp.int32), 1, k_pod
+                )
+            else:
+                k_pod = cfg.pod_k_for_bucket(b, spec.cols)
+                k_live = None
             upd, own, residual, level_bytes = _leaf_hierarchical_sync(
-                u, k_row, cfg.pod_k_for_bucket(b, spec.cols),
+                u, k_row, k_pod,
                 tuple(cfg.data_axes), cfg.pod_axis, value_dtype,
                 topk=topk, densify=densify, wire=cfg.wire,
+                k_pod_live=k_live,
             )
             nbytes = sum(level_bytes)
             mems.append((u - own) + residual)
@@ -558,7 +674,8 @@ def _sparse_leaf_bytes(cfg: SyncConfig, rows: int, cols: int,
 
 
 def autotune_pod_ratios(cfg: SyncConfig, plan, u_bufs, n_data: int,
-                        mass_target: Optional[float] = None) -> tuple:
+                        mass_target: Optional[float] = None,
+                        k_caps: Optional[Sequence[int]] = None) -> tuple:
     """Per-bucket pod re-compression ratios from realized mass capture.
 
     The pod-stage selection sees the intra-pod mean, whose per-row
@@ -583,38 +700,41 @@ def autotune_pod_ratios(cfg: SyncConfig, plan, u_bufs, n_data: int,
     * ``(rows, cols)`` — a single global buffer; its top-``support``
       tail curve is the (more conservative) proxy.
 
-    Host-side calibration: call once on concrete buffers, bake the
+    Host-side calibration: call once on concrete buffers and bake the
     result into ``SyncConfig.pod_ratios`` before building the jitted
-    step (wire layouts need static k). Dense buckets get ratio 1.0
-    (never consulted)."""
+    step (static wire layouts) — or, with ``cfg.pod_dynamic``, call it
+    again MID-RUN on the live memory+gradient buffers and feed the new
+    ks straight into the running step (the k-padded wire needs no
+    re-jit). ``k_caps`` clamps each bucket's k to the static padded
+    ceiling (``pod_k_max_for_bucket``) so a refresh can never outgrow
+    the compiled buffers. Dense buckets get ratio 1.0 (never
+    consulted)."""
     import numpy as np
 
     from repro.core import buckets as bk
 
     target = cfg.pod_mass_target if mass_target is None else mass_target
     ratios = []
-    for spec, u in zip(plan.buckets, u_bufs):
+    for i, (spec, u) in enumerate(zip(plan.buckets, u_bufs)):
         if spec.kind == "dense":
             ratios.append(1.0)
             continue
         k_row = cfg.k_for(spec.cols)
         support = max(1, min(spec.cols, n_data * k_row))
         if u.ndim == 3:  # simulate the realized pod mean from shards
-            _, idx = jax.lax.top_k(jnp.abs(u.astype(jnp.float32)), k_row)
-            vals = jnp.take_along_axis(u, idx.astype(jnp.int32), axis=-1)
-            sel = _row_scatter(u.shape, vals, idx.astype(jnp.int32),
-                               jnp.float32)
-            u = jnp.mean(sel, axis=0)
-        frac = np.asarray(bk.bucket_mass_capture(u, support))
-        rel = frac / max(float(frac[-1]), 1e-30)  # within-support capture
+            u = bk.simulate_pod_mean(u, k_row)
+        rel = bk.support_relative_capture(u, support)
         k = int(np.searchsorted(rel, target, side="left")) + 1
         k = max(cfg.k_min, min(k, support))
+        if k_caps is not None:
+            k = max(1, min(k, int(k_caps[i])))
         ratios.append(k / spec.cols)
     return tuple(ratios)
 
 
 def bucketed_message_bytes(cfg: SyncConfig, plan, *, by_level: bool = False,
-                           n_data: Optional[int] = None):
+                           n_data: Optional[int] = None,
+                           pod_ks: Optional[Sequence[int]] = None):
     """Per-worker per-step transmitted bytes for a BucketPlan — the exact
     size of the buffers the sync all-gathers (index cost is the bucket's
     row-local ceil(log2 cols) bits when ``cfg.wire == "packed"``).
@@ -636,9 +756,17 @@ def bucketed_message_bytes(cfg: SyncConfig, plan, *, by_level: bool = False,
 
     ``total`` keeps the historical meaning (sum of the per-stage
     messages this worker emits) and equals the no-argument return.
+
+    Runtime-k accounting: with ``cfg.pod_dynamic`` the level-2 message
+    is k-PADDED — pass ``n_data`` and the default counts the padded
+    gather buffer (``pod_k_max_for_bucket``), which is what the jitted
+    step realizes. Pass ``pod_ks`` (the live per-bucket ks) to count
+    the EFFECTIVE bytes instead: what a header-aware transport that
+    re-packs to the live count (``encoding.LIVE_N_WORD``) would ship.
     """
     from repro.core import encoding as enc
 
+    validate_pod_ratios(cfg, plan)
     if by_level and cfg.pod_axis is not None and n_data is None and (
         cfg.strategy not in ("hierarchical", "dense")
     ):
@@ -646,6 +774,14 @@ def bucketed_message_bytes(cfg: SyncConfig, plan, *, by_level: bool = False,
             "by_level accounting for a flat strategy on a pod mesh needs "
             "n_data (the concatenated data-axis buffer is what crosses "
             "the pod boundary)"
+        )
+    if (cfg.pod_dynamic and cfg.strategy == "hierarchical"
+            and cfg.pod_axis is not None
+            and pod_ks is None and n_data is None):
+        raise ValueError(
+            "pod-dynamic accounting needs n_data (the padded gather is "
+            "shaped at the n_data-dependent k_max) or pod_ks (the live "
+            "per-bucket ks, for effective-transport bytes)"
         )
     name = jnp.dtype(cfg.value_dtype).name
     intra = cross = total = 0
@@ -657,11 +793,16 @@ def bucketed_message_bytes(cfg: SyncConfig, plan, *, by_level: bool = False,
             intra += nb
             cross += nb if pod else 0
         elif cfg.strategy == "hierarchical" and pod:
+            if pod_ks is not None:
+                k2 = max(1, min(int(pod_ks[b]), spec.cols))
+            elif cfg.pod_dynamic:
+                k2 = cfg.pod_k_max_for_bucket(b, spec.cols, n_data)
+            else:
+                k2 = cfg.pod_k_for_bucket(b, spec.cols)
             lvl1 = enc.message_nbytes(
                 spec.rows, spec.cols, cfg.k_for(spec.cols), name, cfg.wire)
             lvl2 = enc.message_nbytes(
-                spec.rows, spec.cols, cfg.pod_k_for_bucket(b, spec.cols),
-                name, cfg.wire)
+                spec.rows, spec.cols, k2, name, cfg.wire)
             total += lvl1 + lvl2
             intra += lvl1
             cross += lvl2

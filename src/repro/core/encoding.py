@@ -22,6 +22,17 @@ Two layers live here:
                           (row-local indices, ceil(log2 cols) bits each,
                            LSB-first within each 32-bit word) ]
 
+   Header words: [magic, version, rows, cols, n_sel, dtype, kind,
+   live_n]. ``live_n`` (word ``LIVE_N_WORD``) is the only DYNAMIC header
+   field: a k-padded message (the runtime-k pod sync) is laid out at a
+   static ``n_sel == k_max`` but carries only ``live_n <= k_max``
+   meaningful pairs per row — the padded tail slots hold (-0.0, 0)
+   (the additive identity; see ``kernels.topk_select.mask_live_k``)
+   and scatter as exact no-ops. ``live_n == 0`` means "all n_sel slots live" (the
+   historical layout, where word 7 was reserved-zero). A header-aware
+   transport may re-pack to ``live_n`` slots before hitting the network;
+   ``message_nbytes(rows, cols, live_n, ...)`` is that effective size.
+
    Everything is static given the ``WireSpec`` (derived from a
    ``BucketPlan`` bucket or a leaf's row layout), so encode/decode are
    pure shift/mask tensor ops — jit/vmap/shard_map compatible, with no
@@ -50,6 +61,10 @@ Array = jax.Array
 MAGIC = 0x53505257  # "SPRW"
 VERSION = 1
 HEADER_WORDS = 8
+# header slot carrying the runtime live entry count of a k-padded
+# message (0 = every n_sel slot is live). The only header word that may
+# be a traced value — all layout-defining words stay static.
+LIVE_N_WORD = 7
 _DTYPE_CODES = {"float32": 0, "bfloat16": 1}
 _DTYPE_NAMES = {v: k for k, v in _DTYPE_CODES.items()}
 _KIND_CODES = {"sparse": 0, "dense": 1}
@@ -268,15 +283,28 @@ def _unpack_values(spec: WireSpec, packed: Array) -> Array:
     return jax.lax.bitcast_convert_type(u16, jnp.bfloat16)
 
 
-def encode(spec: WireSpec, vals: Array, idx: Optional[Array] = None) -> Array:
+def encode(spec: WireSpec, vals: Array, idx: Optional[Array] = None,
+           live_n: Optional[Array] = None) -> Array:
     """(values (rows, k), indices (rows, k)) -> flat uint32 wire buffer
     of exactly ``spec.words`` words (see the module docstring for the
-    layout). For ``kind="dense"`` pass the (rows, cols) values only."""
+    layout). For ``kind="dense"`` pass the (rows, cols) values only.
+
+    ``live_n`` (python int or traced scalar) stamps the runtime live
+    entry count of a k-padded message into header word ``LIVE_N_WORD``
+    — the layout stays the static ``spec``; only the first ``live_n``
+    slots per row are meaningful (the padded tail must already be
+    masked to (-0.0, 0) by the caller — see
+    ``kernels.topk_select.mask_live_k``)."""
     if vals.shape != (spec.rows, spec.n_sel):
         raise ValueError(
             f"values shape {vals.shape} != {(spec.rows, spec.n_sel)}"
         )
-    sections = [spec.header(), _pack_values(spec, vals).reshape(-1)]
+    header = spec.header()
+    if live_n is not None:
+        header = header.at[LIVE_N_WORD].set(
+            jnp.asarray(live_n).astype(jnp.uint32)
+        )
+    sections = [header, _pack_values(spec, vals).reshape(-1)]
     if spec.kind == "sparse":
         if idx is None:
             raise ValueError("sparse wire message needs indices")
@@ -308,6 +336,17 @@ def decode(spec: WireSpec, buf: Array) -> Tuple[Array, Optional[Array]]:
     )
     idx = _unpack_bits(packed_idx, spec.index_bits, spec.k)
     return vals, idx.astype(jnp.int32)
+
+
+def live_n_of(buf) -> Optional[int]:
+    """Host-side reader for the dynamic live entry count of a received
+    buffer: the number of meaningful slots per row, or ``None`` when the
+    message was encoded without one (word ``LIVE_N_WORD`` == 0, i.e.
+    every ``n_sel`` slot is live)."""
+    import numpy as np
+
+    n = int(np.asarray(buf[LIVE_N_WORD], dtype=np.uint32))
+    return n or None
 
 
 def transcode(

@@ -1,11 +1,12 @@
 """Shared diagnostic harness for the two-level pod sync invariants.
 
-One synthetic probe used by BOTH the `hierarchy` bench subprocess and
-the slow property test (`tests/test_hierarchical_bucketed.py`) — the
-invariant definitions live here once instead of in two embedded script
-string literals. Runs the two-level bucketed sync on a tiny 2-bucket
-tree over a real ``(pod, data)`` mesh, once per wire format, and
-reports everything the scheme guarantees:
+Synthetic probes used by BOTH the bench subprocesses (`hierarchy`,
+`refresh`) and the slow property tests — the invariant definitions live
+here once instead of in embedded script string literals.
+``two_level_selfcheck`` runs the two-level bucketed sync on a tiny
+2-bucket tree over a real ``(pod, data)`` mesh, once per wire format,
+and reports everything the scheme guarantees; ``dynamic_k_selfcheck``
+does the same for the RUNTIME pod-k (k-padded wire) path:
 
 * **conservation_max_err** — exact two-level mass conservation:
   ``mean_w(u) == update + mean_w(new_memory)`` (both residual levels
@@ -33,6 +34,22 @@ from repro.core.distributed import (
     bucketed_sync_gradients,
 )
 from repro.utils.compat import shard_map
+
+
+def bitwise_equal(a, b) -> bool:
+    """True iff the two pytrees have the same number of leaves and every
+    leaf pair is BYTE-identical (uint8 view — float ``==`` would miss
+    -0.0 vs +0.0 and NaN payloads). The one comparator every probe,
+    bench script and test should share — a truncating ``zip`` over
+    mismatched leaf lists silently passes."""
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    if len(la) != len(lb):
+        return False
+    return all(
+        np.array_equal(np.asarray(x).view(np.uint8),
+                       np.asarray(y).view(np.uint8))
+        for x, y in zip(la, lb)
+    )
 
 
 def two_level_selfcheck(mesh, ratio: float = 0.05, pod_ratio: float = 0.1,
@@ -99,4 +116,99 @@ def two_level_selfcheck(mesh, ratio: float = 0.05, pod_ratio: float = 0.1,
         "accounting_exact": realized == acc,
         "realized_bytes": realized,
         "accounted_bytes": acc,
+    }
+
+
+def dynamic_k_selfcheck(mesh, ratio: float = 0.05, eta: float = 0.3,
+                        ks=(9, 4)) -> dict:
+    """Probe the RUNTIME pod-k (k-padded wire) invariants on ``mesh``
+    (axes ``("pod", "data")``). Same tiny 2-bucket tree as
+    ``two_level_selfcheck``. Reports:
+
+    * **dynamic_matches_static** — for each wire format and each live k
+      in ``ks``, the dynamic path fed that k as a runtime value is
+      BITWISE identical to the static path compiled at that k, compared
+      on the APPLIED update (params - update) and the new memory:
+      padding the selection to k_max and masking the tail reproduces the
+      static computation. (The raw update may differ in the SIGN of
+      all-zero columns at k_live=1 — XLA's no-reduce special case — a
+      transient ±0.0 that cancels at application; see
+      ``kernels.topk_select.mask_live_k``.)
+    * **conservation_max_err** — two-level mass conservation under a
+      SWITCHED live k (the refresh-boundary invariant): for every live
+      k, ``mean_w(u) == update + mean_w(new_memory)``.
+    * **accounting_exact** — the realized gather bytes of the dynamic
+      path equal the k_max-padded ``bucketed_message_bytes`` prediction
+      (the padded buffer IS what the jitted step ships).
+    """
+    import dataclasses
+
+    W = int(np.prod([mesh.shape[a] for a in ("pod", "data")]))
+    n_data = int(mesh.shape["data"])
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(0), (16, 384)),
+            "b": jax.random.normal(jax.random.PRNGKey(1), (40,))}
+    plan = bk.make_plan(tree, cols=128, dense_below=64)
+    gs = jax.tree.map(lambda x: jnp.stack(
+        [x * (1 + 0.1 * i) + 0.01 * i for i in range(W)]), tree)
+    mem = tuple(
+        jax.random.normal(jax.random.PRNGKey(9 + b), (W,) + s.shape)
+        * (0.1 if s.kind == "sparse" else 0.0)
+        for b, s in enumerate(plan.buckets))
+
+    realized = {}
+
+    def run(cfg, pod_ks=None, tag=None):
+        def sync(mem_, g_):
+            kw = {"pod_ks": pod_ks} if pod_ks is not None else {}
+            upd, new_mem, nbytes = bucketed_sync_gradients(
+                cfg, plan, jax.tree.map(lambda m: m[0], mem_),
+                jax.tree.map(lambda x: x[0], g_), jnp.float32(eta), **kw)
+            if tag is not None:
+                realized[tag] = nbytes
+            return upd, jax.tree.map(lambda m: m[None], new_mem)
+
+        wspec = jax.tree.map(lambda _: P(("pod", "data")), mem)
+        gspec = jax.tree.map(lambda _: P(("pod", "data")), gs)
+        return shard_map(
+            sync, mesh=mesh, in_specs=(wspec, gspec),
+            out_specs=(jax.tree.map(lambda _: P(), tree), wspec))(mem, gs)
+
+    matches = True
+    cons_err = 0.0
+    acc_ok = True
+    for wire in ("packed", "unpacked"):
+        dyn = SyncConfig(ratio=ratio, strategy="hierarchical",
+                         data_axes=("data",), pod_axis="pod",
+                         bucketed=True, bucket_cols=128, wire=wire,
+                         pod_ratios=(1.0, ks[0] / 128), pod_dynamic=True)
+        for k_live in ks:
+            static = dataclasses.replace(
+                dyn, pod_dynamic=False, pod_ratios=(1.0, k_live / 128))
+            out_s = run(static)
+            tag = f"{wire}@{k_live}"
+            out_d = run(dyn, pod_ks=jnp.asarray([1, k_live], jnp.int32),
+                        tag=tag)
+            applied_s = jax.tree.map(lambda t, u: t - u, tree, out_s[0])
+            applied_d = jax.tree.map(lambda t, u: t - u, tree, out_d[0])
+            matches = matches and bitwise_equal((applied_s, out_s[1]),
+                                                (applied_d, out_d[1]))
+            acc_ok = acc_ok and realized[tag] == bucketed_message_bytes(
+                dyn, plan, n_data=n_data)
+            # conservation at this live k (the refresh-boundary invariant)
+            upd_bufs = bk.pack(plan, out_d[0], dtype=jnp.float32)
+            for b in range(len(plan.buckets)):
+                u_w = jnp.stack([
+                    mem[b][w] + eta * bk.pack(
+                        plan, jax.tree.map(lambda x, w=w: x[w], gs),
+                        dtype=jnp.float32)[b]
+                    for w in range(W)])
+                lhs = jnp.mean(u_w, axis=0)
+                rhs = upd_bufs[b] + jnp.mean(out_d[1][b], axis=0)
+                cons_err = max(cons_err,
+                               float(jnp.max(jnp.abs(lhs - rhs))))
+    return {
+        "dynamic_matches_static": bool(matches),
+        "conservation_max_err": cons_err,
+        "accounting_exact": bool(acc_ok),
+        "live_ks": list(ks),
     }

@@ -6,7 +6,12 @@ from repro.data.synthetic import (
     logreg_loss_np,
     logreg_grad_np,
 )
-from repro.data.pipeline import Prefetcher, ShardedBatcher, take
+from repro.data.pipeline import (
+    InfiniteStream,
+    Prefetcher,
+    ShardedBatcher,
+    take,
+)
 
 __all__ = [
     "token_batches",
@@ -15,6 +20,7 @@ __all__ = [
     "make_rcv1_like",
     "logreg_loss_np",
     "logreg_grad_np",
+    "InfiniteStream",
     "Prefetcher",
     "ShardedBatcher",
     "take",

@@ -15,6 +15,50 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 
+class InfiniteStream:
+    """Wrapper marking an iterator as EXPLICITLY unbounded.
+
+    ``repro.data.token_batches`` (and friends) never terminate, so
+    ``list(...)`` would loop forever eating RAM and ``len(...)`` is
+    meaningless — both have burned real CPU time. This wrapper makes the
+    misuse fail fast instead:
+
+    * ``len(stream)`` raises ``TypeError``.
+    * ``list(stream)`` / anything going through ``operator.length_hint``
+      raises ``RuntimeError`` up front (CPython swallows ``TypeError``
+      from ``__length_hint__`` and would happily iterate forever, so the
+      hint must raise a non-TypeError to stop ``list()``).
+
+    The sanctioned way to bound a stream is ``repro.data.take(it, n)``
+    (or ``itertools.islice``).
+    """
+
+    def __init__(self, it: Iterator):
+        self._it = iter(it)
+
+    def __iter__(self) -> "InfiniteStream":
+        return self
+
+    def __next__(self):
+        return next(self._it)
+
+    def __len__(self) -> int:
+        raise TypeError(
+            "infinite stream: len() is undefined — bound it with "
+            "repro.data.take(it, n)"
+        )
+
+    def __bool__(self) -> bool:
+        # without this, bool() falls back to the raising __len__
+        return True
+
+    def __length_hint__(self) -> int:
+        raise RuntimeError(
+            "infinite stream: list()/tuple() would never terminate — "
+            "bound it with repro.data.take(it, n)"
+        )
+
+
 class Prefetcher:
     """Background-thread prefetch of an iterator (depth-bounded)."""
 
@@ -43,7 +87,11 @@ class Prefetcher:
 
 
 class ShardedBatcher:
-    """Places host batches onto the mesh with batch-axis data sharding."""
+    """Places host batches onto the mesh with batch-axis data sharding.
+
+    Typically wraps an unbounded token stream, so ``len(...)`` and
+    ``list(...)`` are guarded the same way as ``InfiniteStream`` — bound
+    consumption with ``repro.data.take`` / ``itertools.islice``."""
 
     def __init__(self, mesh, it: Iterator[dict], batch_axes=("data",),
                  prefetch: int = 2):
@@ -55,6 +103,23 @@ class ShardedBatcher:
         spec = P(self.batch_axes) if ndim >= 1 else P()
         return NamedSharding(self.mesh, spec)
 
+    def __len__(self) -> int:
+        raise TypeError(
+            "ShardedBatcher wraps an (typically infinite) stream: len() "
+            "is undefined — bound it with repro.data.take(iter(b), n)"
+        )
+
+    def __bool__(self) -> bool:
+        # without this, bool() falls back to the raising __len__
+        return True
+
+    def __length_hint__(self) -> int:
+        raise RuntimeError(
+            "ShardedBatcher wraps an (typically infinite) stream: "
+            "list() may never terminate — bound it with "
+            "repro.data.take(iter(b), n)"
+        )
+
     def __iter__(self):
         for batch in self._it:
             yield {
@@ -64,7 +129,14 @@ class ShardedBatcher:
 
 
 def take(it: Iterator, n: int):
-    for i, item in enumerate(it):
-        if i >= n:
+    """The sanctioned bound for the infinite streams in this package:
+    yield the first ``n`` items, then stop — consuming EXACTLY ``n``
+    from the underlying iterator (the old ``enumerate``-based form
+    pulled and discarded an (n+1)th item, losing a batch at every
+    bound when consumers share one stream)."""
+    it = iter(it)
+    for _ in range(n):
+        try:
+            yield next(it)
+        except StopIteration:
             return
-        yield item

@@ -30,12 +30,31 @@ def token_batches(
     seed: int = 0,
     structured: bool = True,
 ) -> Iterator[dict]:
-    """Infinite iterator of {'tokens', 'labels'} numpy batches.
+    """INFINITE iterator of {'tokens', 'labels'} numpy batches.
 
     ``structured`` plants a learnable pattern: token_{t+1} depends on
     token_t via a fixed random permutation with noise, so cross-entropy
     can drop below the unigram entropy.
+
+    The stream never terminates: ``len(...)`` raises ``TypeError`` and
+    ``list(...)`` fails fast instead of hanging (see
+    ``repro.data.pipeline.InfiniteStream``); bound consumption with
+    ``repro.data.take(it, n)``.
     """
+    from repro.data.pipeline import InfiniteStream
+
+    return InfiniteStream(
+        _token_batches_gen(vocab_size, batch, seq_len, seed, structured)
+    )
+
+
+def _token_batches_gen(
+    vocab_size: int,
+    batch: int,
+    seq_len: int,
+    seed: int = 0,
+    structured: bool = True,
+) -> Iterator[dict]:
     rng = np.random.default_rng(seed)
     perm = rng.permutation(vocab_size)
     zipf_p = 1.0 / np.arange(1, vocab_size + 1)

@@ -199,6 +199,44 @@ def _threshold_topk_tile(x: Array, k: int) -> Tuple[Array, Array]:
     return _threshold_select(x, I, None, k)
 
 
+def mask_live_k(vals: Array, idx: Array, k_live) -> Tuple[Array, Array]:
+    """Restrict a contract-ordered top-``k_max`` selection to a RUNTIME
+    ``k_live <= k_max`` without changing shapes: slots ``>= k_live``
+    become (-0.0, 0), which densify/scatter as EXACT no-ops.
+
+    Because every selector here emits pairs sorted by (-|v|, index), the
+    first ``k_live`` slots of a top-``k_max`` selection ARE the
+    top-``k_live`` selection — so masking the tail of one static-shape
+    select is exactly equivalent to selecting at ``k_live``, for any
+    traced ``k_live``. (The bisection threshold in ``_kth_largest_bits``
+    is itself count-parameterized — ``k`` appears only in arithmetic
+    comparisons — but the compaction/ordering stages need a static slot
+    count, so the runtime-k path selects at the static ``k_max`` and
+    masks.) This is what lets the distributed pod stage move its k at
+    runtime while every buffer, wire message and all-gather stays shaped
+    at the compile-time ``k_max``.
+
+    The padded value is NEGATIVE zero on purpose: -0.0 is the additive
+    identity of IEEE float addition (``x + -0.0 == x`` bitwise for every
+    x, including both signed zeros), so a scatter-add densify over the
+    padded slots is an exact no-op and the error-feedback memory stays
+    BITWISE identical to the static-k computation (a +0.0 fill flips
+    -0.0 entries: ``-0.0 + 0.0 == +0.0``). One caveat survives: XLA
+    compiles a k=1 one-hot-einsum densify without a reduce (keeping
+    ``0*v`` signed zeros) while any multi-slot reduce inits at +0.0, so
+    the RAW update of a masked k_max select can differ from a static
+    k_live=1 compile in the sign of all-zero columns. That transient
+    ±0.0 cancels at application — ``p - (+/-0.0) == p`` for every
+    nonzero parameter — so applied params (and memory) remain bitwise
+    identical; compare those, not the raw update's zero signs."""
+    slot = jax.lax.broadcasted_iota(jnp.int32, idx.shape, idx.ndim - 1)
+    live = slot < jnp.asarray(k_live, jnp.int32)
+    return (
+        jnp.where(live, vals, jnp.full_like(vals, -0.0)),
+        jnp.where(live, idx, jnp.zeros_like(idx)),
+    )
+
+
 # ---------------------------------------------------------------------------
 # kernels
 # ---------------------------------------------------------------------------

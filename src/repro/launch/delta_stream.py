@@ -32,7 +32,12 @@ import jax.numpy as jnp
 
 from repro.core import buckets as bk
 from repro.core import encoding as enc
-from repro.core.distributed import SyncConfig, _row_scatter, _row_topk
+from repro.core.distributed import (
+    SyncConfig,
+    _row_scatter,
+    _row_topk,
+    validate_pod_ratios,
+)
 
 Array = jax.Array
 
@@ -75,7 +80,15 @@ def make_delta_spec(
 
     ``workers``/``n_pods`` bound the update support per row (see module
     docstring); ``value_dtype="float32"`` keeps the stream bitwise-exact.
+
+    With ``cfg.pod_dynamic`` the hierarchical support bound follows the
+    bucket's static ``pod_k_max_for_bucket`` — NOT the step-0 live k —
+    so a mid-run pod-ratio refresh that RAISES k can never exceed the
+    encoded support (the spec is fixed for the stream's lifetime; sizing
+    it from the current k would silently drop update entries after the
+    first upward refresh).
     """
+    validate_pod_ratios(cfg, plan)
     wires: List[enc.WireSpec] = []
     for b, spec in enumerate(plan.buckets):
         if cfg.strategy == "dense" or spec.kind == "dense":
@@ -85,7 +98,13 @@ def make_delta_spec(
             )
             continue
         if cfg.strategy == "hierarchical" and cfg.pod_axis is not None:
-            support = n_pods * cfg.pod_k_for_bucket(b, spec.cols)
+            if cfg.pod_dynamic:
+                n_data = max(1, workers // max(n_pods, 1))
+                support = n_pods * cfg.pod_k_max_for_bucket(
+                    b, spec.cols, n_data
+                )
+            else:
+                support = n_pods * cfg.pod_k_for_bucket(b, spec.cols)
         else:
             support = workers * cfg.k_for(spec.cols)
         wires.append(

@@ -23,11 +23,13 @@ Optimizer modes:
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.configs.base import PodRefreshConfig
 from repro.core import buckets as bk
 from repro.core.distributed import (
     SyncConfig,
@@ -64,6 +66,12 @@ class TrainConfig:
     # no explicit ratios were given (see
     # repro.core.distributed.autotune_pod_ratios).
     pod_autotune: bool = True
+    # Live pod-ratio refresh (configs.PodRefreshConfig): re-run the
+    # autotune every N steps on the live memory+gradient bucket buffers
+    # and feed the new per-bucket pod ks into the RUNNING jitted step —
+    # the k-padded wire (SyncConfig.pod_dynamic, forced on when enabled)
+    # makes the live k a plain data input, so no step ever re-jits.
+    pod_refresh: Optional[PodRefreshConfig] = None
 
 
 def _eta_schedule(tc: TrainConfig):
@@ -162,6 +170,13 @@ def make_train_step(model, mesh, tc: TrainConfig):
 
         (params, memory, opt, count, batch) ->
             (params, memory, opt, count, metrics)
+
+    With ``tc.sync.pod_dynamic`` (runtime pod k — the live-refresh
+    path) the step takes a sixth argument ``pod_ks``: an (n_buckets,)
+    int32 array of live per-bucket pod ks, replicated. Its SHAPE is
+    fixed by the bucket plan, so feeding a new schedule is a pure data
+    change — the step never re-traces (``step._cache_size()`` stays 1).
+    The static padded ceilings are exposed as ``step.pod_k_max``.
     """
     cfg = model.cfg
     data_axes = (("pod",) if "pod" in mesh.axis_names else ()) + ("data",)
@@ -179,6 +194,21 @@ def make_train_step(model, mesh, tc: TrainConfig):
     )
     worker = data_axes if len(data_axes) > 1 else data_axes[0]
     batch_spec = P(worker)
+    dyn = bool(sync_cfg.pod_dynamic)
+    if dyn and (plan is None or sync_cfg.strategy != "hierarchical"
+                or sync_cfg.pod_axis is None):
+        raise ValueError(
+            "sync.pod_dynamic (runtime pod k) requires sync.bucketed, "
+            "strategy='hierarchical' and a (pod, data) mesh"
+        )
+    pod_k_max = None
+    if dyn:
+        n_data_mesh = int(mesh.shape["data"])
+        pod_k_max = tuple(
+            sync_cfg.pod_k_max_for_bucket(b, s.cols, n_data_mesh)
+            if s.kind == "sparse" else 1
+            for b, s in enumerate(plan.buckets)
+        )
     dspec = None
     if tc.emit_deltas:
         if plan is None or tc.optimizer not in ("memsgd", "dense"):
@@ -199,7 +229,7 @@ def make_train_step(model, mesh, tc: TrainConfig):
         loss, metrics = model.loss(params, batch)
         return loss, metrics
 
-    def step_body(params, memory, opt, count, batch):
+    def step_body(params, memory, opt, count, batch, pod_ks=None):
         # params: full (model-auto) view; memory leaves (1, *shape) local
         params = jax.tree.map(
             lambda p, s: jax.lax.with_sharding_constraint(
@@ -263,11 +293,12 @@ def make_train_step(model, mesh, tc: TrainConfig):
         up_bufs = None
         if plan is not None and dspec is not None:
             update, new_mem, _, up_bufs = bucketed_sync_gradients(
-                sync_cfg, plan, mem_local, grads, eta, return_bufs=True
+                sync_cfg, plan, mem_local, grads, eta, return_bufs=True,
+                pod_ks=pod_ks,
             )
         elif plan is not None:
             update, new_mem, _ = bucketed_sync_gradients(
-                sync_cfg, plan, mem_local, grads, eta
+                sync_cfg, plan, mem_local, grads, eta, pod_ks=pod_ks
             )
         else:
             update, new_mem, _ = sparse_sync_gradients(
@@ -353,21 +384,26 @@ def make_train_step(model, mesh, tc: TrainConfig):
     if dspec is not None:
         out_specs += (tuple(P() for _ in dspec.wires),)
 
-    def step(params, memory, opt, count, batch):
+    def step(params, memory, opt, count, batch, *pod_ks):
+        # *pod_ks: exactly one (n_buckets,) int32 array on the dynamic
+        # path, nothing otherwise — one closure serves both so the
+        # specs can never diverge between them
         sm = compat.shard_map(
             step_body,
             mesh=mesh,
             in_specs=(pspec_P0, mem_manual, opt_in, P(),
-                      batch_specs(batch)),
+                      batch_specs(batch)) + ((P(),) if dyn else ()),
             out_specs=out_specs,
             axis_names=set(data_axes),
             check_vma=False,
         )
-        return sm(params, memory, opt, count, batch)
+        return sm(params, memory, opt, count, batch, *pod_ks)
 
     step = jax.jit(step, donate_argnums=(0, 1, 2))
     if dspec is not None:
         step.delta_spec = dspec  # static wire layout for replica decoders
+    if pod_k_max is not None:
+        step.pod_k_max = pod_k_max  # static padded pod-k ceilings
     return step
 
 
@@ -376,15 +412,73 @@ def make_train_step(model, mesh, tc: TrainConfig):
 # ---------------------------------------------------------------------------
 
 
+class PodRatioCalibrator:
+    """Host-side mass-capture calibration for the two-level pod sync.
+
+    ONE jitted grad fn serves both the first-batch calibration (zero
+    memory: u = eta*g) and every live refresh (u = m + eta*g on the
+    current batch and the live per-worker memory buffers), so a mid-run
+    refresh compiles nothing new — everything after step 1 is pure data
+    flow. When the global batch splits evenly into ``n_data`` shards the
+    per-shard buffers let ``autotune_pod_ratios`` simulate the realized
+    pod mean (overlapping shard selections shrink k); otherwise the
+    single global buffer's tail curve is the conservative proxy. For
+    per-worker memory the first ``n_data`` workers (pod 0) stand in on
+    the shard path, the worker mean on the global path.
+    """
+
+    def __init__(self, model, plan, n_data: int):
+        self.plan = plan
+        self.n_data = n_data
+        self._gfn = jax.jit(
+            jax.grad(lambda p, b: model.loss(p, b), has_aux=True)
+        )
+
+    def u_bufs(self, params, batch, eta, memory=None):
+        """Concrete per-bucket u = m + eta*g buffers for
+        ``autotune_pod_ratios`` — (n_data, rows, cols) per-shard stacks
+        when the batch divides, (rows, cols) otherwise."""
+        plan, n_data = self.plan, self.n_data
+        B = jax.tree.leaves(batch)[0].shape[0]
+
+        def u_of(bt):
+            g, _ = self._gfn(params, bt)
+            return bk.pack(
+                plan,
+                jax.tree.map(lambda x: eta * x.astype(jnp.float32), g),
+                dtype=jnp.float32,
+            )
+
+        if B % n_data == 0 and n_data > 1:
+            per_shard = [
+                u_of(jax.tree.map(
+                    lambda x: x[i * (B // n_data):(i + 1) * (B // n_data)],
+                    batch))
+                for i in range(n_data)
+            ]
+            return [
+                jnp.stack([s[b] for s in per_shard])
+                + (memory[b][:n_data] if memory is not None else 0.0)
+                for b in range(len(plan.buckets))
+            ]
+        u = u_of(batch)
+        if memory is not None:
+            u = [ub + jnp.mean(memory[b], axis=0)
+                 for b, ub in enumerate(u)]
+        return u
+
+
 def _maybe_autotune_pod_ratios(model, mesh, tc: TrainConfig, plan, params,
-                               batches):
+                               batches, calib=None):
     """Calibration pass for the two-level pod sync: when training
     hierarchical + bucketed on a pod mesh with no explicit
     ``SyncConfig.pod_ratios``, peek the first batch, measure each
     bucket's realized gradient mass capture (u = eta*g at zero memory),
     and bake per-bucket pod ratios into the static sync config before
     the jitted step is built (wire layouts need static k). Returns
-    ``(tc, batches)`` with the peeked batch pushed back."""
+    ``(tc, batches)`` with the peeked batch pushed back. Pass ``calib``
+    (a ``PodRatioCalibrator``) to share its jitted grad fn with the
+    live refresh loop."""
     import itertools
 
     from repro.core.distributed import autotune_pod_ratios
@@ -398,33 +492,8 @@ def _maybe_autotune_pod_ratios(model, mesh, tc: TrainConfig, plan, params,
     if first is None:
         return tc, batches
     n_data = int(mesh.shape["data"])
-    B = jax.tree.leaves(first)[0].shape[0]
-    gfn = jax.jit(jax.grad(lambda p, b: model.loss(p, b), has_aux=True))
-
-    def u_of(batch):
-        g, _ = gfn(params, batch)
-        return bk.pack(
-            plan,
-            jax.tree.map(lambda x: tc.eta * x.astype(jnp.float32), g),
-            dtype=jnp.float32,
-        )
-
-    if B % n_data == 0 and n_data > 1:
-        # per-data-shard gradients: the autotuner simulates the realized
-        # pod mean (per-shard top-k, densify, mean), so overlapping
-        # worker selections shrink the pod k
-        per_shard = [
-            u_of(jax.tree.map(
-                lambda x: x[i * (B // n_data):(i + 1) * (B // n_data)],
-                first))
-            for i in range(n_data)
-        ]
-        u_bufs = [
-            jnp.stack([s[b] for s in per_shard])
-            for b in range(len(plan.buckets))
-        ]
-    else:
-        u_bufs = u_of(first)
+    calib = calib or PodRatioCalibrator(model, plan, n_data)
+    u_bufs = calib.u_bufs(params, first, tc.eta)
     ratios = autotune_pod_ratios(tc.sync, plan, u_bufs, n_data=n_data)
     tc = dataclasses.replace(
         tc, sync=dataclasses.replace(tc.sync, pod_ratios=ratios)
@@ -432,7 +501,8 @@ def _maybe_autotune_pod_ratios(model, mesh, tc: TrainConfig, plan, params,
     from repro.core.distributed import bucketed_message_bytes
 
     lv = bucketed_message_bytes(
-        dataclasses.replace(tc.sync, pod_axis="pod"), plan, by_level=True
+        dataclasses.replace(tc.sync, pod_axis="pod"), plan, by_level=True,
+        n_data=n_data,
     )
     print(
         "pod autotune: ratios="
@@ -445,7 +515,8 @@ def _maybe_autotune_pod_ratios(model, mesh, tc: TrainConfig, plan, params,
 def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
           checkpointer=None, ckpt_every: int = 0, log_every: int = 10,
           rng=None, delta_sink=None, ckpt_wire: bool = False,
-          ckpt_memory_ratio: float = 0.05):
+          ckpt_memory_ratio: float = 0.05, refresh_cb=None,
+          pod_k_schedule=None, diagnostics=None):
     """End-to-end training loop. ``batches``: iterator of device-ready
     global batches (see repro.data.pipeline.ShardedBatcher).
 
@@ -459,14 +530,46 @@ def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
     diff-encoded against the boot state, the error-feedback memory
     top-k'-compressed at ``ckpt_memory_ratio`` — instead of dense f32
     dumps.
+
+    With ``tc.pod_refresh`` enabled, the per-bucket pod ks re-calibrate
+    every ``pod_refresh.every`` steps from the live memory+gradient
+    buffers, riding the k-padded dynamic wire into the SAME jitted step
+    (no recompile; ks clamp to the step's static ``pod_k_max``).
+    ``refresh_cb(step_index, ks_tuple)`` observes each applied refresh.
+    ``pod_k_schedule`` — a sequence of ``(step_index, ks_tuple)`` —
+    REPLAYS a recorded schedule instead of re-calibrating (the bitwise
+    reproducibility path: a fresh run fed the same schedule reproduces
+    the refreshed run exactly). Pass a dict as ``diagnostics`` to
+    receive ``step_cache_size`` (the jit cache population after the
+    run — 1 means zero recompiles past the first trace), the applied
+    ``pod_refresh_schedule`` and the ``initial_pod_ks``.
     """
     plan = _bucket_plan(tc, model.param_shapes())
     if ckpt_wire and plan is None:
         raise ValueError("ckpt_wire requires sync.bucketed (a BucketPlan)")
+    refresh = tc.pod_refresh if (
+        tc.pod_refresh is not None and tc.pod_refresh.enabled) else None
+    if refresh is not None or pod_k_schedule is not None:
+        kw = {"pod_dynamic": True}
+        if refresh is not None and refresh.k_max_ratio is not None:
+            kw["pod_k_max_ratio"] = refresh.k_max_ratio
+        tc = dataclasses.replace(
+            tc, sync=dataclasses.replace(tc.sync, **kw)
+        )
+    dyn = tc.sync.pod_dynamic
+    if dyn and (plan is None or tc.sync.strategy != "hierarchical"
+                or "pod" not in mesh.axis_names):
+        raise ValueError(
+            "pod_refresh / pod_k_schedule / sync.pod_dynamic require "
+            "sync.bucketed, strategy='hierarchical' and a (pod, data) mesh"
+        )
     params, memory, opt, count = init_train_state(model, mesh, tc, rng=rng)
     batches = iter(batches)
+    calib = None
+    if dyn:
+        calib = PodRatioCalibrator(model, plan, int(mesh.shape["data"]))
     tc, batches = _maybe_autotune_pod_ratios(
-        model, mesh, tc, plan, params, batches
+        model, mesh, tc, plan, params, batches, calib=calib
     )
     base_params = None
     if ckpt_wire and checkpointer is not None:
@@ -479,11 +582,84 @@ def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
     if oshard != ():
         opt = jax.device_put(opt, oshard)
     step = make_train_step(model, mesh, tc)
+    pod_ks = live_ks = k_caps = None
+    sched = dict(pod_k_schedule) if pod_k_schedule is not None else None
+    if dyn:
+        from repro.core.distributed import (
+            autotune_pod_ratios,
+            bucketed_message_bytes,
+        )
+
+        n_data = int(mesh.shape["data"])
+        k_caps = step.pod_k_max
+        live_ks = tuple(
+            tc.sync.pod_k_for_bucket(b, s.cols) if s.kind == "sparse" else 1
+            for b, s in enumerate(plan.buckets)
+        )
+        pod_ks = jnp.asarray(live_ks, jnp.int32)
     history = []
-    for i, batch in enumerate(batches):
-        if i >= n_steps:
-            break
-        out = step(params, memory, opt, count, batch)
+    applied_schedule = []
+    initial_pod_ks = live_ks
+    from repro.data.pipeline import take
+
+    # take() consumes EXACTLY n_steps from the (typically shared,
+    # typically infinite) stream — a bare `enumerate + break` would pull
+    # and discard one extra batch per run
+    for i, batch in enumerate(take(batches, n_steps)):
+        if dyn and sched is not None and i in sched:
+            # clamp to the step's static padded ceilings HOST-SIDE, so
+            # the recorded/applied schedule and the effective-byte
+            # accounting always describe the ks the wire realizes (the
+            # jitted step clips too, but silently)
+            live_ks = tuple(
+                max(1, min(int(k), int(c)))
+                for k, c in zip(sched[i], k_caps)
+            )
+            pod_ks = jnp.asarray(live_ks, jnp.int32)
+            applied_schedule.append((i, live_ks))
+        elif (dyn and sched is None and refresh is not None and i > 0
+              and i % refresh.every == 0):
+            # live re-calibration (an explicit pod_k_schedule REPLACES
+            # it entirely — a replay must stay deterministic even past
+            # the recorded entries): read-only on params/memory (fully
+            # materialized host-side before the donating step call),
+            # at the SAME eta the step applies — the scheduled eta_t
+            # (or adam's fixed 1.0); with eta decay the base eta would
+            # overweight the gradient in u = m + eta*g and mis-size k
+            eta_now = (
+                float(_eta_schedule(tc)(count))
+                if tc.optimizer in ("memsgd", "memsgd_momentum", "dense")
+                else 1.0
+            )
+            u_bufs = calib.u_bufs(params, batch, eta_now, memory=memory)
+            ratios = autotune_pod_ratios(
+                tc.sync, plan, u_bufs, n_data=n_data,
+                mass_target=refresh.mass_target, k_caps=k_caps,
+            )
+            live_ks = tuple(
+                int(round(r * s.cols)) if s.kind == "sparse" else 1
+                for r, s in zip(ratios, plan.buckets)
+            )
+            pod_ks = jnp.asarray(live_ks, jnp.int32)
+            lv = bucketed_message_bytes(
+                dataclasses.replace(tc.sync, pod_axis="pod"), plan,
+                by_level=True, n_data=n_data, pod_ks=live_ks,
+            )
+            print(
+                f"pod refresh @ step {i}: ks="
+                + ",".join(str(k) for k in live_ks)
+                + f"  effective cross-pod {lv['cross']}B /step/worker"
+            )
+            applied_schedule.append((i, live_ks))
+            if refresh_cb is not None:
+                refresh_cb(i, live_ks)
+        out = (step(params, memory, opt, count, batch, pod_ks)
+               if dyn else step(params, memory, opt, count, batch))
+        if diagnostics is not None:
+            cache = getattr(step, "_cache_size", None)
+            diagnostics.setdefault("step_cache_sizes", []).append(
+                int(cache()) if callable(cache) else None
+            )
         if tc.emit_deltas:
             params, memory, opt, count, metrics, delta = out
             if delta_sink is not None:
@@ -503,6 +679,22 @@ def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
                 )
             else:
                 checkpointer.save(i + 1, {"params": params})
+    if diagnostics is not None:
+        cache = getattr(step, "_cache_size", None)
+        diagnostics["step_cache_size"] = (
+            int(cache()) if callable(cache) else None
+        )
+        diagnostics["pod_refresh_schedule"] = applied_schedule
+        diagnostics["initial_pod_ks"] = initial_pod_ks
+        # steady-state compile check: entries added after the second
+        # step (the first call traces; the second may re-trace once as
+        # donated/committed shardings settle) are REAL recompiles — a
+        # live pod-k refresh must never add one
+        sizes = diagnostics.get("step_cache_sizes") or []
+        diagnostics["steady_state_recompiles"] = (
+            (sizes[-1] - sizes[min(1, len(sizes) - 1)])
+            if sizes and sizes[0] is not None else None
+        )
     return params, memory, opt, count, history
 
 
@@ -544,6 +736,18 @@ def main():
                          "ratio autotune")
     ap.add_argument("--no-pod-autotune", action="store_true",
                     help="disable the per-bucket pod-ratio calibration")
+    ap.add_argument("--pod-refresh-every", type=int, default=0,
+                    help="re-calibrate the per-bucket pod ks every N "
+                         "steps from the live memory+gradient buffers "
+                         "and feed them into the RUNNING jitted step "
+                         "(k-padded dynamic wire, zero recompiles; "
+                         "requires --strategy hierarchical on a pod "
+                         "mesh, implies --bucketed; 0 = off)")
+    ap.add_argument("--pod-k-max-ratio", type=float, default=None,
+                    help="cap the static padded pod k at this fraction "
+                         "of bucket cols (default: the n_data*k_row "
+                         "support bound) — smaller caps shrink the "
+                         "padded gather but bound upward refreshes")
     ap.add_argument("--bucketed", action="store_true",
                     help="flat-buffer bucketed sync (repro.core.buckets)")
     ap.add_argument("--wire", default="unpacked",
@@ -582,17 +786,26 @@ def main():
     )
     cfg = get_smoke_config(args.arch)
     model = build_model(cfg)
+    refresh = None
+    if args.pod_refresh_every > 0:
+        from repro.configs import PodRefreshConfig
+
+        refresh = PodRefreshConfig(every=args.pod_refresh_every,
+                                   k_max_ratio=args.pod_k_max_ratio)
     tc = TrainConfig(optimizer=args.optimizer, eta=args.eta,
                      emit_deltas=args.emit_deltas,
                      pod_autotune=not args.no_pod_autotune,
+                     pod_refresh=refresh,
                      sync=SyncConfig(ratio=args.ratio,
                                      strategy=args.strategy,
                                      wire=args.wire,
                                      pod_ratio=args.pod_ratio,
                                      pod_mass_target=args.pod_mass_target,
+                                     pod_k_max_ratio=args.pod_k_max_ratio,
                                      bucketed=args.bucketed
                                      or args.emit_deltas
-                                     or args.ckpt_wire))
+                                     or args.ckpt_wire
+                                     or args.pod_refresh_every > 0))
     batches = ShardedBatcher(
         mesh, token_batches(cfg.vocab_size, args.batch, args.seq, seed=0),
         batch_axes=batch_axes,

@@ -48,9 +48,21 @@ except ImportError:  # deterministic fallback
 
         @staticmethod
         def sampled_from(elements):
+            """<= _N_SAMPLES elements: cycle them (full coverage). More:
+            SPREAD picks (first/last + evenly spaced interior) so long
+            lists exercise their tail — the old first-N slice meant the
+            tail of a long ``sampled_from`` list was effectively dead
+            code under the fallback sweep."""
             elements = list(elements)
-            reps = -(-_N_SAMPLES // len(elements))
-            return _Strategy((elements * reps)[:_N_SAMPLES])
+            n = len(elements)
+            if n <= _N_SAMPLES:
+                reps = -(-_N_SAMPLES // n)
+                return _Strategy((elements * reps)[:_N_SAMPLES])
+            idxs = sorted(
+                {round(i * (n - 1) / (_N_SAMPLES - 1))
+                 for i in range(_N_SAMPLES)}
+            )
+            return _Strategy([elements[i] for i in idxs])
 
     st = _StrategiesShim()
 

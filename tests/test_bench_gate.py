@@ -41,6 +41,16 @@ HIER = {
     "unpacked": {"two_level_cross": 150_000, "flat_cross": 450_000,
                  "cross_reduction": 3.0},
 }
+REFRESH = {
+    "drift": {
+        "refresh_on": {"min_capture": 0.86},
+        "refresh_off": {"min_capture": 0.33},
+        "capture_advantage": 0.53,
+        "byte_ratio_padded_vs_effective": 7.6,
+    },
+    "smoke": {"refreshes": 2, "zero_recompiles": True,
+              "replay_bitwise": True, "dynamic_matches_static": True},
+}
 
 
 def test_identical_payloads_pass():
@@ -48,6 +58,58 @@ def test_identical_payloads_pass():
     assert gate.check_wire(WIRE, copy.deepcopy(WIRE), 1.15) == []
     assert gate.check_fanout(FANOUT, copy.deepcopy(FANOUT), 1.15) == []
     assert gate.check_hierarchy(HIER, copy.deepcopy(HIER), 1.15) == []
+    assert gate.check_refresh(REFRESH, copy.deepcopy(REFRESH), 1.15) == []
+
+
+def test_refresh_regressions_fail():
+    # a flipped correctness flag (recompiles appeared, replay diverged,
+    # dynamic path no longer matches static) fails
+    for flag in ("zero_recompiles", "replay_bitwise",
+                 "dynamic_matches_static"):
+        fresh = copy.deepcopy(REFRESH)
+        fresh["smoke"][flag] = False
+        assert any(flag in e
+                   for e in gate.check_refresh(REFRESH, fresh, 1.15))
+    # mass-capture floor: refresh-on dropping out of the band fails
+    fresh2 = copy.deepcopy(REFRESH)
+    fresh2["drift"]["refresh_on"]["min_capture"] = 0.5
+    assert any("min_capture" in e
+               for e in gate.check_refresh(REFRESH, fresh2, 1.15))
+    # the live-k byte edge over the padded buffer shrinking fails
+    fresh3 = copy.deepcopy(REFRESH)
+    fresh3["drift"]["byte_ratio_padded_vs_effective"] = 2.0
+    assert any("byte_ratio" in e
+               for e in gate.check_refresh(REFRESH, fresh3, 1.15))
+    # losing the on-vs-off capture advantage fails
+    fresh4 = copy.deepcopy(REFRESH)
+    fresh4["drift"]["capture_advantage"] = 0.01
+    assert any("capture_advantage" in e
+               for e in gate.check_refresh(REFRESH, fresh4, 1.15))
+
+
+def test_unreadable_payload_fails_loudly(tmp_path):
+    """An EXISTING but corrupt/unreadable BENCH_*.json must be a named
+    gate failure, not a stack trace (and not a silent skip that would
+    disable every gate in the file)."""
+    basedir, freshdir = tmp_path / "base", tmp_path / "fresh"
+    basedir.mkdir(), freshdir.mkdir()
+    (basedir / "BENCH_topk.json").write_text(json.dumps(TOPK))
+    (freshdir / "BENCH_topk.json").write_text(json.dumps(TOPK))
+    # corrupt baseline
+    (basedir / "BENCH_topk.json").write_text("{truncated")
+    errs = gate.run(str(basedir), str(freshdir), 1.15)
+    assert len(errs) == 1 and "unreadable baseline" in errs[0]
+    assert "BENCH_topk.json" in errs[0]
+    # corrupt fresh
+    (basedir / "BENCH_topk.json").write_text(json.dumps(TOPK))
+    (freshdir / "BENCH_topk.json").write_text("")
+    errs = gate.run(str(basedir), str(freshdir), 1.15)
+    assert len(errs) == 1 and "unreadable fresh" in errs[0]
+    # the summary writer survives the corrupt payloads too
+    out = tmp_path / "summary.md"
+    with open(out, "w") as fh:
+        gate.write_summary(str(basedir), str(freshdir), errs, fh)
+    assert "unreadable fresh payload" in out.read_text()
 
 
 def test_hierarchy_regressions_fail():

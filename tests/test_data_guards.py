@@ -1,0 +1,74 @@
+"""Infinite-iterator guards (repro.data): ``token_batches`` and
+``ShardedBatcher`` wrap streams that never terminate — ``len()`` and
+``list()`` misuse must fail fast instead of hanging forever (this has
+burned real CPU time). ``take()`` is the sanctioned bound."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.data import InfiniteStream, ShardedBatcher, take, token_batches
+
+
+def test_token_batches_len_raises():
+    it = token_batches(50, 2, 8, seed=0)
+    assert isinstance(it, InfiniteStream)
+    with pytest.raises(TypeError, match="take"):
+        len(it)
+
+
+def test_streams_stay_truthy():
+    """bool() must not fall back to the raising __len__ — `if stream:`
+    guards keep working."""
+    assert bool(token_batches(50, 2, 8, seed=0))
+    it = token_batches(50, 2, 8, seed=0)
+    assert (it or None) is it
+
+
+def test_token_batches_list_fails_fast():
+    it = token_batches(50, 2, 8, seed=0)
+    with pytest.raises(RuntimeError, match="never terminate"):
+        list(it)
+    with pytest.raises(RuntimeError, match="never terminate"):
+        tuple(token_batches(50, 2, 8, seed=0))
+
+
+def test_take_and_islice_still_work():
+    it = token_batches(50, 2, 8, seed=3)
+    got = list(take(it, 3))
+    assert len(got) == 3
+    assert got[0]["tokens"].shape == (2, 8)
+    # islice wraps with its own iterator, so list() of it is fine too
+    more = list(itertools.islice(it, 2))
+    assert len(more) == 2
+    # the stream is shared state and take() consumes EXACTLY its bound:
+    # take pulled 3, islice pulled 2 — the next item is the 6th
+    nxt = next(it)
+    raw = list(itertools.islice(
+        iter(token_batches(50, 2, 8, seed=3)), 6))
+    np.testing.assert_array_equal(nxt["tokens"], raw[5]["tokens"])
+
+
+def test_token_batches_determinism_preserved():
+    """Wrapping in InfiniteStream must not change the stream contents."""
+    a = list(take(token_batches(97, 3, 5, seed=11), 4))
+    b = list(take(token_batches(97, 3, 5, seed=11), 4))
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x["tokens"], y["tokens"])
+        np.testing.assert_array_equal(x["labels"], y["labels"])
+
+
+def test_sharded_batcher_guards():
+    import jax
+
+    from repro.utils.compat import make_mesh
+
+    mesh = make_mesh((jax.device_count(), 1), ("data", "model"))
+    b = ShardedBatcher(mesh, token_batches(50, 8, 4), prefetch=0)
+    with pytest.raises(TypeError, match="take"):
+        len(b)
+    with pytest.raises(RuntimeError, match="never terminate"):
+        list(b)
+    # bounded consumption through iter() works as before
+    one = next(iter(take(iter(b), 1)))
+    assert one["tokens"].shape == (8, 4)

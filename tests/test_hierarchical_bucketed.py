@@ -47,11 +47,34 @@ def test_pod_k_for_bucket_overrides_global_ratio():
                      pod_ratio=0.01, pod_ratios=(1.0, 0.05))
     # bucket 1 uses its own ratio: 0.05 * 1024 ~ 51
     assert cfg.pod_k_for_bucket(1, 1024) == 51
-    # beyond the tuple -> global pod_ratio fallback (0.01 * 1024 ~ 10)
-    assert cfg.pod_k_for_bucket(7, 1024) == cfg.pod_k_for(1024) == 10
-    # without per-bucket ratios everything falls back
+    # beyond the tuple RAISES — the old silent fallback to the global
+    # pod_ratio quietly desynced byte accounting from the wire layout
+    with pytest.raises(ValueError, match="index-aligned"):
+        cfg.pod_k_for_bucket(7, 1024)
+    # without per-bucket ratios everything falls back to the global ratio
     cfg2 = dataclasses.replace(cfg, pod_ratios=None)
-    assert cfg2.pod_k_for_bucket(1, 1024) == 10
+    assert cfg2.pod_k_for_bucket(1, 1024) == cfg2.pod_k_for(1024) == 10
+
+
+def test_pod_ratios_must_align_with_plan():
+    """A pod_ratios tuple that is not index-aligned with the bucket plan
+    is rejected at every accounting/sync/delta entry point."""
+    from repro.core.distributed import validate_pod_ratios
+    from repro.launch.delta_stream import make_delta_spec
+
+    plan = _plan(_tree())  # 2 buckets
+    short = SyncConfig(ratio=0.02, strategy="hierarchical", pod_axis="pod",
+                       pod_ratios=(1.0,), bucketed=True)
+    with pytest.raises(ValueError, match="2-bucket plan"):
+        validate_pod_ratios(short, plan)
+    with pytest.raises(ValueError, match="2-bucket plan"):
+        bucketed_message_bytes(short, plan)
+    with pytest.raises(ValueError, match="2-bucket plan"):
+        make_delta_spec(plan, short, workers=8, n_pods=2)
+    # aligned ratios pass
+    ok = dataclasses.replace(short, pod_ratios=(1.0, 0.05))
+    validate_pod_ratios(ok, plan)
+    assert bucketed_message_bytes(ok, plan) > 0
 
 
 def test_by_level_accounting_sums_and_beats_flat():
