@@ -1,7 +1,7 @@
 """Bench regression gate: fresh BENCH_*.json vs committed baselines.
 
 CI stashes the committed baselines, re-runs ``benchmarks/run.py
-kernel_topk wire_codec fanout hierarchy`` (which overwrite the
+kernel_topk wire_codec fanout hierarchy refresh overlap`` (which overwrite the
 repo-root ``BENCH_*.json``), then runs this checker. Alongside the
 pass/fail verdict it emits a markdown comparison table (baseline vs
 fresh per tracked metric) to ``$GITHUB_STEP_SUMMARY`` and to
@@ -112,6 +112,10 @@ def check_topk(base: dict, fresh: dict, max_slowdown: float,
         dict(base, **_fused_speedup(base)),
         "fused_speedup", "kernel_topk", slack=kernel_retention,
     )
+    # the backend cutover table must keep method="auto" on the faster
+    # side of its own sweep (measured in the same run — machine-local)
+    errs += _flag_off(fresh.get("cutover", {}), base.get("cutover", {}),
+                      "auto_matches_faster", "kernel_topk[cutover]")
     return errs
 
 
@@ -184,12 +188,39 @@ def check_refresh(base: dict, fresh: dict, max_slowdown: float,
     return errs
 
 
+def check_overlap(base: dict, fresh: dict, max_slowdown: float,
+                  kernel_retention: float = 0.5) -> List[str]:
+    """Double-buffered bucket pipeline (BENCH_overlap.json): every
+    bitwise flag must hold (overlap on == off on applied params +
+    memory for flat / hierarchical / pod-dynamic, and the host-pipeline
+    outputs), and the MACHINE-NORMALIZED pipeline speedup (depth-1 vs
+    depth-2 measured in the same run over the same emulated wire) must
+    retain its edge — gated like the kernel speedups, at
+    ``kernel_retention`` of the baseline and never below break-even."""
+    pipe_b, pipe_f = base.get("pipeline", {}), fresh.get("pipeline", {})
+    errs = _flag_off(pipe_f, pipe_b, "bitwise_equal", "overlap[pipeline]")
+    errs += _ratio_regressed(pipe_f, pipe_b, "speedup", "overlap[pipeline]",
+                             slack=kernel_retention)
+    if "speedup" in pipe_f and pipe_f["speedup"] <= 1.0:
+        errs.append(
+            f"overlap[pipeline]: speedup {pipe_f['speedup']:.3f} <= 1.0 "
+            "(double buffering no longer beats sequential)"
+        )
+    smoke_b, smoke_f = base.get("smoke", {}), fresh.get("smoke", {})
+    for key in ("flat_bitwise", "hierarchical_bitwise",
+                "pod_dynamic_bitwise", "probe_bitwise"):
+        errs += _flag_off(smoke_f, smoke_b, key, "overlap[smoke]")
+    errs += _flag_off(fresh, base, "bitwise_identical", "overlap")
+    return errs
+
+
 CHECKS = {
     "BENCH_topk.json": check_topk,
     "BENCH_wire.json": check_wire,
     "BENCH_fanout.json": check_fanout,
     "BENCH_hierarchy.json": check_hierarchy,
     "BENCH_refresh.json": check_refresh,
+    "BENCH_overlap.json": check_overlap,
 }
 
 
@@ -267,6 +298,23 @@ def write_summary(baseline_dir: str, fresh_dir: str, errors: List[str],
         fh.write("\n")
     else:
         fh.write("**ok** — all benchmarks within budget\n\n")
+    opath = os.path.join(fresh_dir, "BENCH_overlap.json")
+    if os.path.exists(opath):
+        payload, errs = _load_payload(opath, "fresh", "BENCH_overlap.json")
+        pipe = {} if errs else payload.get("pipeline", {})
+        if "speedup" in pipe:
+            bpipe: dict = {}
+            bopath = os.path.join(baseline_dir, "BENCH_overlap.json")
+            if os.path.exists(bopath):
+                bp, berrs = _load_payload(bopath, "baseline",
+                                          "BENCH_overlap.json")
+                bpipe = {} if berrs else bp.get("pipeline", {})
+            vs = (f" (baseline x{bpipe['speedup']:.2f})"
+                  if "speedup" in bpipe else "")
+            fh.write(
+                f"**Overlap pipeline speedup:** x{pipe['speedup']:.2f}"
+                f"{vs} — bitwise identical: "
+                f"{_fmt(payload.get('bitwise_identical'))}\n\n")
     for fname in CHECKS:
         fpath = os.path.join(fresh_dir, fname)
         if not os.path.exists(fpath):

@@ -54,6 +54,8 @@ from typing import Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import pipeline
+from repro.core.pipeline import COMM, COMPUTE
 from repro.utils import compat
 
 Array = jax.Array
@@ -121,7 +123,9 @@ class SyncConfig:
     #  * "threshold_onehot": single-pass bisection threshold select
     #    (O(32*C), k-independent — repro.kernels.topk_select) + one-hot
     #    densify. Partitions cleanly like argmax_onehot but with no k
-    #    limit; tiny k (<= LOOP_MAX_K) falls back to the argmax loop.
+    #    limit; tiny k (<= the backend's measured cutover,
+    #    repro.utils.platform.topk_loop_cutover) falls back to the
+    #    argmax loop.
     selection: str = "argmax_onehot"
     argmax_k_limit: int = 64  # fall back to top_k beyond this
     # Wire format for the all-gather (repro.core.encoding):
@@ -140,6 +144,21 @@ class SyncConfig:
     # runs over <= ~4 big tensors instead of one dispatch per leaf.
     bucketed: bool = False
     bucket_cols: int = 1024
+    # Software-pipelined bucket schedule (repro.core.pipeline):
+    #  * None  — legacy bucket-after-bucket emission (no barriers).
+    #  * False — strict sequential schedule, pinned with barriers
+    #            (depth 1: the honest overlap-off baseline).
+    #  * True  — double buffer (depth 2): bucket b's all-gather +
+    #            decode overlaps bucket b+1's top-k select + encode.
+    # All three modes apply BITWISE-identical params and memory: the
+    # pipeline only reorders stage emission and adds
+    # ``optimization_barrier`` edges, never a value-changing op.
+    overlap: Optional[bool] = None
+
+    def overlap_depth(self) -> Optional[int]:
+        """Pipeline depth the sync schedules at (None/1/2 — see
+        ``overlap`` and ``repro.core.pipeline``)."""
+        return pipeline.overlap_depth(self.overlap)
 
     def k_for(self, row_len: int) -> int:
         k = max(self.k_min, int(round(self.ratio * row_len)))
@@ -303,14 +322,14 @@ def _row_scatter(shape: tuple, vals: Array, idx: Array, dtype,
 def _pick_selection(cfg: "SyncConfig", k_row: int):
     """(topk, densify) implementations for one leaf/bucket (see the
     SyncConfig.selection comment for the trade-offs)."""
-    from repro.kernels.topk_select import LOOP_MAX_K
+    from repro.utils.platform import topk_loop_cutover
 
     if cfg.selection not in (
         "topk_scatter", "argmax_onehot", "threshold_onehot"
     ):
         raise ValueError(f"unknown SyncConfig.selection {cfg.selection!r}")
     if cfg.selection == "threshold_onehot":
-        if k_row <= LOOP_MAX_K:
+        if k_row <= topk_loop_cutover():
             return _row_topk_argmax, _row_densify_onehot
         return _row_topk_threshold, _row_densify_onehot
     if cfg.selection == "argmax_onehot" and k_row <= cfg.argmax_k_limit:
@@ -327,60 +346,126 @@ def _gather_pairs(vals, idx, axes):
     return vals, idx
 
 
-def _gather_packed(vals, idx, axes, wspec, live_n=None):
-    """Packed-wire gather: encode (vals, idx) into one uint32 buffer
-    (repro.core.encoding), all-gather the buffer over every data axis,
-    then decode each worker's message shard-locally. Returns (..., W*k)
-    pairs in exactly the tile order ``_gather_pairs`` produces, so the
-    downstream densify/mean is bit-identical to the unpacked path.
-    ``live_n`` stamps a runtime live-slot count into the k-padded
-    message's header (the pairs past it must already be masked)."""
+def _encode_packed(vals, idx, wspec, live_n=None):
+    """Encode (vals, idx) into one uint32 wire buffer
+    (repro.core.encoding). ``live_n`` stamps a runtime live-slot count
+    into the k-padded message's header (the pairs past it must already
+    be masked). Pure compute — the pipeline's E stage."""
     from repro.core import encoding as enc
 
     k = wspec.k
-    buf = enc.encode(
+    return enc.encode(
         wspec, vals.reshape(-1, k), idx.reshape(-1, k).astype(jnp.int32),
         live_n=live_n,
     )
+
+
+def _gather_buf(buf, axes):
+    """all-gather a wire buffer over every data axis (tiled along axis
+    0). Pure communication — the pipeline's G stage."""
     for ax in axes:
         buf = jax.lax.all_gather(buf, ax, axis=0, tiled=True)
+    return buf
+
+
+def _decode_packed(buf, wspec, axes, lead_shape):
+    """Decode a gathered wire buffer shard-locally back to (..., W*k)
+    pairs, in exactly the tile order ``_gather_pairs`` produces, so the
+    downstream densify/mean is bit-identical to the unpacked path. Pure
+    compute — part of the pipeline's D stage."""
+    from repro.core import encoding as enc
+
     W = _axis_size(axes)
     gv, gi = jax.vmap(lambda b: enc.decode(wspec, b))(
         buf.reshape(W, wspec.words)
     )
-    gv = jnp.moveaxis(gv, 0, 1).reshape(vals.shape[:-1] + (W * k,))
-    gi = jnp.moveaxis(gi, 0, 1).reshape(idx.shape[:-1] + (W * k,))
+    gv = jnp.moveaxis(gv, 0, 1).reshape(tuple(lead_shape) + (W * wspec.k,))
+    gi = jnp.moveaxis(gi, 0, 1).reshape(tuple(lead_shape) + (W * wspec.k,))
     return gv, gi
 
 
-def _wire_spec(u: Array, k: int, value_dtype):
-    from repro.core import encoding as enc
+def _gather_packed(vals, idx, axes, wspec, live_n=None):
+    """Packed-wire gather: encode -> all-gather -> decode (the three
+    helpers above, run back to back for the non-pipelined callers)."""
+    buf = _gather_buf(_encode_packed(vals, idx, wspec, live_n), axes)
+    return _decode_packed(buf, wspec, axes, vals.shape[:-1])
 
-    return enc.WireSpec(
-        rows=u.size // u.shape[-1], cols=u.shape[-1], k=k,
-        value_dtype=jnp.dtype(value_dtype).name,
-    )
+
+def _run_stages(init, stages):
+    st = init
+    for f in stages:
+        st = f(st)
+    return st
+
+
+def _sparse_stages(shape, dtype, k_row, axes, value_dtype,
+                   constrain=lambda x: x, topk=_row_topk,
+                   densify=None, wire: str = "unpacked"):
+    """Stage chain for one flat sparse leaf/bucket, decomposed for the
+    bucket pipeline (repro.core.pipeline):
+
+      E (compute): top-k select + own densify + wire encode
+      G (comm):    all-gather over the data axes
+      D (compute): wire decode + densify + mean
+
+    Returns ``(stages, kinds, nbytes)``; stage 0 takes ``u`` (..., C)
+    and the final stage returns ``(mean update, own selection)``. Run
+    back to back the stages compute EXACTLY the op sequence the old
+    monolithic ``_leaf_sparse_sync`` emitted."""
+    densify = densify or _row_scatter
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    W = _axis_size(axes)
+    if wire == "packed":
+        from repro.core import encoding as enc
+
+        wspec = enc.WireSpec(rows=rows, cols=shape[-1], k=k_row,
+                             value_dtype=jnp.dtype(value_dtype).name)
+        nbytes = wspec.nbytes
+    else:
+        wspec = None
+        nbytes = rows * k_row * (jnp.dtype(value_dtype).itemsize + 4)
+
+    def select_encode(u):
+        vals, idx = topk(u, k_row, constrain)
+        own = densify(shape, vals, idx, dtype, constrain)
+        if wspec is not None:
+            payload = _encode_packed(vals.astype(value_dtype), idx, wspec)
+        else:
+            payload = (vals.astype(value_dtype), idx)
+        return own, payload
+
+    def gather(st):
+        own, payload = st
+        if wspec is not None:
+            return own, _gather_buf(payload, axes)
+        return own, _gather_pairs(*payload, axes)
+
+    def decode_apply(st):
+        own, payload = st
+        if wspec is not None:
+            gv, gi = _decode_packed(payload, wspec, axes, shape[:-1])
+        else:
+            gv, gi = payload
+        gv, gi = constrain(gv), constrain(gi)
+        update = (densify(shape, gv, gi, value_dtype, constrain)
+                  / W).astype(dtype)
+        return update, own
+
+    return ([select_encode, gather, decode_apply],
+            (COMPUTE, COMM, COMPUTE), nbytes)
 
 
 def _leaf_sparse_sync(u: Array, k_row: int, axes, value_dtype,
                       constrain=lambda x: x, topk=_row_topk,
                       densify=None, wire: str = "unpacked"):
     """u: (..., C). Returns (mean update, own selection, bytes/worker)."""
-    densify = densify or _row_scatter
-    rows = u.size // u.shape[-1]
-    vals, idx = topk(u, k_row, constrain)
-    own = densify(u.shape, vals, idx, u.dtype, constrain)
-    if wire == "packed":
-        wspec = _wire_spec(u, k_row, value_dtype)
-        gv, gi = _gather_packed(vals.astype(value_dtype), idx, axes, wspec)
-        nbytes = wspec.nbytes
-    else:
-        gv, gi = _gather_pairs(vals.astype(value_dtype), idx, axes)
-        nbytes = rows * k_row * (jnp.dtype(value_dtype).itemsize + 4)
-    gv, gi = constrain(gv), constrain(gi)
-    W = _axis_size(axes)
-    update = (densify(u.shape, gv, gi, value_dtype, constrain)
-              / W).astype(u.dtype)
+    stages, _, nbytes = _sparse_stages(
+        u.shape, u.dtype, k_row, axes, value_dtype, constrain, topk,
+        densify, wire,
+    )
+    update, own = _run_stages(u, stages)
     return update, own, nbytes
 
 
@@ -406,45 +491,124 @@ def _leaf_hierarchical_sync(u, k_row, k_pod, data_axes, pod_axis, value_dtype,
     exactly, whatever the selection kept). The reported cross-pod bytes
     are the PADDED gather size — the in-jit cost; a header-aware
     transport ships ``message_nbytes(..., live_k)`` instead."""
+    stages, _, level_bytes = _hier_stages(
+        u.shape, u.dtype, k_row, k_pod, data_axes, pod_axis, value_dtype,
+        constrain, topk, densify, wire, k_pod_live,
+    )
+    update, own, residual = _run_stages(u, stages)
+    return update, own, residual, level_bytes
+
+
+def _hier_stages(shape, dtype, k_row, k_pod, data_axes, pod_axis,
+                 value_dtype, constrain=lambda x: x, topk=_row_topk,
+                 densify=None, wire: str = "unpacked", k_pod_live=None):
+    """Stage chain for one two-level (hierarchical) leaf/bucket,
+    decomposed for the bucket pipeline:
+
+      E1 (compute): worker top-k + own densify + level-1 encode
+      G1 (comm):    intra-pod all-gather over the data axes
+      M  (compute): level-1 decode + pod mean + pod re-select (live-k
+                    mask) + residual + level-2 encode
+      G2 (comm):    cross-pod all-gather
+      D  (compute): level-2 decode + densify + pod mean
+
+    Returns ``(stages, kinds, level_bytes)``; stage 0 takes ``u`` and
+    the final stage returns ``(update, own, residual)``. The op
+    sequence is exactly the old monolithic ``_leaf_hierarchical_sync``
+    body."""
     from repro.core import encoding as enc
 
     densify = densify or _row_scatter
-    rows = u.size // u.shape[-1]
-    cols = u.shape[-1]
-    vals, idx = topk(u, k_row, constrain)
-    own = densify(u.shape, vals, idx, u.dtype, constrain)
-    if wire == "packed":
-        w1 = _wire_spec(u, k_row, value_dtype)
-        gv, gi = _gather_packed(
-            vals.astype(value_dtype), idx, data_axes, w1
-        )
-    else:
-        gv, gi = _gather_pairs(vals.astype(value_dtype), idx, data_axes)
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    cols = shape[-1]
     n_data = _axis_size(data_axes)
-    pod_mean = densify(u.shape, gv, gi, value_dtype, constrain) / n_data
-    pvals, pidx = topk(pod_mean, k_pod, constrain)
-    if k_pod_live is not None:
-        from repro.kernels.topk_select import mask_live_k
-
-        pvals, pidx = mask_live_k(pvals, pidx, k_pod_live)
-        pvals, pidx = constrain(pvals), constrain(pidx)
-    pod_sel = densify(u.shape, pvals, pidx, value_dtype, constrain)
-    residual = pod_mean - pod_sel  # kept in memory (identical pod-wide)
-    if wire == "packed":
-        w2 = _wire_spec(u, k_pod, value_dtype)
-        av, ai = _gather_packed(pvals, pidx, (pod_axis,), w2,
-                                live_n=k_pod_live)
-    else:
-        av, ai = _gather_pairs(pvals, pidx, (pod_axis,))
+    n_pods = compat.axis_size(pod_axis)
     name = jnp.dtype(value_dtype).name
+    if wire == "packed":
+        w1 = enc.WireSpec(rows=rows, cols=cols, k=k_row, value_dtype=name)
+        w2 = enc.WireSpec(rows=rows, cols=cols, k=k_pod, value_dtype=name)
+    else:
+        w1 = w2 = None
     level_bytes = (
         enc.message_nbytes(rows, cols, k_row, name, wire),
         enc.message_nbytes(rows, cols, k_pod, name, wire),
     )
-    n_pods = compat.axis_size(pod_axis)
-    update = (densify(u.shape, av, ai, value_dtype, constrain)
-              / n_pods).astype(u.dtype)
-    return update, own, residual.astype(u.dtype), level_bytes
+
+    def l1_select_encode(u):
+        vals, idx = topk(u, k_row, constrain)
+        own = densify(shape, vals, idx, dtype, constrain)
+        if w1 is not None:
+            payload = _encode_packed(vals.astype(value_dtype), idx, w1)
+        else:
+            payload = (vals.astype(value_dtype), idx)
+        return own, payload
+
+    def l1_gather(st):
+        own, payload = st
+        if w1 is not None:
+            return own, _gather_buf(payload, data_axes)
+        return own, _gather_pairs(*payload, data_axes)
+
+    def pod_reselect_encode(st):
+        own, payload = st
+        if w1 is not None:
+            gv, gi = _decode_packed(payload, w1, data_axes, shape[:-1])
+        else:
+            gv, gi = payload
+        pod_mean = densify(shape, gv, gi, value_dtype, constrain) / n_data
+        pvals, pidx = topk(pod_mean, k_pod, constrain)
+        if k_pod_live is not None:
+            from repro.kernels.topk_select import mask_live_k
+
+            pvals, pidx = mask_live_k(pvals, pidx, k_pod_live)
+            pvals, pidx = constrain(pvals), constrain(pidx)
+        pod_sel = densify(shape, pvals, pidx, value_dtype, constrain)
+        # kept in memory (identical pod-wide)
+        residual = pod_mean - pod_sel
+        if w2 is not None:
+            payload2 = _encode_packed(pvals, pidx, w2, live_n=k_pod_live)
+        else:
+            payload2 = (pvals, pidx)
+        return own, residual, payload2
+
+    def l2_gather(st):
+        own, residual, payload2 = st
+        if w2 is not None:
+            return own, residual, _gather_buf(payload2, (pod_axis,))
+        return own, residual, _gather_pairs(*payload2, (pod_axis,))
+
+    def l2_decode_apply(st):
+        own, residual, payload2 = st
+        if w2 is not None:
+            av, ai = _decode_packed(payload2, w2, (pod_axis,), shape[:-1])
+        else:
+            av, ai = payload2
+        update = (densify(shape, av, ai, value_dtype, constrain)
+                  / n_pods).astype(dtype)
+        return update, own, residual.astype(dtype)
+
+    return ([l1_select_encode, l1_gather, pod_reselect_encode, l2_gather,
+             l2_decode_apply],
+            (COMPUTE, COMM, COMPUTE, COMM, COMPUTE), level_bytes)
+
+
+def _dense_stages(shape, dtype, axes):
+    """Single-stage chain for a dense leaf/bucket: one all-reduce (the
+    pipeline treats it as pure comm, free to overlap with sparse
+    buckets' compute). Final state is ``(update, own)``; bytes are the
+    buffer size."""
+    nbytes = 1
+    for s in shape:
+        nbytes *= s
+    nbytes *= jnp.dtype(dtype).itemsize
+
+    def allreduce(u):
+        update = jax.lax.pmean(u, axes if len(axes) > 1 else axes[0])
+        return update, u
+
+    return [allreduce], (COMM,), nbytes
 
 
 def _leaf_dense_sync(u: Array, axes):
@@ -477,12 +641,21 @@ def sparse_sync_gradients(
         (cfg.pod_axis,) if cfg.pod_axis else ()
     )
 
-    def leaf(m, g, col_axis, spec):
+    def build_leaf(m, g, col_axis, spec):
+        """One leaf's pipeline entry: (init, stages, kinds, finish,
+        nbytes). ``init`` is the row-layout u; ``finish`` undoes the
+        layout and folds the error-feedback memory."""
         u_full = m + eta * g.astype(m.dtype)
         d = u_full.size
         if cfg.strategy == "dense" or d < cfg.dense_below:
-            upd, own, nbytes = _leaf_dense_sync(u_full, all_axes)
-            return upd, u_full - own, nbytes
+            stages, kinds, nbytes = _dense_stages(
+                u_full.shape, u_full.dtype, all_axes)
+
+            def finish(st, u_full=u_full):
+                upd, own = st
+                return upd, u_full - own
+
+            return u_full, stages, kinds, finish, nbytes
         ca = (col_axis if col_axis is not None else u_full.ndim - 1) % u_full.ndim
         if cfg.layout == "flatten":
             u, moved_shape = _to_rows(u_full, ca)
@@ -514,22 +687,28 @@ def sparse_sync_gradients(
         C = u.shape[-1]
         topk, densify = _pick_selection(cfg, cfg.k_for(C))
         if cfg.strategy == "hierarchical" and cfg.pod_axis is not None:
-            upd, own, residual, level_bytes = _leaf_hierarchical_sync(
-                u, cfg.k_for(C), cfg.pod_k_for(C), tuple(cfg.data_axes),
-                cfg.pod_axis, value_dtype, constrain, topk, densify,
-                wire=cfg.wire,
+            stages, kinds, level_bytes = _hier_stages(
+                u.shape, u.dtype, cfg.k_for(C), cfg.pod_k_for(C),
+                tuple(cfg.data_axes), cfg.pod_axis, value_dtype,
+                constrain, topk, densify, wire=cfg.wire,
             )
             nbytes = sum(level_bytes)
-            new_m = (u - own) + residual
+
+            def finish(st, u=u, unrow=unrow):
+                upd, own, residual = st
+                return unrow(upd), unrow((u - own) + residual)
         elif cfg.strategy in ("sparse_allgather", "hierarchical"):
-            upd, own, nbytes = _leaf_sparse_sync(
-                u, cfg.k_for(C), all_axes, value_dtype, constrain, topk,
-                densify, wire=cfg.wire,
+            stages, kinds, nbytes = _sparse_stages(
+                u.shape, u.dtype, cfg.k_for(C), all_axes, value_dtype,
+                constrain, topk, densify, wire=cfg.wire,
             )
-            new_m = u - own
+
+            def finish(st, u=u, unrow=unrow):
+                upd, own = st
+                return unrow(upd), unrow(u - own)
         else:
             raise ValueError(f"unknown sync strategy {cfg.strategy!r}")
-        return unrow(upd), unrow(new_m), nbytes
+        return u, stages, kinds, finish, nbytes
 
     leaves_g, treedef = jax.tree.flatten(grad_tree)
     leaves_m = treedef.flatten_up_to(memory_tree)
@@ -541,12 +720,23 @@ def sparse_sync_gradients(
         leaves_s = [None] * len(leaves_g)
     else:
         leaves_s = treedef.flatten_up_to(specs)
-    ups, mems, total_bytes = [], [], 0
+    inits, stage_lists, kind_lists, finishes = [], [], [], []
+    total_bytes = 0
     for m, g, c, sp in zip(leaves_m, leaves_g, leaves_c, leaves_s):
-        u_, m_, b_ = leaf(m, g, c, sp)
-        ups.append(u_)
-        mems.append(m_)
-        total_bytes += int(b_)
+        init, stages, kinds, fin, nbytes = build_leaf(m, g, c, sp)
+        inits.append(init)
+        stage_lists.append(stages)
+        kind_lists.append(kinds)
+        finishes.append(fin)
+        total_bytes += int(nbytes)
+    outs = pipeline.run_schedule(
+        inits, stage_lists, kind_lists, cfg.overlap_depth()
+    )
+    ups, mems = [], []
+    for st, fin in zip(outs, finishes):
+        upd, new_m = fin(st)
+        ups.append(upd)
+        mems.append(new_m)
     return treedef.unflatten(ups), treedef.unflatten(mems), total_bytes
 
 
@@ -609,21 +799,26 @@ def bucketed_sync_gradients(
         (cfg.pod_axis,) if cfg.pod_axis else ()
     )
     g_bufs = bk.pack(plan, grad_tree, dtype=jnp.float32)
-    ups, mems, total_bytes = [], [], 0
+    # Build every bucket's stage chain up front, then emit in the
+    # planned (possibly double-buffered) order. The finish closures run
+    # after the schedule: they only combine already-computed values
+    # (u, own, residual), so they impose no ordering of their own.
+    inits, stage_lists, kind_lists, finishes = [], [], [], []
+    total_bytes = 0
     for b, (spec, m, g) in enumerate(zip(plan.buckets, memory_bufs, g_bufs)):
         u = m + eta * g
         if cfg.strategy == "dense" or spec.kind == "dense":
-            upd, own, nbytes = _leaf_dense_sync(u, all_axes)
-            ups.append(upd)
-            mems.append(u - own)
-            total_bytes += int(nbytes)
-            continue
-        k_row = cfg.k_for(spec.cols)
-        topk, densify = _pick_selection(cfg, k_row)
-        if cfg.strategy == "hierarchical" and cfg.pod_axis is not None:
+            stages, kinds, nbytes = _dense_stages(u.shape, u.dtype, all_axes)
+
+            def finish(st, u=u):
+                upd, own = st
+                return upd, u - own
+        elif cfg.strategy == "hierarchical" and cfg.pod_axis is not None:
             # true two-level: worker->pod at k_row, pod mean re-selected
             # at this bucket's own pod k (autotuned via cfg.pod_ratios),
             # pod residual folded into the bucket-space memory
+            k_row = cfg.k_for(spec.cols)
+            topk, densify = _pick_selection(cfg, k_row)
             if cfg.pod_dynamic:
                 # runtime k: shapes at the static k_max, live k masks
                 # the tail (clipped so a bad schedule can never overflow
@@ -636,24 +831,43 @@ def bucketed_sync_gradients(
             else:
                 k_pod = cfg.pod_k_for_bucket(b, spec.cols)
                 k_live = None
-            upd, own, residual, level_bytes = _leaf_hierarchical_sync(
-                u, k_row, k_pod,
+            stages, kinds, level_bytes = _hier_stages(
+                u.shape, u.dtype, k_row, k_pod,
                 tuple(cfg.data_axes), cfg.pod_axis, value_dtype,
                 topk=topk, densify=densify, wire=cfg.wire,
                 k_pod_live=k_live,
             )
             nbytes = sum(level_bytes)
-            mems.append((u - own) + residual)
+
+            def finish(st, u=u):
+                upd, own, residual = st
+                return upd, (u - own) + residual
         elif cfg.strategy in ("sparse_allgather", "hierarchical"):
-            upd, own, nbytes = _leaf_sparse_sync(
-                u, k_row, all_axes, value_dtype, topk=topk, densify=densify,
-                wire=cfg.wire,
+            k_row = cfg.k_for(spec.cols)
+            topk, densify = _pick_selection(cfg, k_row)
+            stages, kinds, nbytes = _sparse_stages(
+                u.shape, u.dtype, k_row, all_axes, value_dtype,
+                topk=topk, densify=densify, wire=cfg.wire,
             )
-            mems.append(u - own)
+
+            def finish(st, u=u):
+                upd, own = st
+                return upd, u - own
         else:
             raise ValueError(f"unknown sync strategy {cfg.strategy!r}")
-        ups.append(upd)
+        inits.append(u)
+        stage_lists.append(stages)
+        kind_lists.append(kinds)
+        finishes.append(finish)
         total_bytes += int(nbytes)
+    outs = pipeline.run_schedule(
+        inits, stage_lists, kind_lists, cfg.overlap_depth()
+    )
+    ups, mems = [], []
+    for st, fin in zip(outs, finishes):
+        upd, new_m = fin(st)
+        ups.append(upd)
+        mems.append(new_m)
     if return_bufs:
         return bk.unpack(plan, ups), tuple(mems), total_bytes, ups
     return bk.unpack(plan, ups), tuple(mems), total_bytes

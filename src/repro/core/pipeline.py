@@ -1,0 +1,275 @@
+"""Software-pipelined bucket schedule: overlap encode / all-gather / decode.
+
+The bucketed sync (``core.distributed.bucketed_sync_gradients``) runs a
+handful of independent per-bucket stage chains, alternating compute
+(top-k select + wire encode, decode + densify) and communication (the
+all-gather). Run strictly bucket-after-bucket, the wire sits idle while
+a bucket computes and the ALUs sit idle while it gathers. This module
+plans and executes a DOUBLE-BUFFERED schedule instead: while bucket b's
+gather is in flight, bucket b+1 runs its select/encode — the classic
+software pipeline, parameterized by ``depth`` (how many buckets may be
+in flight at once; 1 degenerates to strict sequential, 2 is the double
+buffer).
+
+Three entry points share ONE planner, so the schedule the tests verify
+is the schedule both executors run:
+
+* ``plan_schedule(kinds, depth)`` — pure planning: per-bucket stage
+  kinds ("compute" / "comm") in, a total order of (bucket, stage)
+  emissions out. The planner walks the oldest in-flight bucket up to
+  and through its next comm issue, then advances younger in-flight
+  buckets' compute stages (the work that hides behind the comm), and
+  admits bucket b only after bucket b-depth fully retired — the
+  depth-bucket memory bound.
+
+* ``run_schedule(...)`` — the IN-JIT executor. Stages are traced in
+  schedule order and the depth window is enforced with
+  ``jax.lax.optimization_barrier``: bucket b's input is passed through
+  one barrier together with a leaf of bucket (b-depth)'s final output,
+  which creates a scheduling dependency WITHOUT changing any value —
+  this is why ``overlap=True`` is bitwise-identical to
+  ``overlap=False`` by construction (the barrier only orders; all
+  data-flow edges, and hence all float results, are untouched). On
+  backends with async collectives (see ``utils.platform`` — XLA splits
+  each all-gather into start/done and the latency-hiding scheduler
+  moves independent compute between them) the depth-2 trace order
+  yields real comm/compute concurrency; the barrier chain simultaneously
+  CAPS liveness at ``depth`` buckets of gather buffers, so the donated
+  double buffers never grow with bucket count.
+
+* ``run_host_pipeline(...)`` — the HOST executor for transports that
+  live outside the jit (an RPC link, the bench's emulated-latency
+  wire). Comm stages return a future; the executor resolves it lazily,
+  exactly where the planner scheduled the dependent stage — so with
+  depth 1 every transfer is issue-then-wait (the honest sequential
+  baseline) and with depth 2 the transfer of bucket b overlaps the
+  compute of bucket b+1 on the SAME schedule the in-jit executor
+  traces.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, List, Optional, Sequence, Tuple
+
+COMPUTE = "compute"
+COMM = "comm"
+
+
+def overlap_depth(overlap: Optional[bool]) -> Optional[int]:
+    """Map ``SyncConfig.overlap`` to a pipeline depth: ``None`` keeps
+    the legacy unconstrained emission (no barriers at all), ``False``
+    pins the strict sequential schedule (depth 1), ``True`` double-
+    buffers (depth 2)."""
+    if overlap is None:
+        return None
+    return 2 if overlap else 1
+
+
+def plan_schedule(kinds: Sequence[Sequence[str]], depth: int
+                  ) -> List[Tuple[int, int]]:
+    """Total order of (bucket, stage) emissions for the given depth.
+
+    ``kinds[b][s]`` is "compute" or "comm". At most ``depth`` buckets
+    are in flight at any point; bucket b is admitted only once bucket
+    b-depth has fully retired. Depth 1 reproduces the strict sequential
+    order; depth 2 produces the classic double buffer (for per-bucket
+    kinds [E, G, D]: E0 G0 E1 D0 G1 E2 D1 ... — bucket b+1's encode
+    hides behind bucket b's gather).
+    """
+    if depth < 1:
+        raise ValueError(f"pipeline depth must be >= 1, got {depth}")
+    n = len(kinds)
+    for b, ks in enumerate(kinds):
+        for s, kind in enumerate(ks):
+            if kind not in (COMPUTE, COMM):
+                raise ValueError(
+                    f"unknown stage kind {kind!r} at bucket {b} stage {s}")
+    order: List[Tuple[int, int]] = []
+    ptr = [0] * n
+    window: List[int] = []
+    next_b = 0
+    while next_b < n or window:
+        while len(window) < depth and next_b < n:
+            window.append(next_b)
+            next_b += 1
+        b = window[0]
+        # walk the oldest bucket through its pending computes ...
+        while ptr[b] < len(kinds[b]) and kinds[b][ptr[b]] == COMPUTE:
+            order.append((b, ptr[b]))
+            ptr[b] += 1
+        # ... and through its next comm issue, hiding younger buckets'
+        # compute stages behind the in-flight transfer
+        if ptr[b] < len(kinds[b]):
+            order.append((b, ptr[b]))
+            ptr[b] += 1
+            for b2 in window[1:]:
+                while (ptr[b2] < len(kinds[b2])
+                       and kinds[b2][ptr[b2]] == COMPUTE):
+                    order.append((b2, ptr[b2]))
+                    ptr[b2] += 1
+        if ptr[b] == len(kinds[b]):
+            window.pop(0)
+    return order
+
+
+def validate_schedule(order: Sequence[Tuple[int, int]],
+                      kinds: Sequence[Sequence[str]], depth: int) -> None:
+    """Raise unless ``order`` is a legal depth-bounded schedule of
+    ``kinds``: a permutation of every (bucket, stage), per-bucket stages
+    ascending, and no bucket starting before bucket b-depth retired."""
+    n = len(kinds)
+    want = {(b, s) for b in range(n) for s in range(len(kinds[b]))}
+    if len(order) != len(want) or set(order) != want:
+        raise AssertionError(
+            f"schedule is not a permutation of all stages: {order}")
+    pos = {bs: i for i, bs in enumerate(order)}
+    for b in range(n):
+        for s in range(1, len(kinds[b])):
+            if pos[(b, s)] < pos[(b, s - 1)]:
+                raise AssertionError(
+                    f"bucket {b} stage {s} scheduled before stage {s - 1}")
+    for b in range(depth, n):
+        started = pos[(b, 0)]
+        retired = pos[(b - depth, len(kinds[b - depth]) - 1)]
+        if started < retired:
+            raise AssertionError(
+                f"bucket {b} started before bucket {b - depth} retired "
+                f"(depth {depth} window violated)")
+
+
+def _first_leaf(tree):
+    import jax
+
+    return jax.tree.leaves(tree)[0]
+
+
+def barrier_after(x, dep):
+    """Pass ``x`` through an ``optimization_barrier`` tied to ``dep``:
+    the returned value EQUALS ``x`` (bitwise — the barrier is the
+    identity on every leaf) but cannot be scheduled before ``dep`` is
+    available. ``dep=None`` is the no-op."""
+    if dep is None:
+        return x
+    import jax
+
+    out, _ = jax.lax.optimization_barrier((x, dep))
+    return out
+
+
+def run_schedule(inits: Sequence, stage_lists: Sequence[Sequence[Callable]],
+                 kinds: Sequence[Sequence[str]],
+                 depth: Optional[int]) -> list:
+    """Trace every bucket's stage chain in the planned order (in-jit).
+
+    ``inits[b]`` is bucket b's input (fed to stage 0); each stage is a
+    callable ``state -> state``; the final stage's output is returned
+    per bucket. ``depth=None`` runs the chains bucket-by-bucket with no
+    barriers — the legacy emission, byte-for-byte what the sequential
+    loop produced. An integer depth emits in ``plan_schedule`` order
+    and gates bucket b's INPUT on bucket (b-depth)'s final output via
+    ``barrier_after``, bounding liveness at depth buckets without
+    touching any value.
+    """
+    n = len(inits)
+    if depth is None:
+        out = []
+        for init, stages in zip(inits, stage_lists):
+            st = init
+            for f in stages:
+                st = f(st)
+            out.append(st)
+        return out
+    order = plan_schedule(kinds, depth)
+    state: list = [None] * n
+    done: list = [None] * n
+    for b, s in order:
+        if s == 0:
+            dep_b = b - depth
+            dep = _first_leaf(done[dep_b]) if dep_b >= 0 else None
+            x = barrier_after(inits[b], dep)
+        else:
+            x = state[b]
+        out = stage_lists[b][s](x)
+        if s == len(stage_lists[b]) - 1:
+            done[b] = out
+        else:
+            state[b] = out
+    return done
+
+
+def _is_future(x) -> bool:
+    return callable(getattr(x, "result", None))
+
+
+def run_host_pipeline(inits: Sequence,
+                      stage_lists: Sequence[Sequence[Callable]],
+                      kinds: Sequence[Sequence[str]], depth: int) -> list:
+    """Host-side executor on the SAME planner: comm stages may return a
+    future (anything with ``.result()``); it is resolved lazily, right
+    where the schedule runs the dependent stage — so the transfer's
+    latency is exposed (depth 1) or hidden behind younger buckets'
+    compute (depth >= 2) exactly as planned. Returns each bucket's
+    final state (futures resolved)."""
+    n = len(inits)
+    order = plan_schedule(kinds, depth)
+    state: list = [None] * n
+    done: list = [None] * n
+    for b, s in order:
+        x = inits[b] if s == 0 else state[b]
+        if _is_future(x):
+            x = x.result()
+        out = stage_lists[b][s](x)
+        if s == len(stage_lists[b]) - 1:
+            done[b] = out
+        else:
+            state[b] = out
+    return [d.result() if _is_future(d) else d for d in done]
+
+
+class EmulatedLink:
+    """A wire with real wall-clock latency for the host pipeline.
+
+    ``transfer(payload, nbytes)`` returns a future that resolves to
+    ``payload`` after ``latency_s + nbytes / bandwidth_Bps`` of real
+    time on a single background transfer thread (one thread == one
+    serialized link, like a NIC). The bench drives the pipelined
+    executor over this to measure the schedule's overlap on hardware
+    with no async collectives (this CPU container); tests use it with
+    microsecond latencies to assert ordering, not timing.
+    """
+
+    def __init__(self, latency_s: float = 0.0,
+                 bandwidth_Bps: Optional[float] = None):
+        self.latency_s = float(latency_s)
+        self.bandwidth_Bps = bandwidth_Bps
+        self._lock = threading.Lock()
+        self._busy_until = 0.0
+        self.transfers: List[Tuple[float, float]] = []  # (issue, done)
+
+    def delay_for(self, nbytes: int) -> float:
+        d = self.latency_s
+        if self.bandwidth_Bps:
+            d += nbytes / self.bandwidth_Bps
+        return d
+
+    def transfer(self, payload, nbytes: int):
+        import time
+
+        delay = self.delay_for(nbytes)
+        issue = time.monotonic()
+        with self._lock:
+            # a single serialized link: a transfer starts only when the
+            # previous one has drained
+            start = max(issue, self._busy_until)
+            ready = start + delay
+            self._busy_until = ready
+            self.transfers.append((issue, ready))
+
+        class _F:
+            def result(self_f):
+                now = time.monotonic()
+                if ready > now:
+                    time.sleep(ready - now)
+                return payload
+
+        return _F()

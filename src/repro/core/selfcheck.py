@@ -212,3 +212,77 @@ def dynamic_k_selfcheck(mesh, ratio: float = 0.05, eta: float = 0.3,
         "accounting_exact": bool(acc_ok),
         "live_ks": list(ks),
     }
+
+
+def overlap_selfcheck(mesh, ratio: float = 0.05, eta: float = 0.3,
+                      wire: str = "packed") -> dict:
+    """Probe the pipelined-schedule bit-identity guarantee on ``mesh``
+    (axes ``("pod", "data")``): for each sync path — flat
+    ``sparse_allgather``, static two-level ``hierarchical``, and the
+    runtime-k ``pod_dynamic`` path INCLUDING a mid-run live-k switch —
+    ``SyncConfig.overlap`` in {None, False, True} must produce BITWISE
+    equal applied params and memory (the pipeline only reorders
+    emission and adds ``optimization_barrier`` edges, never a
+    value-changing op; see repro.core.pipeline). Same tiny 2-bucket
+    tree as ``two_level_selfcheck``."""
+    import dataclasses
+
+    W = int(np.prod([mesh.shape[a] for a in ("pod", "data")]))
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(0), (16, 384)),
+            "b": jax.random.normal(jax.random.PRNGKey(1), (40,))}
+    plan = bk.make_plan(tree, cols=128, dense_below=64)
+    gs = jax.tree.map(lambda x: jnp.stack(
+        [x * (1 + 0.1 * i) + 0.01 * i for i in range(W)]), tree)
+    mem0 = tuple(
+        jax.random.normal(jax.random.PRNGKey(9 + b), (W,) + s.shape)
+        * (0.1 if s.kind == "sparse" else 0.0)
+        for b, s in enumerate(plan.buckets))
+
+    def run(cfg, mem_, pod_ks=None):
+        def sync(m_, g_):
+            kw = {"pod_ks": pod_ks} if pod_ks is not None else {}
+            upd, new_mem, _ = bucketed_sync_gradients(
+                cfg, plan, jax.tree.map(lambda m: m[0], m_),
+                jax.tree.map(lambda x: x[0], g_), jnp.float32(eta), **kw)
+            return upd, jax.tree.map(lambda m: m[None], new_mem)
+
+        wspec = jax.tree.map(lambda _: P(("pod", "data")), mem_)
+        gspec = jax.tree.map(lambda _: P(("pod", "data")), gs)
+        return shard_map(
+            sync, mesh=mesh, in_specs=(wspec, gspec),
+            out_specs=(jax.tree.map(lambda _: P(), tree), wspec))(mem_, gs)
+
+    base = dict(ratio=ratio, data_axes=("data",), pod_axis="pod",
+                bucketed=True, bucket_cols=128, wire=wire)
+    paths = {
+        "flat": SyncConfig(strategy="sparse_allgather", **base),
+        "hierarchical": SyncConfig(strategy="hierarchical",
+                                   pod_ratios=(1.0, 0.1), **base),
+        "pod_dynamic": SyncConfig(strategy="hierarchical",
+                                  pod_ratios=(1.0, 9 / 128),
+                                  pod_dynamic=True, **base),
+    }
+    out = {}
+    for name, cfg in paths.items():
+        per_overlap = {}
+        for ov in (None, False, True):
+            c = dataclasses.replace(cfg, overlap=ov)
+            mem_ = mem0
+            applied = []
+            # pod_dynamic: two chained steps across a live-k REFRESH
+            # (9 -> 4) — the schedule must stay bit-identical through
+            # the switch, not just at a fixed k
+            schedule = ([[1, 9], [1, 4]] if name == "pod_dynamic"
+                        else [None])
+            for ks in schedule:
+                pk = (None if ks is None
+                      else jnp.asarray(ks, jnp.int32))
+                upd, mem_ = run(c, mem_, pod_ks=pk)
+                applied.append(
+                    jax.tree.map(lambda t, u: t - u, tree, upd))
+            per_overlap[ov] = (applied, mem_)
+        out[f"{name}_bitwise"] = bool(
+            bitwise_equal(per_overlap[None], per_overlap[False])
+            and bitwise_equal(per_overlap[None], per_overlap[True]))
+    out["bitwise_all"] = all(out.values())
+    return out

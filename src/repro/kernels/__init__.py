@@ -6,13 +6,13 @@
 * ``ref``          — pure-jnp oracles.
 """
 from repro.kernels.ops import (
-    LOOP_MAX_K,
     row_topk,
     fused_memsgd_update,
     row_topk_ref,
     fused_memsgd_ref,
 )
 from repro.kernels.ref import densify_rows_ref
+from repro.kernels.topk_select import LOOP_MAX_K
 
 __all__ = [
     "LOOP_MAX_K",

@@ -10,7 +10,8 @@ auto-detects the backend and compiles for real.
 * ``"loop"``      — k masked-argmax iterations, whole row in one VMEM tile.
 * ``"threshold"`` — single-pass bisection select, column-tiled grid so C
   is not limited by VMEM (see ``topk_select.row_topk_tiled_pallas``).
-* ``"auto"``      — threshold for k > LOOP_MAX_K, loop otherwise (tiny k:
+* ``"auto"``      — threshold for k above the backend's measured cutover
+  (``repro.utils.platform.topk_loop_cutover``), loop otherwise (tiny k:
   the k dependent passes are cheaper than the fixed 32 bisection sweeps).
 
 All methods emit bitwise-identical (value, index) outputs.
@@ -28,7 +29,6 @@ from repro.kernels.fused_memsgd import fused_memsgd_pallas
 from repro.kernels.topk_select import (
     DEFAULT_COL_BLOCK,
     DEFAULT_ROW_BLOCK,
-    LOOP_MAX_K,
     row_topk_pallas,
     row_topk_tiled_pallas,
 )
@@ -38,7 +38,9 @@ Array = jax.Array
 
 def _resolve_method(method: str, k: int) -> str:
     if method == "auto":
-        return "threshold" if k > LOOP_MAX_K else "loop"
+        from repro.utils.platform import topk_loop_cutover
+
+        return "threshold" if k > topk_loop_cutover() else "loop"
     if method not in ("loop", "threshold"):
         raise ValueError(f"unknown top-k method {method!r}")
     return method

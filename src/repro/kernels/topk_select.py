@@ -51,14 +51,23 @@ _IDX_SENTINEL = 2**30  # python int: kernels must not capture traced consts
 # |x| bitcasts are >= 0; bisection over [-1, max_bits] converges in <= 32
 # halvings (the f32 magnitude bit range is < 2^31).
 _N_BISECT = 32
-# up to this k the k-pass argmax loop beats the fixed-cost threshold select
+# up to this k the k-pass argmax loop beats the fixed-cost threshold
+# select. Historical default — the per-backend MEASURED table in
+# ``repro.utils.platform.topk_loop_cutover`` supersedes it wherever a
+# backend entry exists (the interpret-mode CPU crossover sits at 4).
 LOOP_MAX_K = 8
 
 
 def _auto_interpret(interpret: Optional[bool]) -> bool:
-    """interpret=None -> interpret unless running on a real TPU backend."""
+    """Resolve ``interpret=None``: compiled lowering on TPU and GPU
+    (Mosaic / Triton), interpret fallback on CPU — with the
+    ``REPRO_PALLAS_INTERPRET=0/1`` env override taking priority either
+    way (see ``repro.utils.platform.pallas_interpret_default``). An
+    explicit ``interpret=`` argument always wins."""
     if interpret is None:
-        return jax.default_backend() != "tpu"
+        from repro.utils.platform import pallas_interpret_default
+
+        return pallas_interpret_default()
     return interpret
 
 

@@ -753,6 +753,21 @@ def main():
     ap.add_argument("--wire", default="unpacked",
                     choices=("unpacked", "packed"),
                     help="sync wire format (repro.core.encoding)")
+    ap.add_argument("--overlap", default="auto",
+                    choices=("auto", "on", "off"),
+                    help="software-pipelined bucket schedule "
+                         "(repro.core.pipeline): 'on' double-buffers so "
+                         "bucket b's all-gather+decode overlaps bucket "
+                         "b+1's select+encode, 'off' pins the strict "
+                         "sequential schedule, 'auto' keeps the legacy "
+                         "emission. Bitwise-identical params/memory in "
+                         "all modes")
+    ap.add_argument("--platform", default=None,
+                    choices=("cpu", "gpu", "cuda", "tpu"),
+                    help="pin the JAX platform and set its XLA perf "
+                         "flags (GPU: async collectives + latency-hiding "
+                         "scheduler — what makes --overlap on hide the "
+                         "gathers; repro.utils.platform.setup_platform)")
     ap.add_argument("--emit-deltas", action="store_true",
                     help="stream packed parameter deltas for serving "
                          "replicas (implies --bucketed)")
@@ -767,6 +782,13 @@ def main():
                     help="per-row top-k ratio for the lossy memory "
                          "section of wire checkpoints")
     args = ap.parse_args()
+
+    if args.platform is not None:
+        # before any backend use (device_count below initializes the
+        # client, which reads XLA_FLAGS once)
+        from repro.utils.platform import setup_platform
+
+        setup_platform(args.platform)
 
     if args.mesh:
         from repro.launch.mesh import mesh_from_config
@@ -799,6 +821,8 @@ def main():
                      sync=SyncConfig(ratio=args.ratio,
                                      strategy=args.strategy,
                                      wire=args.wire,
+                                     overlap=(None if args.overlap == "auto"
+                                              else args.overlap == "on"),
                                      pod_ratio=args.pod_ratio,
                                      pod_mass_target=args.pod_mass_target,
                                      pod_k_max_ratio=args.pod_k_max_ratio,

@@ -7,8 +7,18 @@ from repro.utils.tree import (
     tree_dot,
 )
 from repro.utils.shapes import parse_hlo_shape_bytes, human_bytes
+from repro.utils.platform import (
+    backend,
+    pallas_interpret_default,
+    setup_platform,
+    topk_loop_cutover,
+)
 
 __all__ = [
+    "backend",
+    "pallas_interpret_default",
+    "setup_platform",
+    "topk_loop_cutover",
     "tree_add",
     "tree_scale",
     "tree_zeros_like",

@@ -51,6 +51,13 @@ REFRESH = {
     "smoke": {"refreshes": 2, "zero_recompiles": True,
               "replay_bitwise": True, "dynamic_matches_static": True},
 }
+OVERLAP = {
+    "pipeline": {"seq_ms": 76.0, "overlap_ms": 51.0, "speedup": 1.49,
+                 "bitwise_equal": True},
+    "smoke": {"flat_bitwise": True, "hierarchical_bitwise": True,
+              "pod_dynamic_bitwise": True, "probe_bitwise": True},
+    "bitwise_identical": True,
+}
 
 
 def test_identical_payloads_pass():
@@ -59,6 +66,7 @@ def test_identical_payloads_pass():
     assert gate.check_fanout(FANOUT, copy.deepcopy(FANOUT), 1.15) == []
     assert gate.check_hierarchy(HIER, copy.deepcopy(HIER), 1.15) == []
     assert gate.check_refresh(REFRESH, copy.deepcopy(REFRESH), 1.15) == []
+    assert gate.check_overlap(OVERLAP, copy.deepcopy(OVERLAP), 1.15) == []
 
 
 def test_refresh_regressions_fail():
@@ -85,6 +93,43 @@ def test_refresh_regressions_fail():
     fresh4["drift"]["capture_advantage"] = 0.01
     assert any("capture_advantage" in e
                for e in gate.check_refresh(REFRESH, fresh4, 1.15))
+
+
+def test_overlap_regressions_fail():
+    # any bitwise flag flipping fails — the feature's whole contract
+    for path, flag in [("pipeline", "bitwise_equal"),
+                       ("smoke", "flat_bitwise"),
+                       ("smoke", "hierarchical_bitwise"),
+                       ("smoke", "pod_dynamic_bitwise"),
+                       ("smoke", "probe_bitwise")]:
+        fresh = copy.deepcopy(OVERLAP)
+        fresh[path][flag] = False
+        assert any(flag in e
+                   for e in gate.check_overlap(OVERLAP, fresh, 1.15))
+    fresh = copy.deepcopy(OVERLAP)
+    fresh["bitwise_identical"] = False
+    assert any("bitwise_identical" in e
+               for e in gate.check_overlap(OVERLAP, fresh, 1.15))
+    # machine-normalized speedup: -33% is interpret-noise, halving fails
+    fresh2 = copy.deepcopy(OVERLAP)
+    fresh2["pipeline"]["speedup"] = 1.10
+    assert gate.check_overlap(OVERLAP, fresh2, 1.15) == []
+    fresh2["pipeline"]["speedup"] = 0.70
+    errs = gate.check_overlap(OVERLAP, fresh2, 1.15)
+    # ...and anything at/below break-even fails regardless of baseline
+    assert any("speedup" in e for e in errs)
+    assert any("<= 1.0" in e for e in errs)
+
+
+def test_topk_cutover_flag_gated():
+    base = dict(TOPK, cutover={"cutover_k": 4, "auto_matches_faster": True})
+    fresh = copy.deepcopy(base)
+    assert gate.check_topk(base, fresh, 1.15) == []
+    fresh["cutover"]["auto_matches_faster"] = False
+    assert any("auto_matches_faster" in e
+               for e in gate.check_topk(base, fresh, 1.15))
+    # a baseline predating the cutover sweep must not block the gate
+    assert gate.check_topk(TOPK, copy.deepcopy(TOPK), 1.15) == []
 
 
 def test_unreadable_payload_fails_loudly(tmp_path):
@@ -149,6 +194,16 @@ def test_summary_markdown(tmp_path):
                            ["hierarchy[packed]: regressed"], fh)
     text = out.read_text()
     assert "**FAIL**" in text and "hierarchy[packed]: regressed" in text
+    # the overlap speedup gets a headline row above the tables
+    base_ovl = copy.deepcopy(OVERLAP)
+    base_ovl["pipeline"]["speedup"] = 1.40
+    (basedir / "BENCH_overlap.json").write_text(json.dumps(base_ovl))
+    (freshdir / "BENCH_overlap.json").write_text(json.dumps(OVERLAP))
+    with open(out, "w") as fh:
+        gate.write_summary(str(basedir), str(freshdir), [], fh)
+    text = out.read_text()
+    assert ("**Overlap pipeline speedup:** x1.49 (baseline x1.40) — "
+            "bitwise identical: true") in text
 
 
 def test_throughput_drop_fails_but_budget_holds():
