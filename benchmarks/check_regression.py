@@ -1,8 +1,8 @@
 """Bench regression gate: fresh BENCH_*.json vs committed baselines.
 
 CI stashes the committed baselines, re-runs ``benchmarks/run.py
-kernel_topk wire_codec fanout hierarchy refresh overlap`` (which overwrite the
-repo-root ``BENCH_*.json``), then runs this checker. Alongside the
+kernel_topk wire_codec fanout hierarchy refresh overlap budget`` (which
+overwrite the repo-root ``BENCH_*.json``), then runs this checker. Alongside the
 pass/fail verdict it emits a markdown comparison table (baseline vs
 fresh per tracked metric) to ``$GITHUB_STEP_SUMMARY`` and to
 ``--summary-file`` for artifact upload. A check FAILS when:
@@ -214,6 +214,55 @@ def check_overlap(base: dict, fresh: dict, max_slowdown: float,
     return errs
 
 
+# the acceptance bound on realized-vs-accounted cross-pod bytes: the
+# repack transport measures exactly 1.0; anything past 1.2 means the
+# wire is shipping bytes the live-k accounting does not admit to
+BUDGET_BYTE_RATIO_BOUND = 1.2
+
+
+def check_budget(base: dict, fresh: dict, max_slowdown: float,
+                 kernel_retention: float = 0.5) -> List[str]:
+    """Repack transport + byte-budget controller (BENCH_budget.json):
+    realized cross-pod bytes must track the live-k accounting (LOWER is
+    better — gated both against the baseline and the absolute 1.2x
+    acceptance bound), the padded-vs-realized byte edge and the
+    water-filling's capture-per-byte advantage over a frozen static-k
+    split must not shrink, and every correctness bit (bitwise repack
+    round trips, allocations within budget, zero recompiles) must
+    hold."""
+    tr_b, tr_f = base.get("transport", {}), fresh.get("transport", {})
+    errs = _flag_off(tr_f, tr_b, "roundtrip_bitwise", "budget[transport]")
+    key = "byte_ratio_realized_vs_accounted"
+    errs += _missing(tr_f, tr_b, key, "budget[transport]")
+    if key in tr_f:
+        if tr_f[key] > BUDGET_BYTE_RATIO_BOUND:
+            errs.append(
+                f"budget[transport]: {key} {tr_f[key]:.3f} exceeds the "
+                f"{BUDGET_BYTE_RATIO_BOUND}x acceptance bound")
+        if key in tr_b and tr_f[key] > tr_b[key] / RATIO_SLACK:
+            errs.append(
+                f"budget[transport]: {key} {tr_f[key]:.3f} regressed vs "
+                f"baseline {tr_b[key]:.3f} (realized bytes drifting above "
+                "the live-k accounting)")
+    errs += _ratio_regressed(tr_f, tr_b, "padded_vs_realized",
+                             "budget[transport]")
+    al_b, al_f = base.get("allocation", {}), fresh.get("allocation", {})
+    errs += _flag_off(al_f, al_b, "within_budget", "budget[allocation]")
+    errs += _ratio_regressed(al_f, al_b, "mean_advantage",
+                             "budget[allocation]")
+    if "mean_advantage" in al_f and al_f["mean_advantage"] <= 1.0:
+        errs.append(
+            f"budget[allocation]: mean_advantage "
+            f"{al_f['mean_advantage']:.3f} <= 1.0 (water-filling no "
+            "longer beats the frozen static-k split)")
+    smoke_b, smoke_f = base.get("smoke", {}), fresh.get("smoke", {})
+    for key in ("repack_bitwise", "transport_roundtrip_bitwise",
+                "transport_accounting_exact", "refresh_within_budget",
+                "zero_recompiles"):
+        errs += _flag_off(smoke_f, smoke_b, key, "budget[smoke]")
+    return errs
+
+
 CHECKS = {
     "BENCH_topk.json": check_topk,
     "BENCH_wire.json": check_wire,
@@ -221,6 +270,7 @@ CHECKS = {
     "BENCH_hierarchy.json": check_hierarchy,
     "BENCH_refresh.json": check_refresh,
     "BENCH_overlap.json": check_overlap,
+    "BENCH_budget.json": check_budget,
 }
 
 
@@ -315,6 +365,20 @@ def write_summary(baseline_dir: str, fresh_dir: str, errors: List[str],
                 f"**Overlap pipeline speedup:** x{pipe['speedup']:.2f}"
                 f"{vs} — bitwise identical: "
                 f"{_fmt(payload.get('bitwise_identical'))}\n\n")
+    bpath = os.path.join(fresh_dir, "BENCH_budget.json")
+    if os.path.exists(bpath):
+        payload, errs = _load_payload(bpath, "fresh", "BENCH_budget.json")
+        tr = {} if errs else payload.get("transport", {})
+        al = {} if errs else payload.get("allocation", {})
+        if "byte_ratio_realized_vs_accounted" in tr:
+            fh.write(
+                f"**Budgeted transport:** cross-pod bytes at "
+                f"x{tr['byte_ratio_realized_vs_accounted']:.2f} of the "
+                f"live-k accounting (bound "
+                f"x{BUDGET_BYTE_RATIO_BOUND}) — padded gather would cost "
+                f"x{tr.get('padded_vs_realized', 0):.2f}; water-filled "
+                f"budget captures x{al.get('mean_advantage', 0):.3f} the "
+                f"mass-per-byte of a frozen static split\n\n")
     for fname in CHECKS:
         fpath = os.path.join(fresh_dir, fname)
         if not os.path.exists(fpath):

@@ -27,6 +27,12 @@ to experiments/bench/*.json.
                      sequential (strictly faster, bitwise-equal), plus
                      2-pod smoke bitwise identity overlap on == off for
                      flat/hierarchical/pod-dynamic
+  budget             header-aware repack transport + global byte-budget
+                     controller: realized cross-pod bytes == live-k
+                     accounting on the drift synthetic (vs the ~7.6x
+                     padded gather), water-filled budget vs frozen
+                     static-k capture-per-byte, 2-pod smoke bitwise
+                     identity + budget-driven refreshes
 
 Fast mode (default) uses reduced n/T; ``--full`` approaches paper scale.
 """
@@ -892,6 +898,276 @@ def refresh(full: bool = False):
     return payload
 
 
+def budget(full: bool = False):
+    """Header-aware cross-pod repack transport + global byte-budget
+    controller (repro.core.budget).
+
+    (a) repack on the refresh drift synthetic (same generator/seed as
+    ``refresh``): the k_max-padded pod-summary gather costs ~7.6x the
+    live-k accounting; shipping each message through
+    ``distributed.repack_transport`` must realize EXACTLY the live-k
+    bytes (ratio 1.0, acceptance bound 1.2) at a bitwise-identical
+    repadded buffer. (b) a two-bucket drift with mass migrating between
+    buckets: the water-filling ``BudgetController`` re-spending a fixed
+    global byte budget every refresh must capture more mass per
+    cross-pod byte than the step-0 allocation frozen for the run, at
+    never more than the budget. (c) a 2-pod rwkv6-3b smoke subprocess:
+    ``repro.core.selfcheck.repack_selfcheck`` (R stage bitwise inert
+    across overlap modes and a live-k switch, host transport round-trip
+    + exact accounting) plus a short budget-driven train run — every
+    refresh's allocation stays within ``SyncConfig.byte_budget`` with
+    zero steady-state recompiles. Writes BENCH_budget.json."""
+    import subprocess
+    import textwrap
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import buckets as bk
+    from repro.core import encoding as enc
+    from repro.core.budget import BudgetController
+    from repro.core.distributed import (
+        SyncConfig,
+        autotune_pod_ratios,
+        repack_transport,
+    )
+    from repro.kernels.topk_select import mask_live_k
+
+    # -- (a) repack transport on the refresh drift synthetic ---------------
+    T = 16 if full else 10
+    every = 2
+    n_data = 4
+    rows, cols = 32, 512
+    target = 0.9
+    cfg = SyncConfig(ratio=0.02, strategy="hierarchical", pod_axis="pod",
+                     bucketed=True, bucket_cols=cols, wire="packed",
+                     pod_mass_target=target, pod_dynamic=True)
+    plan = bk.make_plan(
+        {"w": jax.ShapeDtypeStruct((rows * cols,), jnp.float32)},
+        cols=cols, dense_below=cols,
+    )
+    k_row = cfg.k_for(cols)
+    k_max = cfg.pod_k_max_for_bucket(0, cols, n_data)
+    wspec = enc.WireSpec(rows, cols, k_max, "float32")
+    rng = np.random.default_rng(7)
+    perm = np.stack([rng.permutation(cols) for _ in range(rows)])
+    signs = np.where(rng.random((rows, cols)) < 0.5, -1.0, 1.0)
+
+    def u_shards(t, alpha0=1.6, alpha1=0.15):
+        alpha = alpha0 - (alpha0 - alpha1) * t / max(1, T - 1)
+        mag = (np.arange(1, cols + 1) ** (-alpha))[perm] * signs
+        shards = np.stack([
+            mag * (1.0 + 0.08 * rng.standard_normal((rows, cols)))
+            for _ in range(n_data)
+        ])
+        return jnp.asarray(shards, jnp.float32)
+
+    def realized_transport_bytes(bufs, k_live):
+        """Ship the pod summary the way the boundary stage does: top-k
+        at the static padded k_max, tail masked to the live k, packed
+        with the live count in the header — then repack for the hop."""
+        pm = bk.simulate_pod_mean(bufs, k_row)
+        _, idx = jax.lax.top_k(jnp.abs(pm), k_max)
+        vals = jnp.take_along_axis(pm, idx, axis=-1)
+        vals, idx = mask_live_k(vals, idx.astype(jnp.int32), k_live)
+        buf = enc.encode(wspec, vals, idx, live_n=k_live)
+        repadded, nbytes = repack_transport(wspec, buf)
+        roundtrip = np.array_equal(np.asarray(repadded), np.asarray(buf))
+        return int(nbytes), bool(roundtrip)
+
+    def tuned_k(bufs):
+        r = autotune_pod_ratios(cfg, plan, [bufs], n_data=n_data,
+                                k_caps=[k_max])[0]
+        return int(round(r * cols))
+
+    k_live = tuned_k(u_shards(0))
+    realized, accounted, roundtrips = [], [], []
+    for t in range(T):
+        bufs = u_shards(t)
+        if t > 0 and t % every == 0:
+            k_live = tuned_k(bufs)
+        nb, ok = realized_transport_bytes(bufs, k_live)
+        realized.append(nb)
+        accounted.append(
+            enc.message_nbytes(rows, cols, k_live, "float32", "packed"))
+        roundtrips.append(ok)
+    padded = wspec.nbytes
+    mean_realized = sum(realized) / len(realized)
+    mean_accounted = sum(accounted) / len(accounted)
+    byte_ratio = mean_realized / mean_accounted
+    transport = {
+        "steps": T, "refresh_every": every, "k_max": k_max,
+        "padded_bytes": padded,
+        "realized_bytes": realized, "accounted_bytes": accounted,
+        "mean_realized_bytes": mean_realized,
+        "mean_accounted_bytes": mean_accounted,
+        "byte_ratio_realized_vs_accounted": byte_ratio,
+        "padded_vs_realized": padded / mean_realized,
+        "roundtrip_bitwise": all(roundtrips),
+    }
+    _emit("budget_transport", 0.0,
+          f"realized/accounted={byte_ratio:.4f};"
+          f"padded_vs_realized={padded / mean_realized:.2f};"
+          f"roundtrip_bitwise={all(roundtrips)}")
+
+    # -- (b) global budget vs frozen static-k at equal bytes ----------------
+    # two buckets with OPPOSING drift: mass concentration migrates from
+    # bucket 0 to bucket 1 over the run, so a fixed split goes stale
+    plan2 = bk.make_plan(
+        {"a": jax.ShapeDtypeStruct((rows * cols,), jnp.float32),
+         "z": jax.ShapeDtypeStruct((rows * cols,), jnp.bfloat16)},
+        cols=cols, dense_below=cols,
+    )
+    assert len(plan2.buckets) == 2, plan2
+    k_caps = [cfg.pod_k_max_for_bucket(b, cols, n_data) for b in (0, 1)]
+    ctl = BudgetController(cfg, plan2, n_data, k_caps=k_caps)
+
+    def u2(t):
+        return [u_shards(t, 1.6, 0.15), u_shards(t, 0.15, 1.6)]
+
+    curves0 = ctl.measure(u2(0))
+    floor = ctl.cross_bytes_of((1, 1))
+    span = ctl.cross_bytes_of(tuple(c.k_cap for c in curves0)) - floor
+    byte_budget = floor + span // 3
+    ks_static = ctl.allocate_bytes(curves0, byte_budget)
+    ks_ctl = ks_static
+    cap_ctl, cap_static, ks_hist = [], [], []
+    for t in range(T):
+        curves = curves0 if t == 0 else ctl.measure(u2(t))
+        if t > 0 and t % every == 0:
+            ks_ctl = ctl.allocate_bytes(curves, byte_budget)
+
+        def captured(ks):
+            return sum(float(c.abs_capture[k - 1])
+                       for c, k in zip(curves, ks))
+
+        cap_ctl.append(captured(ks_ctl) / ctl.cross_bytes_of(ks_ctl))
+        cap_static.append(captured(ks_static)
+                          / ctl.cross_bytes_of(ks_static))
+        ks_hist.append(list(ks_ctl))
+    mean_adv = (sum(cap_ctl) / T) / (sum(cap_static) / T)
+    final_adv = cap_ctl[-1] / cap_static[-1]
+    alloc = {
+        "byte_budget": byte_budget, "floor_bytes": floor,
+        "k_caps": k_caps, "ks_static": list(ks_static),
+        "ks_controller": ks_hist,
+        "controller_bytes": ctl.cross_bytes_of(ks_hist[-1]),
+        "capture_per_byte_controller": cap_ctl,
+        "capture_per_byte_static": cap_static,
+        "mean_advantage": mean_adv, "final_advantage": final_adv,
+        "within_budget": all(
+            ctl.cross_bytes_of(ks) <= byte_budget for ks in ks_hist),
+    }
+    _emit("budget_waterfill", 0.0,
+          f"budget={byte_budget};mean_advantage={mean_adv:.3f};"
+          f"final_advantage={final_adv:.3f};"
+          f"ks={ks_hist[0]}->{ks_hist[-1]}")
+
+    # -- (c) 2-pod rwkv6-3b smoke: bitwise + budget-driven refreshes -------
+    steps = 5
+    script = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys, json
+        sys.path.insert(0, {src!r})
+        import jax, jax.numpy as jnp
+        import numpy as np
+        from repro.configs import MESHES, PodRefreshConfig, get_smoke_config
+        from repro.core import buckets as bk
+        from repro.core.budget import BudgetController
+        from repro.core.distributed import SyncConfig
+        from repro.core.selfcheck import repack_selfcheck
+        from repro.data import token_batches
+        from repro.data.pipeline import ShardedBatcher, take
+        from repro.launch.mesh import mesh_from_config
+        from repro.launch.train import TrainConfig, train
+        from repro.models import build_model
+
+        STEPS = {steps}
+        mesh = mesh_from_config(MESHES["smoke_2pod"])
+        rec = repack_selfcheck(mesh)
+
+        cfg = get_smoke_config("rwkv6-3b")
+        model = build_model(cfg)
+        plan = bk.make_plan(model.param_shapes())
+        base = SyncConfig(ratio=0.02, strategy="hierarchical",
+                          bucketed=True, wire="packed")
+        ctl = BudgetController(base, plan, n_data=4)
+        floor = ctl.cross_bytes_of(tuple(1 for _ in plan.buckets))
+        budget = int(floor * 1.2)
+        sync = SyncConfig(ratio=0.02, strategy="hierarchical",
+                          bucketed=True, wire="packed",
+                          byte_budget=budget)
+        sched, diag = [], {{}}
+        tc = TrainConfig(optimizer="memsgd", eta=0.3, sync=sync,
+                         pod_refresh=PodRefreshConfig(every=2))
+        batch_list = list(take(iter(ShardedBatcher(
+            mesh, token_batches(cfg.vocab_size, 8, 32, seed=9),
+            batch_axes=("pod", "data"), prefetch=0)), STEPS))
+        train(model, mesh, tc, iter(batch_list), n_steps=STEPS,
+              log_every=0, rng=jax.random.PRNGKey(0),
+              refresh_cb=lambda i, ks: sched.append((i, list(ks))),
+              diagnostics=diag)
+        within = all(ctl.cross_bytes_of(ks) <= budget for _, ks in sched)
+        rec.update({{
+            "floor_bytes": floor, "byte_budget": budget,
+            "refreshes": len(sched), "k_schedule": sched,
+            "refresh_within_budget": bool(within),
+            "zero_recompiles": diag["steady_state_recompiles"] == 0}})
+        print(json.dumps(rec))
+        """
+    ).format(src=os.path.join(_ROOT, "src"), steps=steps)
+    t0 = time.time()
+    out = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        timeout=3600,
+    )
+    assert out.returncode == 0, out.stderr[-4000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    wall_us = (time.time() - t0) * 1e6
+    smoke = {
+        "plan": "rwkv6-3b-smoke", "mesh": "smoke_2pod", "steps": steps,
+        "repack_bitwise": rec["repack_bitwise"],
+        "transport_roundtrip_bitwise": rec["transport_roundtrip_bitwise"],
+        "transport_accounting_exact": rec["transport_accounting_exact"],
+        "padded_vs_live_bytes": rec["padded_vs_live_bytes"],
+        "floor_bytes": rec["floor_bytes"],
+        "byte_budget": rec["byte_budget"],
+        "refreshes": rec["refreshes"],
+        "k_schedule": rec["k_schedule"],
+        "refresh_within_budget": rec["refresh_within_budget"],
+        "zero_recompiles": rec["zero_recompiles"],
+    }
+    _emit("budget_smoke", wall_us / max(1, steps),
+          f"repack_bitwise={rec['repack_bitwise']};"
+          f"accounting_exact={rec['transport_accounting_exact']};"
+          f"refreshes={rec['refreshes']};"
+          f"within_budget={rec['refresh_within_budget']};"
+          f"zero_recompiles={rec['zero_recompiles']}")
+
+    payload = {"transport": transport, "allocation": alloc, "smoke": smoke}
+    _save("budget", payload)
+    with open(os.path.join(_ROOT, "BENCH_budget.json"), "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    # acceptance: realized cross-pod bytes within 1.2x of the live-k
+    # accounting (exactly 1.0 here) vs the ~7.6x padded gather; the
+    # budget allocator never overspends and beats the frozen split on
+    # capture-per-byte; the smoke run is bitwise with exact accounting
+    assert transport["byte_ratio_realized_vs_accounted"] <= 1.2, transport
+    assert transport["padded_vs_realized"] > 2.0, transport
+    assert transport["roundtrip_bitwise"], transport
+    assert alloc["within_budget"], alloc
+    assert alloc["mean_advantage"] > 1.0, alloc
+    assert smoke["repack_bitwise"], smoke
+    assert smoke["transport_roundtrip_bitwise"], smoke
+    assert smoke["transport_accounting_exact"], smoke
+    assert smoke["refreshes"] >= 1, smoke
+    assert smoke["refresh_within_budget"], smoke
+    assert smoke["zero_recompiles"], smoke
+    return payload
+
+
 def remark23_ultra(full: bool = False):
     """Remark 2.3 ultra-sparsification: transmit on average LESS THAN ONE
     coordinate per step (k < 1) and still converge (with memory)."""
@@ -1148,6 +1424,7 @@ BENCHES = {
     "hierarchy": hierarchy,
     "refresh": refresh,
     "overlap": overlap,
+    "budget": budget,
     "remark23_ultra": remark23_ultra,
 }
 

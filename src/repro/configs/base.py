@@ -119,6 +119,11 @@ class PodRefreshConfig:
     every: int = 0  # steps between re-calibrations (0 = off)
     # mass-capture target for refreshes (None: SyncConfig.pod_mass_target)
     mass_target: Optional[float] = None
+    # cross-pod bytes/step/worker each refresh re-spends via the
+    # water-filling allocator (core.budget.BudgetController) instead of
+    # sizing for the mass target (None: SyncConfig.byte_budget; both
+    # None: mass-target sizing)
+    byte_budget: Optional[int] = None
     # cap on the static padded pod k as a fraction of bucket cols
     # (None: the n_data * k_row support bound) — smaller caps shrink the
     # padded gather buffer but bound how far a refresh can raise k

@@ -1,0 +1,247 @@
+"""Global cross-pod byte-budget controller for the two-level sync.
+
+``distributed.autotune_pod_ratios`` sizes each bucket's pod-stage k for
+a MASS-CAPTURE target: the smallest k whose top-k holds a fixed fraction
+of the mass the pod stage can see. That answers "how big must k be to
+be this faithful?" but not the operator's actual question — "I can
+afford N bytes per step across the slow link; where do they buy the
+most mass?" ``BudgetController`` answers both from one measurement:
+
+* it measures each sparse bucket's ABSOLUTE captured-mass curve on the
+  realized pod-mean proxy (``buckets.simulate_pod_mean`` when per-shard
+  buffers are available) — the same curves the autotuner reads, kept in
+  one place;
+* ``mass_target`` mode reproduces ``autotune_pod_ratios`` EXACTLY
+  (``distributed.autotune_pod_ratios`` delegates here), so the two
+  entry points can never drift apart;
+* ``byte_budget`` mode WATER-FILLS a global ``SyncConfig.byte_budget``
+  across buckets: dense buckets' fixed cross-pod cost and every sparse
+  bucket's mandatory first slot are charged first, then slots are
+  granted one at a time to whichever bucket currently offers the most
+  marginal captured mass per marginal wire byte (marginal byte cost
+  straight from ``encoding.message_nbytes``, so bit-packing slack —
+  slots that fit in an already-paid-for word — is spent for free).
+  Under concave capture curves (top-k curves are concave by
+  construction: sorted decreasing contributions) the greedy allocation
+  is the exact optimum — classic water-filling, cf. Wangni et al.'s
+  variance-budgeted sparsification.
+
+Either mode emits per-bucket pod ks clamped to the static padded
+ceilings (``SyncConfig.pod_k_max_for_bucket`` / explicit ``k_caps``),
+i.e. exactly the ``pod_ks`` the k-padded dynamic wire consumes — a
+budget refresh is a pure data change with ZERO recompiles, and the
+header-aware repack transport ships (and ``bucketed_message_bytes(...,
+pod_ks=...)`` accounts) the allocated live k.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketCurve:
+    """One bucket's measured allocation inputs.
+
+    ``abs_capture[k-1]`` is the ABSOLUTE squared mass (summed over rows)
+    the k largest-|.| entries of the pod-mean proxy hold — the common
+    currency the water-filling compares across buckets. ``rel_capture``
+    is the same curve normalized within the visible ``support`` (the
+    autotuner's historical units). Dense buckets carry empty curves and
+    a fixed ``min_nbytes`` cross-pod cost."""
+
+    bucket: int
+    kind: str  # "sparse" | "dense"
+    rows: int
+    cols: int
+    support: int  # pod-mean support bound (n_data * k_row, capped)
+    k_cap: int  # static padded ceiling the allocation may not exceed
+    abs_capture: np.ndarray  # (k_cap,) absolute captured mass at k
+    rel_capture: np.ndarray  # (support,) support-relative capture at k
+    min_nbytes: int  # cost of the mandatory allocation (k=1 | dense)
+
+
+def _abs_capture(buf, max_k: int) -> np.ndarray:
+    """Absolute captured squared mass (summed over rows) of a (rows,
+    cols) buffer for k in 1..max_k — ``bucket_mass_capture``'s absolute
+    sibling: comparable ACROSS buckets, which is what a global budget
+    needs (a per-row fraction is not; a tiny bucket at 99% capture may
+    hold less mass than a huge one at 50%)."""
+    max_k = max(1, min(int(max_k), buf.shape[-1]))
+    sq = jnp.square(jnp.abs(jnp.asarray(buf).astype(jnp.float32)))
+    desc = -jnp.sort(-sq, axis=-1)[..., :max_k]
+    return np.asarray(jnp.sum(jnp.cumsum(desc, axis=-1), axis=0))
+
+
+class BudgetController:
+    """Per-bucket pod-k allocator over measured mass/byte curves.
+
+    ``cfg`` is a ``SyncConfig`` (duck-typed: ``k_for``, ``k_min``,
+    ``wire``, ``value_dtype``, ``pod_mass_target``, ``byte_budget``);
+    ``plan`` a ``buckets.BucketPlan``; ``n_data`` the intra-pod worker
+    count (the support bound); ``k_caps`` the static padded ceilings
+    (``step.pod_k_max`` on the dynamic path — None leaves only the
+    support bound)."""
+
+    def __init__(self, cfg, plan, n_data: int,
+                 k_caps: Optional[Sequence[int]] = None):
+        self.cfg = cfg
+        self.plan = plan
+        self.n_data = int(n_data)
+        self.k_caps = None if k_caps is None else tuple(
+            int(c) for c in k_caps)
+
+    # -- measurement --------------------------------------------------------
+
+    def measure(self, u_bufs) -> List[BucketCurve]:
+        """Concrete per-bucket u = m + eta*g buffers (``(n_shards, rows,
+        cols)`` per-shard stacks or ``(rows, cols)`` global — the same
+        contract as ``autotune_pod_ratios``) -> one ``BucketCurve`` per
+        bucket."""
+        from repro.core import buckets as bk
+        from repro.core import encoding as enc
+
+        name = jnp.dtype(self.cfg.value_dtype).name
+        curves = []
+        for b, (spec, u) in enumerate(zip(self.plan.buckets, u_bufs)):
+            if spec.kind == "dense":
+                curves.append(BucketCurve(
+                    bucket=b, kind="dense", rows=spec.rows, cols=spec.cols,
+                    support=spec.cols, k_cap=spec.cols,
+                    abs_capture=np.zeros(0), rel_capture=np.zeros(0),
+                    min_nbytes=spec.rows * spec.cols * 4,
+                ))
+                continue
+            k_row = self.cfg.k_for(spec.cols)
+            support = max(1, min(spec.cols, self.n_data * k_row))
+            if np.ndim(u) == 3:  # simulate the realized pod mean
+                u = bk.simulate_pod_mean(u, k_row)
+            k_cap = support
+            if self.k_caps is not None:
+                k_cap = max(1, min(k_cap, self.k_caps[b]))
+            curves.append(BucketCurve(
+                bucket=b, kind="sparse", rows=spec.rows, cols=spec.cols,
+                support=support, k_cap=k_cap,
+                abs_capture=_abs_capture(u, k_cap),
+                rel_capture=bk.support_relative_capture(u, support),
+                min_nbytes=enc.message_nbytes(
+                    spec.rows, spec.cols, 1, name, self.cfg.wire),
+            ))
+        return curves
+
+    # -- allocation ---------------------------------------------------------
+
+    def allocate_mass_target(self, curves: Sequence[BucketCurve],
+                             mass_target: Optional[float] = None
+                             ) -> Tuple[int, ...]:
+        """The autotuner's sizing, verbatim: per sparse bucket the
+        smallest k whose support-relative capture reaches the target,
+        clamped to [k_min, support] then to the static ceiling. Dense
+        buckets get k=1 (never consulted)."""
+        target = (self.cfg.pod_mass_target
+                  if mass_target is None else mass_target)
+        ks = []
+        for c in curves:
+            if c.kind == "dense":
+                ks.append(1)
+                continue
+            k = int(np.searchsorted(c.rel_capture, target, side="left")) + 1
+            k = max(self.cfg.k_min, min(k, c.support))
+            if self.k_caps is not None:
+                k = max(1, min(k, self.k_caps[c.bucket]))
+            ks.append(k)
+        return tuple(ks)
+
+    def allocate_bytes(self, curves: Sequence[BucketCurve],
+                       byte_budget: int) -> Tuple[int, ...]:
+        """Water-fill ``byte_budget`` cross-pod bytes/step/worker across
+        the buckets: charge the fixed costs (dense buckets, every sparse
+        bucket's mandatory k=1 slot), then repeatedly grant the single
+        slot with the highest marginal captured mass per marginal wire
+        byte (zero-cost slots — bit-packing slack — are granted
+        immediately). Returns per-bucket pod ks; an infeasible budget
+        floors every sparse bucket at k=1 rather than failing (the
+        minimum the codec can ship)."""
+        import heapq
+
+        from repro.core import encoding as enc
+
+        name = jnp.dtype(self.cfg.value_dtype).name
+
+        def nbytes_at(c, k):
+            return enc.message_nbytes(c.rows, c.cols, k, name, self.cfg.wire)
+
+        ks = {c.bucket: 1 for c in curves}
+        spent = sum(c.min_nbytes for c in curves)
+        remaining = int(byte_budget) - spent
+        # heap of (-density, bucket): density = marginal mass / marginal
+        # bytes for the bucket's NEXT slot; zero-cost steps use +inf
+        heap = []
+
+        def push(c):
+            k = ks[c.bucket]
+            if k >= c.k_cap:
+                return
+            gain = float(c.abs_capture[k] - c.abs_capture[k - 1])
+            cost = nbytes_at(c, k + 1) - nbytes_at(c, k)
+            dens = np.inf if cost == 0 else gain / cost
+            heapq.heappush(heap, (-dens, c.bucket, cost, gain))
+
+        sparse = {c.bucket: c for c in curves if c.kind == "sparse"}
+        for c in sparse.values():
+            push(c)
+        while heap and remaining >= 0:
+            neg_dens, b, cost, _ = heapq.heappop(heap)
+            if cost > remaining or neg_dens == 0.0:
+                # this bucket's next slot doesn't fit (or buys nothing);
+                # retire the bucket — its later slots only cost more
+                # and capture less (concave curve, monotone byte cost)
+                continue
+            ks[b] += 1
+            remaining -= cost
+            push(sparse[b])
+        return tuple(ks[c.bucket] for c in curves)
+
+    def allocate(self, u_bufs, byte_budget: Optional[int] = None,
+                 mass_target: Optional[float] = None) -> Tuple[int, ...]:
+        """Measure + allocate in one call: the byte budget (argument,
+        else ``cfg.byte_budget``) wins when set; otherwise the mass
+        target. Returns the per-bucket pod ks (the ``pod_ks`` schedule
+        entry / ``ratios_of`` input)."""
+        curves = self.measure(u_bufs)
+        budget = (byte_budget if byte_budget is not None
+                  else self.cfg.byte_budget)
+        if budget is not None:
+            return self.allocate_bytes(curves, budget)
+        return self.allocate_mass_target(curves, mass_target)
+
+    # -- emission -----------------------------------------------------------
+
+    def ratios_of(self, ks: Sequence[int]) -> Tuple[float, ...]:
+        """Per-bucket ks -> ``SyncConfig.pod_ratios`` (dense buckets
+        1.0, sparse k/cols — ``int(round(r * cols))`` round-trips to k
+        exactly)."""
+        out = []
+        for spec, k in zip(self.plan.buckets, ks):
+            out.append(1.0 if spec.kind == "dense" else k / spec.cols)
+        return tuple(out)
+
+    def cross_bytes_of(self, ks: Sequence[int]) -> int:
+        """Accounted cross-pod bytes/step/worker of an allocation — the
+        bytes the header-aware repack transport realizes (dense buckets
+        at their fixed cost, sparse at ``message_nbytes(k)``)."""
+        from repro.core import encoding as enc
+
+        name = jnp.dtype(self.cfg.value_dtype).name
+        total = 0
+        for spec, k in zip(self.plan.buckets, ks):
+            if spec.kind == "dense":
+                total += spec.rows * spec.cols * 4
+            else:
+                total += enc.message_nbytes(
+                    spec.rows, spec.cols, max(1, min(int(k), spec.cols)),
+                    name, self.cfg.wire)
+        return total

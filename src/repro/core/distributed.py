@@ -55,7 +55,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import pipeline
-from repro.core.pipeline import COMM, COMPUTE
+from repro.core.pipeline import COMM, COMPUTE, REPACK
 from repro.utils import compat
 
 Array = jax.Array
@@ -95,6 +95,24 @@ class SyncConfig:
     # bounds the gathered buffer below the full n_data*k_row support
     # bound at the cost of clamping how far a refresh can raise k.
     pod_k_max_ratio: Optional[float] = None
+    # Header-aware repack transport (bucketed hierarchical + pod_dynamic):
+    # grow each bucket's stage chain an explicit R stage between the pod
+    # re-select/encode and the cross-pod gather — the point where a
+    # header-aware transport compacts the k_max-padded summary down to
+    # its live payload (``encoding.repack``) so cross-pod bytes track
+    # the LIVE k, not the pad. In-jit the R stage is the identity
+    # (static shapes cannot shrink inside a trace — results stay
+    # BITWISE identical with repack on/off, and across overlap modes);
+    # the byte reduction is realized by the host/pod-boundary transport
+    # (``repack_transport``) and accounted by
+    # ``bucketed_message_bytes(..., pod_ks=...)``.
+    repack: bool = False
+    # Global cross-pod byte budget per step per worker (bytes). Consumed
+    # by ``core.budget.BudgetController``: instead of sizing each
+    # bucket's pod k for a mass-capture target, the controller
+    # water-fills this budget across buckets by marginal
+    # mass-per-byte. ``None`` keeps the mass-target sizing.
+    byte_budget: Optional[int] = None
     data_axes: Tuple[str, ...] = ("data",)
     pod_axis: Optional[str] = None  # set on multi-pod meshes
     value_dtype: str = "float32"
@@ -501,7 +519,8 @@ def _leaf_hierarchical_sync(u, k_row, k_pod, data_axes, pod_axis, value_dtype,
 
 def _hier_stages(shape, dtype, k_row, k_pod, data_axes, pod_axis,
                  value_dtype, constrain=lambda x: x, topk=_row_topk,
-                 densify=None, wire: str = "unpacked", k_pod_live=None):
+                 densify=None, wire: str = "unpacked", k_pod_live=None,
+                 repack_boundary: bool = False):
     """Stage chain for one two-level (hierarchical) leaf/bucket,
     decomposed for the bucket pipeline:
 
@@ -509,6 +528,12 @@ def _hier_stages(shape, dtype, k_row, k_pod, data_axes, pod_axis,
       G1 (comm):    intra-pod all-gather over the data axes
       M  (compute): level-1 decode + pod mean + pod re-select (live-k
                     mask) + residual + level-2 encode
+      R  (repack):  OPTIONAL (``repack_boundary``) — the header-aware
+                    transport's compaction point, right before the slow
+                    link. In-jit an identity (static shapes cannot
+                    shrink inside a trace; bitwise-invariant by
+                    construction); the host transport's R stage does
+                    the real ``encoding.repack`` byte shrink.
       G2 (comm):    cross-pod all-gather
       D  (compute): level-2 decode + densify + pod mean
 
@@ -573,6 +598,12 @@ def _hier_stages(shape, dtype, k_row, k_pod, data_axes, pod_axis,
             payload2 = (pvals, pidx)
         return own, residual, payload2
 
+    def repack_boundary_stage(st):
+        # in-jit identity: the traced buffer keeps its static padded
+        # layout (invariant 10's bitwise guarantee is untouched); the
+        # host executor substitutes the real ``encoding.repack`` here
+        return st
+
     def l2_gather(st):
         own, residual, payload2 = st
         if w2 is not None:
@@ -589,6 +620,11 @@ def _hier_stages(shape, dtype, k_row, k_pod, data_axes, pod_axis,
                   / n_pods).astype(dtype)
         return update, own, residual.astype(dtype)
 
+    if repack_boundary:
+        return ([l1_select_encode, l1_gather, pod_reselect_encode,
+                 repack_boundary_stage, l2_gather, l2_decode_apply],
+                (COMPUTE, COMM, COMPUTE, REPACK, COMM, COMPUTE),
+                level_bytes)
     return ([l1_select_encode, l1_gather, pod_reselect_encode, l2_gather,
              l2_decode_apply],
             (COMPUTE, COMM, COMPUTE, COMM, COMPUTE), level_bytes)
@@ -691,6 +727,7 @@ def sparse_sync_gradients(
                 u.shape, u.dtype, cfg.k_for(C), cfg.pod_k_for(C),
                 tuple(cfg.data_axes), cfg.pod_axis, value_dtype,
                 constrain, topk, densify, wire=cfg.wire,
+                repack_boundary=cfg.repack,
             )
             nbytes = sum(level_bytes)
 
@@ -835,7 +872,7 @@ def bucketed_sync_gradients(
                 u.shape, u.dtype, k_row, k_pod,
                 tuple(cfg.data_axes), cfg.pod_axis, value_dtype,
                 topk=topk, densify=densify, wire=cfg.wire,
-                k_pod_live=k_live,
+                k_pod_live=k_live, repack_boundary=cfg.repack,
             )
             nbytes = sum(level_bytes)
 
@@ -871,6 +908,37 @@ def bucketed_sync_gradients(
     if return_bufs:
         return bk.unpack(plan, ups), tuple(mems), total_bytes, ups
     return bk.unpack(plan, ups), tuple(mems), total_bytes
+
+
+def repack_transport(wspec, buf, link=None):
+    """The host/pod-boundary half of the header-aware repack transport:
+    compact a k-padded wire buffer to its live payload
+    (``encoding.repack``, sized by the buffer's own header word), ship
+    exactly THAT many bytes across the slow link, and re-expand to the
+    padded layout the in-jit consumer expects (``encoding.repad`` —
+    bitwise equal to the buffer that went in, so the transport is
+    invisible to everything downstream).
+
+    Returns ``(padded_buf_or_future, wire_nbytes)``. With ``link=None``
+    the round trip runs inline (the accounting/selfcheck path); with a
+    ``pipeline.EmulatedLink``-style object the small buffer rides
+    ``link.transfer(small_buf, wire_nbytes)`` and the returned future
+    repads on ``.result()`` — drop it into a ``run_host_pipeline`` comm
+    stage and the planner overlaps the (live-k-sized) transfer exactly
+    like any gather."""
+    from repro.core import encoding as enc
+
+    small_spec, small_buf = enc.repack(wspec, buf)
+    nbytes = small_spec.nbytes
+    if link is None:
+        return enc.repad(wspec, small_spec, small_buf), nbytes
+    fut = link.transfer(small_buf, nbytes)
+
+    class _Repad:
+        def result(self):
+            return enc.repad(wspec, small_spec, fut.result())
+
+    return _Repad(), nbytes
 
 
 def _sparse_leaf_bytes(cfg: SyncConfig, rows: int, cols: int,
@@ -922,28 +990,17 @@ def autotune_pod_ratios(cfg: SyncConfig, plan, u_bufs, n_data: int,
     re-jit). ``k_caps`` clamps each bucket's k to the static padded
     ceiling (``pod_k_max_for_bucket``) so a refresh can never outgrow
     the compiled buffers. Dense buckets get ratio 1.0 (never
-    consulted)."""
-    import numpy as np
+    consulted).
 
-    from repro.core import buckets as bk
+    This is the mass-target mode of ``core.budget.BudgetController``
+    (one measurement + allocator serves both this target sizing and the
+    global ``SyncConfig.byte_budget`` water-filling); it delegates
+    there so the two entry points can never drift apart."""
+    from repro.core.budget import BudgetController
 
-    target = cfg.pod_mass_target if mass_target is None else mass_target
-    ratios = []
-    for i, (spec, u) in enumerate(zip(plan.buckets, u_bufs)):
-        if spec.kind == "dense":
-            ratios.append(1.0)
-            continue
-        k_row = cfg.k_for(spec.cols)
-        support = max(1, min(spec.cols, n_data * k_row))
-        if u.ndim == 3:  # simulate the realized pod mean from shards
-            u = bk.simulate_pod_mean(u, k_row)
-        rel = bk.support_relative_capture(u, support)
-        k = int(np.searchsorted(rel, target, side="left")) + 1
-        k = max(cfg.k_min, min(k, support))
-        if k_caps is not None:
-            k = max(1, min(k, int(k_caps[i])))
-        ratios.append(k / spec.cols)
-    return tuple(ratios)
+    ctl = BudgetController(cfg, plan, n_data, k_caps=k_caps)
+    ks = ctl.allocate_mass_target(ctl.measure(u_bufs), mass_target)
+    return ctl.ratios_of(ks)
 
 
 def bucketed_message_bytes(cfg: SyncConfig, plan, *, by_level: bool = False,

@@ -30,8 +30,13 @@ Two layers live here:
    (the additive identity; see ``kernels.topk_select.mask_live_k``)
    and scatter as exact no-ops. ``live_n == 0`` means "all n_sel slots live" (the
    historical layout, where word 7 was reserved-zero). A header-aware
-   transport may re-pack to ``live_n`` slots before hitting the network;
-   ``message_nbytes(rows, cols, live_n, ...)`` is that effective size.
+   transport re-packs to ``live_n`` slots before hitting the network —
+   ``repack``/``repad`` below are that transport's codec half: because
+   selections are contract-ordered (the first ``live_n`` slots of a
+   top-``k_max`` select ARE the top-``live_n`` select) and the padded
+   tail is exactly (-0.0, 0), slicing the first ``live_n`` slots per row
+   is lossless and re-padding restores the padded buffer BITWISE.
+   ``message_nbytes(rows, cols, live_n, ...)`` is the effective size.
 
    Everything is static given the ``WireSpec`` (derived from a
    ``BucketPlan`` bucket or a leaf's row layout), so encode/decode are
@@ -320,9 +325,25 @@ def encode(spec: WireSpec, vals: Array, idx: Optional[Array] = None,
 
 def decode(spec: WireSpec, buf: Array) -> Tuple[Array, Optional[Array]]:
     """Inverse of ``encode``: wire buffer -> (values (rows, n_sel) in the
-    wire dtype, indices (rows, k) int32 | None for dense messages)."""
+    wire dtype, indices (rows, k) int32 | None for dense messages).
+
+    On a CONCRETE buffer the dynamic header word is validated: a
+    ``live_n`` exceeding the ``n_sel`` laid-out slots means the header
+    and the payload disagree (corruption or a spec mismatch), and
+    silently decoding would hand the caller padded garbage as live
+    data — raise instead. Traced buffers (the in-jit decode path) skip
+    the check; their live count is clamped by the producer."""
     if buf.shape != (spec.words,):
         raise ValueError(f"buffer shape {buf.shape} != {(spec.words,)}")
+    if not isinstance(buf, jax.core.Tracer):
+        import numpy as np
+
+        ln = int(np.asarray(buf[LIVE_N_WORD], dtype=np.uint32))
+        if ln > spec.n_sel:
+            raise ValueError(
+                f"corrupt wire header: live_n={ln} exceeds the "
+                f"{spec.n_sel} laid-out slots per row"
+            )
     off = HEADER_WORDS
     nv = spec.rows * spec.value_words
     vals = _unpack_values(
@@ -342,11 +363,97 @@ def live_n_of(buf) -> Optional[int]:
     """Host-side reader for the dynamic live entry count of a received
     buffer: the number of meaningful slots per row, or ``None`` when the
     message was encoded without one (word ``LIVE_N_WORD`` == 0, i.e.
-    every ``n_sel`` slot is live)."""
+    every ``n_sel`` slot is live). Raises on a header whose live count
+    exceeds its own ``n_sel`` layout word — an inconsistent message must
+    not be silently read as fully live."""
     import numpy as np
 
-    n = int(np.asarray(buf[LIVE_N_WORD], dtype=np.uint32))
+    h = np.asarray(buf[:HEADER_WORDS], dtype=np.uint32)
+    n = int(h[LIVE_N_WORD])
+    n_sel = int(h[4])
+    if n > n_sel:
+        raise ValueError(
+            f"corrupt wire header: live_n={n} exceeds the {n_sel} "
+            f"laid-out slots per row"
+        )
     return n or None
+
+
+def repack_spec(spec: WireSpec, live_n: int) -> WireSpec:
+    """Layout of the compacted message a k-padded ``spec`` shrinks to at
+    ``live_n`` live slots per row: the same (rows, cols, dtype) at
+    ``k = max(1, live_n)`` (the codec ships at least one slot; a
+    zero-live message carries one (-0.0, 0) no-op pair)."""
+    if spec.kind != "sparse":
+        raise ValueError("repack applies to sparse wire messages only")
+    if not 0 <= live_n <= spec.n_sel:
+        raise ValueError(
+            f"live_n={live_n} out of range for n_sel={spec.n_sel}"
+        )
+    return dataclasses.replace(spec, k=max(1, int(live_n)))
+
+
+def repack(spec: WireSpec, buf: Array,
+           live_n: Optional[int] = None) -> Tuple[WireSpec, Array]:
+    """Compact a k-padded message down to its live payload before it
+    crosses a slow link: -> ``(small_spec, small_buf)`` laid out at
+    ``repack_spec(spec, live_n)``.
+
+    ``live_n`` defaults to the buffer's own header word (host-side
+    read); ``None``-live (header 0 = all slots live) and ``live_n >=
+    n_sel`` messages pass through unchanged. The compaction is LOSSLESS:
+    selections are contract-ordered, so the first ``live_n`` slots per
+    row are exactly the live pairs and the dropped tail is the (-0.0, 0)
+    identity. The small header keeps the original live count, so
+    ``repad`` restores the padded buffer bitwise."""
+    if spec.kind != "sparse":
+        return spec, buf
+    if live_n is None:
+        live_n = live_n_of(buf)
+        if live_n is None:
+            return spec, buf
+    live_n = int(live_n)
+    if live_n >= spec.n_sel:
+        return spec, buf
+    small = repack_spec(spec, live_n)
+    vals, idx = decode(spec, buf)
+    return small, encode(
+        small, vals[:, : small.k], idx[:, : small.k], live_n=live_n
+    )
+
+
+def repad(spec: WireSpec, small_spec: WireSpec, small_buf: Array) -> Array:
+    """Inverse of ``repack``: re-expand a compacted message to the
+    static padded ``spec`` layout the in-jit consumer expects, bitwise
+    equal to the buffer ``repack`` was given — tail slots refill with
+    the (-0.0, 0) identity and the dynamic header word is carried over
+    from the small message."""
+    if small_spec == spec:
+        return small_buf
+    if spec.kind != "sparse" or small_spec.kind != "sparse":
+        raise ValueError("repad applies to sparse wire messages only")
+    if (small_spec.rows, small_spec.cols, small_spec.value_dtype) != (
+            spec.rows, spec.cols, spec.value_dtype):
+        raise ValueError(
+            f"repacked layout {small_spec} does not shrink {spec}"
+        )
+    if small_spec.k > spec.n_sel:
+        raise ValueError(
+            f"repacked k={small_spec.k} exceeds padded n_sel={spec.n_sel}"
+        )
+    import numpy as np
+
+    raw_live = int(np.asarray(small_buf[LIVE_N_WORD], dtype=np.uint32))
+    vals, idx = decode(small_spec, small_buf)
+    pad = spec.n_sel - small_spec.k
+    dtype = jnp.dtype(spec.value_dtype)
+    vals = jnp.concatenate(
+        [vals, jnp.full((spec.rows, pad), -0.0, dtype)], axis=1
+    )
+    idx = jnp.concatenate(
+        [idx, jnp.zeros((spec.rows, pad), jnp.int32)], axis=1
+    )
+    return encode(spec, vals, idx, live_n=raw_live)
 
 
 def transcode(

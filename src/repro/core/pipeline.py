@@ -53,6 +53,14 @@ from typing import Callable, List, Optional, Sequence, Tuple
 
 COMPUTE = "compute"
 COMM = "comm"
+# A repack boundary stage: the header-aware transport's compaction of a
+# k-padded wire buffer down to its live payload right before the slow
+# link (see ``core.encoding.repack``). Schedules like compute — it is
+# local work that hides behind an in-flight transfer — but is named so
+# chains and tests can assert where the byte shrink happens. In-jit the
+# stage is the identity (static shapes cannot shrink inside a trace);
+# the host executor's repack stage does the real byte reduction.
+REPACK = "repack"
 
 
 def overlap_depth(overlap: Optional[bool]) -> Optional[int]:
@@ -69,19 +77,21 @@ def plan_schedule(kinds: Sequence[Sequence[str]], depth: int
                   ) -> List[Tuple[int, int]]:
     """Total order of (bucket, stage) emissions for the given depth.
 
-    ``kinds[b][s]`` is "compute" or "comm". At most ``depth`` buckets
-    are in flight at any point; bucket b is admitted only once bucket
-    b-depth has fully retired. Depth 1 reproduces the strict sequential
-    order; depth 2 produces the classic double buffer (for per-bucket
-    kinds [E, G, D]: E0 G0 E1 D0 G1 E2 D1 ... — bucket b+1's encode
-    hides behind bucket b's gather).
+    ``kinds[b][s]`` is "compute", "comm" or "repack" (repack stages
+    schedule exactly like compute: local work that hides behind an
+    in-flight transfer). At most ``depth`` buckets are in flight at any
+    point; bucket b is admitted only once bucket b-depth has fully
+    retired. Depth 1 reproduces the strict sequential order; depth 2
+    produces the classic double buffer (for per-bucket kinds [E, G, D]:
+    E0 G0 E1 D0 G1 E2 D1 ... — bucket b+1's encode hides behind bucket
+    b's gather).
     """
     if depth < 1:
         raise ValueError(f"pipeline depth must be >= 1, got {depth}")
     n = len(kinds)
     for b, ks in enumerate(kinds):
         for s, kind in enumerate(ks):
-            if kind not in (COMPUTE, COMM):
+            if kind not in (COMPUTE, COMM, REPACK):
                 raise ValueError(
                     f"unknown stage kind {kind!r} at bucket {b} stage {s}")
     order: List[Tuple[int, int]] = []
@@ -93,8 +103,8 @@ def plan_schedule(kinds: Sequence[Sequence[str]], depth: int
             window.append(next_b)
             next_b += 1
         b = window[0]
-        # walk the oldest bucket through its pending computes ...
-        while ptr[b] < len(kinds[b]) and kinds[b][ptr[b]] == COMPUTE:
+        # walk the oldest bucket through its pending local stages ...
+        while ptr[b] < len(kinds[b]) and kinds[b][ptr[b]] != COMM:
             order.append((b, ptr[b]))
             ptr[b] += 1
         # ... and through its next comm issue, hiding younger buckets'
@@ -104,7 +114,7 @@ def plan_schedule(kinds: Sequence[Sequence[str]], depth: int
             ptr[b] += 1
             for b2 in window[1:]:
                 while (ptr[b2] < len(kinds[b2])
-                       and kinds[b2][ptr[b2]] == COMPUTE):
+                       and kinds[b2][ptr[b2]] != COMM):
                     order.append((b2, ptr[b2]))
                     ptr[b2] += 1
         if ptr[b] == len(kinds[b]):

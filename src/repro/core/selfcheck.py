@@ -286,3 +286,108 @@ def overlap_selfcheck(mesh, ratio: float = 0.05, eta: float = 0.3,
             and bitwise_equal(per_overlap[None], per_overlap[True]))
     out["bitwise_all"] = all(out.values())
     return out
+
+
+def repack_selfcheck(mesh, ratio: float = 0.05, eta: float = 0.3,
+                     ks=(9, 4)) -> dict:
+    """Probe the header-aware repack transport invariants on ``mesh``
+    (axes ``("pod", "data")``). Same tiny 2-bucket tree as
+    ``two_level_selfcheck`` (bucket 0 dense, bucket 1 sparse at
+    cols=128). Reports:
+
+    * **repack_bitwise** — on the runtime-k path, ``SyncConfig.repack``
+      on/off x overlap in {None, False, True}, chained across a mid-run
+      live-k switch (``ks[0] -> ks[1]``), all produce BITWISE equal
+      applied params and memory: the in-jit R stage is the identity and
+      only grows the schedule (invariants 10 + 11).
+    * **transport_roundtrip_bitwise** — host-side
+      ``distributed.repack_transport`` (inline and over an
+      ``EmulatedLink`` future) returns the k_max-padded buffer BITWISE
+      unchanged: repack -> link -> repad is invisible to the consumer.
+    * **transport_accounting_exact** — the bytes the transport puts on
+      the wire equal ``encoding.message_nbytes(..., live_k)`` AND the
+      sparse cross-pod term of ``bucketed_message_bytes(...,
+      pod_ks=...)``: realized cross-pod bytes == live-k accounting
+      (invariant 11).
+    * **padded_vs_live_bytes** — the (padded, live) cross-pod byte pair
+      for the probe's sparse bucket, the gap the transport closes.
+    """
+    import dataclasses
+
+    from repro.core import encoding as enc
+    from repro.core import pipeline
+    from repro.core.distributed import repack_transport
+    from repro.kernels.topk_select import mask_live_k
+
+    W = int(np.prod([mesh.shape[a] for a in ("pod", "data")]))
+    n_data = int(mesh.shape["data"])
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(0), (16, 384)),
+            "b": jax.random.normal(jax.random.PRNGKey(1), (40,))}
+    plan = bk.make_plan(tree, cols=128, dense_below=64)
+    gs = jax.tree.map(lambda x: jnp.stack(
+        [x * (1 + 0.1 * i) + 0.01 * i for i in range(W)]), tree)
+    mem0 = tuple(
+        jax.random.normal(jax.random.PRNGKey(9 + b), (W,) + s.shape)
+        * (0.1 if s.kind == "sparse" else 0.0)
+        for b, s in enumerate(plan.buckets))
+
+    def run(cfg, mem_, pod_ks):
+        def sync(m_, g_):
+            upd, new_mem, _ = bucketed_sync_gradients(
+                cfg, plan, jax.tree.map(lambda m: m[0], m_),
+                jax.tree.map(lambda x: x[0], g_), jnp.float32(eta),
+                pod_ks=pod_ks)
+            return upd, jax.tree.map(lambda m: m[None], new_mem)
+
+        wspec = jax.tree.map(lambda _: P(("pod", "data")), mem_)
+        gspec = jax.tree.map(lambda _: P(("pod", "data")), gs)
+        return shard_map(
+            sync, mesh=mesh, in_specs=(wspec, gspec),
+            out_specs=(jax.tree.map(lambda _: P(), tree), wspec))(mem_, gs)
+
+    dyn = SyncConfig(ratio=ratio, strategy="hierarchical",
+                     data_axes=("data",), pod_axis="pod", bucketed=True,
+                     bucket_cols=128, wire="packed",
+                     pod_ratios=(1.0, ks[0] / 128), pod_dynamic=True)
+    outs = {}
+    for rp in (False, True):
+        for ov in (None, False, True):
+            c = dataclasses.replace(dyn, repack=rp, overlap=ov)
+            mem_, applied = mem0, []
+            for k_live in ks:  # chained steps across the live-k switch
+                upd, mem_ = run(c, mem_,
+                                jnp.asarray([1, k_live], jnp.int32))
+                applied.append(jax.tree.map(lambda t, u: t - u, tree, upd))
+            outs[(rp, ov)] = (applied, mem_)
+    ref = outs[(False, None)]
+    repack_bitwise = all(bitwise_equal(ref, v) for v in outs.values())
+
+    # host transport on a real k_max-padded pod summary: bucket 1 (the
+    # sparse one), tail masked to (-0.0, 0) past the live k
+    spec = plan.buckets[1]
+    k_max = dyn.pod_k_max_for_bucket(1, spec.cols, n_data)
+    k_live = int(ks[-1])
+    u = jax.random.normal(jax.random.PRNGKey(3), (spec.rows, spec.cols))
+    _, idx = jax.lax.top_k(jnp.abs(u), k_max)
+    vals = jnp.take_along_axis(u, idx, axis=-1)
+    vals, idx = mask_live_k(vals, idx.astype(jnp.int32), k_live)
+    wspec = enc.WireSpec(spec.rows, spec.cols, k_max)
+    buf = enc.encode(wspec, vals, idx, live_n=k_live)
+    out_inline, nb_inline = repack_transport(wspec, buf)
+    link = pipeline.EmulatedLink(latency_s=0.0)
+    fut, nb_link = repack_transport(wspec, buf, link=link)
+    roundtrip = (bitwise_equal(out_inline, buf)
+                 and bitwise_equal(fut.result(), buf))
+    live_bytes = enc.message_nbytes(
+        spec.rows, spec.cols, k_live, "float32", "packed")
+    lv = bucketed_message_bytes(dyn, plan, by_level=True, n_data=n_data,
+                                pod_ks=[1, k_live])
+    dense_cross = plan.buckets[0].rows * plan.buckets[0].cols * 4
+    acc_ok = (nb_inline == live_bytes and nb_link == live_bytes
+              and lv["cross"] - dense_cross == live_bytes)
+    return {
+        "repack_bitwise": bool(repack_bitwise),
+        "transport_roundtrip_bitwise": bool(roundtrip),
+        "transport_accounting_exact": bool(acc_ok),
+        "padded_vs_live_bytes": [wspec.nbytes, live_bytes],
+    }

@@ -468,6 +468,28 @@ class PodRatioCalibrator:
         return u
 
 
+def _calibrate_pod_ratios(sync_cfg, plan, u_bufs, n_data,
+                          mass_target=None, k_caps=None, byte_budget=None):
+    """One calibration entry for both pod-k sizing modes: a byte budget
+    (argument override, else ``SyncConfig.byte_budget``) water-fills the
+    global cross-pod allowance across buckets via
+    ``core.budget.BudgetController``; otherwise the historical
+    mass-target autotune sizes each bucket independently. Returns
+    per-bucket pod ratios."""
+    budget = (byte_budget if byte_budget is not None
+              else sync_cfg.byte_budget)
+    if budget is not None:
+        from repro.core.budget import BudgetController
+
+        ctl = BudgetController(sync_cfg, plan, n_data, k_caps=k_caps)
+        ks = ctl.allocate(u_bufs, byte_budget=budget)
+        return ctl.ratios_of(ks)
+    from repro.core.distributed import autotune_pod_ratios
+
+    return autotune_pod_ratios(sync_cfg, plan, u_bufs, n_data=n_data,
+                               mass_target=mass_target, k_caps=k_caps)
+
+
 def _maybe_autotune_pod_ratios(model, mesh, tc: TrainConfig, plan, params,
                                batches, calib=None):
     """Calibration pass for the two-level pod sync: when training
@@ -481,8 +503,6 @@ def _maybe_autotune_pod_ratios(model, mesh, tc: TrainConfig, plan, params,
     live refresh loop."""
     import itertools
 
-    from repro.core.distributed import autotune_pod_ratios
-
     if not (tc.pod_autotune and plan is not None
             and tc.sync.strategy == "hierarchical"
             and "pod" in mesh.axis_names
@@ -494,7 +514,7 @@ def _maybe_autotune_pod_ratios(model, mesh, tc: TrainConfig, plan, params,
     n_data = int(mesh.shape["data"])
     calib = calib or PodRatioCalibrator(model, plan, n_data)
     u_bufs = calib.u_bufs(params, first, tc.eta)
-    ratios = autotune_pod_ratios(tc.sync, plan, u_bufs, n_data=n_data)
+    ratios = _calibrate_pod_ratios(tc.sync, plan, u_bufs, n_data)
     tc = dataclasses.replace(
         tc, sync=dataclasses.replace(tc.sync, pod_ratios=ratios)
     )
@@ -585,10 +605,7 @@ def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
     pod_ks = live_ks = k_caps = None
     sched = dict(pod_k_schedule) if pod_k_schedule is not None else None
     if dyn:
-        from repro.core.distributed import (
-            autotune_pod_ratios,
-            bucketed_message_bytes,
-        )
+        from repro.core.distributed import bucketed_message_bytes
 
         n_data = int(mesh.shape["data"])
         k_caps = step.pod_k_max
@@ -632,9 +649,10 @@ def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
                 else 1.0
             )
             u_bufs = calib.u_bufs(params, batch, eta_now, memory=memory)
-            ratios = autotune_pod_ratios(
-                tc.sync, plan, u_bufs, n_data=n_data,
+            ratios = _calibrate_pod_ratios(
+                tc.sync, plan, u_bufs, n_data,
                 mass_target=refresh.mass_target, k_caps=k_caps,
+                byte_budget=refresh.byte_budget,
             )
             live_ks = tuple(
                 int(round(r * s.cols)) if s.kind == "sparse" else 1
@@ -748,6 +766,21 @@ def main():
                          "of bucket cols (default: the n_data*k_row "
                          "support bound) — smaller caps shrink the "
                          "padded gather but bound upward refreshes")
+    ap.add_argument("--byte-budget", type=int, default=None,
+                    help="global cross-pod byte budget per step per "
+                         "worker: the per-bucket pod ks are sized by "
+                         "water-filling this allowance across buckets "
+                         "by marginal mass-per-byte "
+                         "(repro.core.budget.BudgetController) instead "
+                         "of the per-bucket mass-capture target; "
+                         "refreshes re-spend it on the live buffers")
+    ap.add_argument("--repack", action="store_true",
+                    help="header-aware repack transport: grow each "
+                         "bucket's pipeline an explicit repack stage at "
+                         "the pod boundary so cross-pod bytes track the "
+                         "live pod k instead of the padded k_max "
+                         "(bitwise-identical results; see DESIGN.md "
+                         "invariant 11)")
     ap.add_argument("--bucketed", action="store_true",
                     help="flat-buffer bucketed sync (repro.core.buckets)")
     ap.add_argument("--wire", default="unpacked",
@@ -826,6 +859,8 @@ def main():
                                      pod_ratio=args.pod_ratio,
                                      pod_mass_target=args.pod_mass_target,
                                      pod_k_max_ratio=args.pod_k_max_ratio,
+                                     byte_budget=args.byte_budget,
+                                     repack=args.repack,
                                      bucketed=args.bucketed
                                      or args.emit_deltas
                                      or args.ckpt_wire

@@ -58,6 +58,17 @@ OVERLAP = {
               "pod_dynamic_bitwise": True, "probe_bitwise": True},
     "bitwise_identical": True,
 }
+BUDGET = {
+    "transport": {"byte_ratio_realized_vs_accounted": 1.0,
+                  "padded_vs_realized": 7.63,
+                  "roundtrip_bitwise": True},
+    "allocation": {"within_budget": True, "mean_advantage": 1.08,
+                   "final_advantage": 1.10},
+    "smoke": {"repack_bitwise": True,
+              "transport_roundtrip_bitwise": True,
+              "transport_accounting_exact": True,
+              "refresh_within_budget": True, "zero_recompiles": True},
+}
 
 
 def test_identical_payloads_pass():
@@ -67,6 +78,7 @@ def test_identical_payloads_pass():
     assert gate.check_hierarchy(HIER, copy.deepcopy(HIER), 1.15) == []
     assert gate.check_refresh(REFRESH, copy.deepcopy(REFRESH), 1.15) == []
     assert gate.check_overlap(OVERLAP, copy.deepcopy(OVERLAP), 1.15) == []
+    assert gate.check_budget(BUDGET, copy.deepcopy(BUDGET), 1.15) == []
 
 
 def test_refresh_regressions_fail():
@@ -119,6 +131,65 @@ def test_overlap_regressions_fail():
     # ...and anything at/below break-even fails regardless of baseline
     assert any("speedup" in e for e in errs)
     assert any("<= 1.0" in e for e in errs)
+
+
+def test_budget_regressions_fail():
+    # realized bytes drifting above the live-k accounting fails BOTH
+    # against the baseline and against the absolute 1.2x bound
+    fresh = copy.deepcopy(BUDGET)
+    fresh["transport"]["byte_ratio_realized_vs_accounted"] = 1.1
+    errs = gate.check_budget(BUDGET, fresh, 1.15)
+    assert len(errs) == 1 and "regressed" in errs[0]
+    fresh["transport"]["byte_ratio_realized_vs_accounted"] = 1.5
+    errs = gate.check_budget(BUDGET, fresh, 1.15)
+    assert any("acceptance bound" in e for e in errs)
+    # losing the padded-vs-realized byte edge fails
+    fresh2 = copy.deepcopy(BUDGET)
+    fresh2["transport"]["padded_vs_realized"] = 2.0
+    assert any("padded_vs_realized" in e
+               for e in gate.check_budget(BUDGET, fresh2, 1.15))
+    # the water-filling advantage shrinking (or vanishing) fails
+    fresh3 = copy.deepcopy(BUDGET)
+    fresh3["allocation"]["mean_advantage"] = 1.02
+    assert any("mean_advantage" in e
+               for e in gate.check_budget(BUDGET, fresh3, 1.15))
+    fresh3["allocation"]["mean_advantage"] = 0.98
+    # baseline equal to fresh: only the absolute <= 1.0 check fires
+    base3 = copy.deepcopy(BUDGET)
+    base3["allocation"]["mean_advantage"] = 0.98
+    assert any("<= 1.0" in e
+               for e in gate.check_budget(base3, fresh3, 1.15))
+    # every correctness bit is load-bearing
+    for path, flag in [("transport", "roundtrip_bitwise"),
+                       ("allocation", "within_budget"),
+                       ("smoke", "repack_bitwise"),
+                       ("smoke", "transport_roundtrip_bitwise"),
+                       ("smoke", "transport_accounting_exact"),
+                       ("smoke", "refresh_within_budget"),
+                       ("smoke", "zero_recompiles")]:
+        fresh4 = copy.deepcopy(BUDGET)
+        fresh4[path][flag] = False
+        assert any(flag in e
+                   for e in gate.check_budget(BUDGET, fresh4, 1.15)), flag
+    # a tracked key going missing fails
+    fresh5 = copy.deepcopy(BUDGET)
+    del fresh5["transport"]["byte_ratio_realized_vs_accounted"]
+    assert any("missing" in e
+               for e in gate.check_budget(BUDGET, fresh5, 1.15))
+
+
+def test_budget_headline_in_summary(tmp_path):
+    basedir, freshdir = tmp_path / "base", tmp_path / "fresh"
+    basedir.mkdir(), freshdir.mkdir()
+    (basedir / "BENCH_budget.json").write_text(json.dumps(BUDGET))
+    (freshdir / "BENCH_budget.json").write_text(json.dumps(BUDGET))
+    out = tmp_path / "summary.md"
+    with open(out, "w") as fh:
+        gate.write_summary(str(basedir), str(freshdir), [], fh)
+    text = out.read_text()
+    assert "**Budgeted transport:**" in text
+    assert "x1.00 of the live-k accounting" in text
+    assert "x7.63" in text
 
 
 def test_topk_cutover_flag_gated():

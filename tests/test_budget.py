@@ -1,0 +1,192 @@
+"""Global byte-budget controller tests (repro.core.budget).
+
+The controller is the single allocator behind both pod-k sizing modes:
+``mass_target`` must reproduce the historical ``autotune_pod_ratios``
+sizing exactly, and ``byte_budget`` must water-fill a global cross-pod
+byte budget — never overspending, monotone in the budget, preferring
+the bucket with the denser marginal mass, and flooring at k=1 when the
+budget is infeasible.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import buckets as bk
+from repro.core import encoding as enc
+from repro.core.budget import BudgetController, _abs_capture
+from repro.core.distributed import SyncConfig, autotune_pod_ratios
+
+N_DATA = 4
+
+
+def _plan_and_u(seed=0, heavy_bucket=None, cols=128):
+    """The selfcheck tiny tree: bucket 0 dense ('b'), bucket 1 sparse
+    ('w' -> 48 rows x 128 cols). ``heavy_bucket`` scales one bucket's
+    buffer so mass-ordering tests have a known winner."""
+    tree = {"w": jnp.zeros((16, 384)), "b": jnp.zeros((40,))}
+    plan = bk.make_plan(tree, cols=cols, dense_below=64)
+    rng = np.random.default_rng(seed)
+    u_bufs = []
+    for b, spec in enumerate(plan.buckets):
+        u = rng.standard_normal((spec.rows, spec.cols)).astype(np.float32)
+        if heavy_bucket == b:
+            u = u * 100.0
+        u_bufs.append(jnp.asarray(u))
+    return plan, u_bufs
+
+
+def _cfg(**kw):
+    kw.setdefault("ratio", 0.05)
+    kw.setdefault("wire", "packed")
+    return SyncConfig(strategy="hierarchical", bucketed=True,
+                      bucket_cols=128, pod_dynamic=True, **kw)
+
+
+def test_mass_target_reproduces_autotune_sizing():
+    """allocate_mass_target == the historical autotuner formula computed
+    independently here (searchsorted over the support-relative curve,
+    clamped to [k_min, support]) — and ``autotune_pod_ratios`` (which
+    now delegates) emits exactly ``ratios_of`` of that allocation."""
+    cfg = _cfg(k_min=2)
+    plan, u_bufs = _plan_and_u(seed=1)
+    ctl = BudgetController(cfg, plan, N_DATA)
+    curves = ctl.measure(u_bufs)
+    for target in (0.5, 0.9, 0.999):
+        ks = ctl.allocate_mass_target(curves, target)
+        for c, k in zip(curves, ks):
+            if c.kind == "dense":
+                assert k == 1
+                continue
+            k_row = cfg.k_for(c.cols)
+            support = max(1, min(c.cols, N_DATA * k_row))
+            rel = bk.support_relative_capture(u_bufs[c.bucket], support)
+            want = int(np.searchsorted(rel, target, side="left")) + 1
+            want = max(cfg.k_min, min(want, support))
+            assert k == want, (target, c.bucket)
+        assert autotune_pod_ratios(cfg, plan, u_bufs, N_DATA,
+                                   mass_target=target) == ctl.ratios_of(ks)
+
+
+def test_water_filling_never_overspends_and_is_monotone():
+    cfg = _cfg()
+    plan, u_bufs = _plan_and_u(seed=2)
+    ctl = BudgetController(cfg, plan, N_DATA)
+    curves = ctl.measure(u_bufs)
+    floor_ks = tuple(1 for _ in curves)
+    floor = ctl.cross_bytes_of(floor_ks)
+    prev = None
+    for budget in (floor, floor + 200, floor + 1000, floor + 10_000):
+        ks = ctl.allocate_bytes(curves, budget)
+        assert ctl.cross_bytes_of(ks) <= budget
+        if prev is not None:
+            assert all(a >= b for a, b in zip(ks, prev)), (ks, prev)
+        prev = ks
+    # a generous budget saturates every sparse bucket at its cap
+    big = ctl.allocate_bytes(curves, floor + 10 ** 9)
+    for c, k in zip(curves, big):
+        if c.kind == "sparse":
+            assert k == c.k_cap
+
+
+def test_water_filling_infeasible_budget_floors_at_k1():
+    """The codec cannot ship k=0; an impossible budget degrades to the
+    mandatory allocation instead of failing."""
+    cfg = _cfg()
+    plan, u_bufs = _plan_and_u(seed=3)
+    ctl = BudgetController(cfg, plan, N_DATA)
+    curves = ctl.measure(u_bufs)
+    for budget in (0, 1, ctl.cross_bytes_of(tuple(1 for _ in curves)) - 1):
+        ks = ctl.allocate_bytes(curves, budget)
+        assert all(k == 1 for c, k in zip(curves, ks)
+                   if c.kind == "sparse"), (budget, ks)
+
+
+def test_water_filling_prefers_the_heavier_bucket():
+    """Two identically-shaped sparse buckets, one carrying 100x the
+    mass: at a budget too small to saturate both, the heavy bucket must
+    win more slots. (``make_plan`` merges same-dtype sparse leaves into
+    one bucket, so the curves are built directly.)"""
+    from repro.core.budget import BucketCurve
+
+    rng = np.random.default_rng(4)
+    rows, cols, cap = 8, 128, 24
+    curves = []
+    for b, scale in enumerate((100.0, 1.0)):
+        u = jnp.asarray(
+            rng.standard_normal((rows, cols)).astype(np.float32) * scale)
+        curves.append(BucketCurve(
+            bucket=b, kind="sparse", rows=rows, cols=cols, support=cap,
+            k_cap=cap, abs_capture=_abs_capture(u, cap),
+            rel_capture=bk.support_relative_capture(u, cap),
+            min_nbytes=enc.message_nbytes(rows, cols, 1, "float32",
+                                          "packed"),
+        ))
+    ctl = BudgetController(_cfg(), bk.make_plan(
+        {"x": jnp.zeros((8, 256))}, cols=cols, dense_below=1), N_DATA)
+    floor = sum(c.min_nbytes for c in curves)
+    span = sum(enc.message_nbytes(rows, cols, cap, "float32", "packed")
+               for _ in curves) - floor
+    ks = ctl.allocate_bytes(curves, floor + span // 3)
+    assert ks[0] > ks[1], ks
+
+
+def test_k_caps_clamp_both_modes():
+    cfg = _cfg()
+    plan, u_bufs = _plan_and_u(seed=5)
+    caps = tuple(3 for _ in plan.buckets)
+    ctl = BudgetController(cfg, plan, N_DATA, k_caps=caps)
+    curves = ctl.measure(u_bufs)
+    assert all(c.k_cap <= 3 for c in curves if c.kind == "sparse")
+    ks_mass = ctl.allocate_mass_target(curves, 0.9999)
+    ks_byte = ctl.allocate_bytes(curves, 10 ** 9)
+    for c, km, kb in zip(curves, ks_mass, ks_byte):
+        if c.kind == "sparse":
+            assert km <= 3 and kb == 3
+
+
+def test_allocate_routes_on_cfg_byte_budget():
+    """``allocate`` prefers the byte budget (argument, else config) over
+    the mass target, and the emitted ratios round-trip to the ks."""
+    plan, u_bufs = _plan_and_u(seed=6)
+    floor_cfg = _cfg()
+    floor = BudgetController(floor_cfg, plan, N_DATA).cross_bytes_of(
+        tuple(1 for _ in plan.buckets))
+    cfg = _cfg(byte_budget=floor)
+    ctl = BudgetController(cfg, plan, N_DATA)
+    ks = ctl.allocate(u_bufs)  # cfg.byte_budget: exactly the floor
+    assert all(k == 1 for s, k in zip(plan.buckets, ks)
+               if s.kind == "sparse")
+    ks2 = ctl.allocate(u_bufs, byte_budget=floor + 10 ** 9)
+    assert any(k > 1 for s, k in zip(plan.buckets, ks2)
+               if s.kind == "sparse")
+    # ratios round-trip through the runtime's int(round(r * cols))
+    for spec, k, r in zip(plan.buckets, ks2, ctl.ratios_of(ks2)):
+        if spec.kind == "sparse":
+            assert int(round(r * spec.cols)) == k
+
+
+def test_cross_bytes_match_codec_accounting():
+    cfg = _cfg()
+    plan, u_bufs = _plan_and_u(seed=7)
+    ctl = BudgetController(cfg, plan, N_DATA)
+    ks = ctl.allocate(u_bufs, byte_budget=10 ** 6)
+    want = 0
+    for spec, k in zip(plan.buckets, ks):
+        if spec.kind == "dense":
+            want += spec.rows * spec.cols * 4
+        else:
+            want += enc.message_nbytes(spec.rows, spec.cols, int(k),
+                                       "float32", cfg.wire)
+    assert ctl.cross_bytes_of(ks) == want
+
+
+def test_abs_capture_is_concave_and_monotone():
+    """Water-filling's optimality rests on concavity: the marginal gain
+    of each additional slot is non-increasing."""
+    u = jnp.asarray(np.random.default_rng(8).standard_normal(
+        (6, 64)).astype(np.float32))
+    cap = np.asarray(_abs_capture(u, 32))
+    gains = np.diff(np.concatenate([[0.0], cap]))
+    assert np.all(gains >= -1e-6)
+    assert np.all(np.diff(gains) <= 1e-4)

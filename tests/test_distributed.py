@@ -21,10 +21,13 @@ SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 # experimental.shard_map whose partial-auto mode crashes XLA's SPMD
 # partitioner (Check failed: sharding.IsManualSubgroup()) whenever the
 # auto "model" axis has size > 1. Single-axis and model=1 meshes work.
+# strict: on a fixed jax the condition is False and the mark inert; on
+# legacy jax an unexpected PASS must surface as a failure (XPASS), not
+# rot silently after a container upgrade.
 legacy_partial_auto = pytest.mark.xfail(
     not hasattr(jax, "shard_map"),
     reason="legacy shard_map partial-auto + sharded model axis crashes XLA",
-    strict=False,
+    strict=True,
 )
 
 

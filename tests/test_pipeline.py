@@ -25,6 +25,7 @@ import pytest
 from repro.core.pipeline import (
     COMM,
     COMPUTE,
+    REPACK,
     EmulatedLink,
     overlap_depth,
     plan_schedule,
@@ -37,9 +38,10 @@ from tests._hypothesis_compat import given, settings, st
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
-E, G = COMPUTE, COMM
+E, G, R = COMPUTE, COMM, REPACK
 FLAT = (E, G, E)          # select+encode / gather / decode+apply
 HIER = (E, G, E, G, E)    # + pod re-select and the cross-pod gather
+HIER_R = (E, G, E, R, G, E)  # + boundary repack before the cross-pod hop
 DENSE = (G,)              # one all-reduce
 
 
@@ -87,6 +89,46 @@ def test_planner_always_legal(n, depth, mix):
     # depth >= n can never beat the full-width schedule; depth 1 is
     # exactly sequential
     assert plan_schedule(kinds, 1) == _sequential(kinds)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(min_value=1, max_value=6),
+       depth=st.integers(min_value=1, max_value=4),
+       mix=st.integers(min_value=0, max_value=3))
+def test_planner_legal_with_repack_chains(n, depth, mix):
+    """The 6-stage repack chain (E, G, E, R, G, E) mixes with every
+    other bucket shape at every depth; REPACK schedules like a local
+    stage (the planner only yields at COMM issues), so the plan stays
+    legal and depth 1 stays exactly sequential."""
+    shapes = [HIER_R, FLAT, HIER, DENSE]
+    kinds = [shapes[(b + mix) % 4] for b in range(n)]
+    order = plan_schedule(kinds, depth)
+    validate_schedule(order, kinds, depth)
+    assert plan_schedule(kinds, 1) == _sequential(kinds)
+    # the repack stage is never left dangling across a bucket's own
+    # cross-pod gather: within each bucket, R immediately precedes the
+    # second COMM in program order (per-bucket order is monotone)
+    pos = {bs: i for i, bs in enumerate(order)}
+    for b, ks in enumerate(kinds):
+        if ks is HIER_R:
+            assert pos[(b, 3)] < pos[(b, 4)]
+
+
+def test_repack_stage_transparent_to_overlap_structure():
+    """Inserting the R stage must not perturb the overlap structure:
+    dropping every (b, 3) from the depth-2 repack-chain schedule and
+    renumbering the later stages yields EXACTLY the plain hierarchical
+    schedule, and each R lands immediately before its bucket's cross-pod
+    gather issue (repack runs boundary-side, just in time for the hop)."""
+    for depth in (1, 2, 3):
+        order = plan_schedule([HIER_R] * 3, depth)
+        validate_schedule(order, [HIER_R] * 3, depth)
+        squeezed = [(b, s if s < 3 else s - 1)
+                    for b, s in order if s != 3]
+        assert squeezed == plan_schedule([HIER] * 3, depth), depth
+        pos = {bs: i for i, bs in enumerate(order)}
+        for b in range(3):
+            assert pos[(b, 4)] == pos[(b, 3)] + 1, (depth, order)
 
 
 def test_validate_schedule_rejects_violations():
@@ -248,6 +290,31 @@ def test_overlap_bitwise_identity_per_wire(wire):
     if wire not in _SUBPROCESS_CACHE:
         _SUBPROCESS_CACHE[wire] = _run_subprocess(body.format(wire=wire))
     assert _SUBPROCESS_CACHE[wire]["bitwise_all"], _SUBPROCESS_CACHE[wire]
+
+
+@pytest.mark.slow
+def test_repack_bitwise_identity_and_transport():
+    """``SyncConfig.repack`` on a real 2-pod mesh: the in-jit R stage is
+    bitwise inert across overlap modes and a live-k switch, the host
+    ``repack_transport`` round-trips the padded buffer bitwise (inline
+    and over an ``EmulatedLink``), and its realized bytes equal the
+    live-k accounting exactly (``repro.core.selfcheck.repack_selfcheck``)."""
+    key = "repack_selfcheck"
+    body = """
+        from repro.core.selfcheck import repack_selfcheck
+        from repro.utils.compat import make_mesh
+
+        rec = repack_selfcheck(make_mesh((2, 4), ("pod", "data")))
+        print(json.dumps(rec))
+        """
+    if key not in _SUBPROCESS_CACHE:
+        _SUBPROCESS_CACHE[key] = _run_subprocess(body)
+    rec = _SUBPROCESS_CACHE[key]
+    assert rec["repack_bitwise"], rec
+    assert rec["transport_roundtrip_bitwise"], rec
+    assert rec["transport_accounting_exact"], rec
+    padded, live = rec["padded_vs_live_bytes"]
+    assert live < padded, rec
 
 
 def _run_subprocess(body: str) -> dict:

@@ -109,6 +109,93 @@ def test_dense_kind_roundtrip():
     np.testing.assert_array_equal(np.asarray(v2), np.asarray(vals))
 
 
+# -- header-aware repack transport --------------------------------------------
+
+
+def _padded_message(rows, cols, k_max, live_n, value_dtype, seed=0):
+    """A contract-ordered ``k_max``-padded message: per-row top-``k_max``
+    of a random buffer with the tail past ``live_n`` masked to the
+    (-0.0, 0) identity — exactly what the dynamic pod stage ships."""
+    from repro.kernels.topk_select import mask_live_k
+
+    u = jax.random.normal(jax.random.PRNGKey(seed), (rows, cols))
+    _, idx = jax.lax.top_k(jnp.abs(u), k_max)
+    vals = jnp.take_along_axis(u, idx, axis=-1).astype(jnp.dtype(value_dtype))
+    vals, idx = mask_live_k(vals, idx.astype(jnp.int32), live_n)
+    spec = enc.WireSpec(rows, cols, k_max, value_dtype)
+    return spec, enc.encode(spec, vals, idx, live_n=live_n)
+
+
+def test_decode_raises_on_corrupt_live_n_header():
+    """A header claiming more live slots than the message lays out is
+    corruption (a decoder honoring it would read past the value
+    section) — both ``decode`` and ``live_n_of`` must refuse it."""
+    spec = enc.WireSpec(3, 100, 5, "float32")
+    vals, idx = _pairs(3, 100, 5, "float32")
+    buf = enc.encode(spec, vals, idx, live_n=2)
+    bad = buf.at[enc.LIVE_N_WORD].set(spec.n_sel + 1)
+    with pytest.raises(ValueError, match="live_n"):
+        enc.decode(spec, bad)
+    with pytest.raises(ValueError, match="live_n"):
+        enc.live_n_of(bad)
+    # the uncorrupted message still decodes and reports its live count
+    enc.decode(spec, buf)
+    assert enc.live_n_of(buf) == 2
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    rows=st.integers(min_value=1, max_value=6),
+    # <= 5 elements: the no-hypothesis fallback sweep cycles ALL of them,
+    # so every must-cover shape (non-pow2, pow2, cols=1, tiny) runs
+    cols=st.sampled_from([100, 64, 1, 700, 5]),
+    live_mode=st.sampled_from(["zero", "one", "interior", "full"]),
+    value_dtype=st.sampled_from(["float32", "bfloat16"]),
+)
+def test_repack_roundtrip_property(rows, cols, live_mode, value_dtype):
+    """repack/repad round the padded buffer BITWISE for every live_n
+    edge (0, 1, interior, k_max), non-pow2 cols and both value tiers;
+    the repacked message decodes to exactly the live prefix of the
+    padded decode."""
+    k_max = max(1, (cols + 1) // 2)
+    live = {
+        "zero": 0,
+        "one": min(1, k_max),
+        "interior": max(1, k_max // 2),
+        "full": k_max,
+    }[live_mode]
+    spec, buf = _padded_message(
+        rows, cols, k_max, live, value_dtype, seed=rows * cols + live
+    )
+    # live_n=0 must be passed explicitly: the header stamps 0, which the
+    # wire convention reads as "all slots live" (auto-detect no-ops)
+    small_spec, small_buf = enc.repack(spec, buf, live_n=live)
+    if 0 < live < k_max:
+        # header auto-detection agrees with the explicit argument
+        auto_spec, auto_buf = enc.repack(spec, buf)
+        assert auto_spec == small_spec
+        assert np.array_equal(np.asarray(auto_buf), np.asarray(small_buf))
+    # the wire shrinks to the live payload (k=max(1, live)), never grows
+    assert small_spec.k == (max(1, live) if live < k_max else k_max)
+    assert small_spec.nbytes <= spec.nbytes
+    # repad restores the padded buffer bitwise (invariant 10's currency)
+    repadded = enc.repad(spec, small_spec, small_buf)
+    assert np.array_equal(np.asarray(repadded), np.asarray(buf))
+    # decode(repack(buf)) == the live prefix of decode(buf), bitwise
+    v_small, i_small = enc.decode(small_spec, small_buf)
+    v_pad, i_pad = enc.decode(spec, buf)
+    n = small_spec.k
+    assert np.array_equal(
+        np.asarray(v_small).view(np.uint8),
+        np.asarray(v_pad[:, :n]).view(np.uint8),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(i_small), np.asarray(i_pad[:, :n])
+    )
+    # live_n survives the round trip: repack stamps the small header
+    assert enc.live_n_of(repadded) == enc.live_n_of(buf)
+
+
 # -- accounting == what the codec actually emits ------------------------------
 
 
