@@ -1,7 +1,8 @@
 """Bench regression gate: fresh BENCH_*.json vs committed baselines.
 
 CI stashes the committed baselines, re-runs ``benchmarks/run.py
-kernel_topk wire_codec fanout hierarchy refresh overlap budget`` (which
+kernel_topk wire_codec fanout hierarchy refresh overlap budget local``
+(which
 overwrite the repo-root ``BENCH_*.json``), then runs this checker. Alongside the
 pass/fail verdict it emits a markdown comparison table (baseline vs
 fresh per tracked metric) to ``$GITHUB_STEP_SUMMARY`` and to
@@ -263,6 +264,45 @@ def check_budget(base: dict, fresh: dict, max_slowdown: float,
     return errs
 
 
+LOCAL_CONSERVATION_BOUND = 1e-5  # quantized mass conservation, float slack
+
+
+def check_local(base: dict, fresh: dict, max_slowdown: float,
+                kernel_retention: float = 0.5) -> List[str]:
+    """Qsparse-local-SGD (BENCH_local.json): the amortized cross-worker
+    bytes/step must keep scaling exactly 1/H with the quantized wire's
+    compression edge intact, and every correctness bit must hold — the
+    H=1 accumulator path bitwise-identical to the per-step sync, packed
+    == unpacked under quantization, realized == accounted bytes, every
+    H-sweep smoke run converging with zero steady-state recompiles.
+    Quantized mass conservation is gated at an absolute float bound."""
+    ac_b, ac_f = base.get("accounting", {}), fresh.get("accounting", {})
+    errs = _flag_off(ac_f, ac_b, "scaling_exact_one_over_h",
+                     "local[accounting]")
+    errs += _ratio_regressed(ac_f, ac_b, "quant_value_compression",
+                             "local[accounting]")
+    if "quant_value_compression" in ac_f and \
+            ac_f["quant_value_compression"] <= 1.0:
+        errs.append(
+            f"local[accounting]: quant_value_compression "
+            f"{ac_f['quant_value_compression']:.3f} <= 1.0 (the QSGD "
+            "wire tier no longer beats the exact f32 value section)")
+    smoke_b, smoke_f = base.get("smoke", {}), fresh.get("smoke", {})
+    for key in ("h1_accum_bitwise", "quant_bit_identical",
+                "quant_accounting_exact", "amortized_ratio_exact",
+                "bytes_scaling_exact", "all_converge",
+                "zero_recompiles"):
+        errs += _flag_off(smoke_f, smoke_b, key, "local[smoke]")
+    key = "quant_conservation_max_err"
+    errs += _missing(smoke_f, smoke_b, key, "local[smoke]")
+    if key in smoke_f and smoke_f[key] > LOCAL_CONSERVATION_BOUND:
+        errs.append(
+            f"local[smoke]: {key} {smoke_f[key]:.2e} exceeds the "
+            f"{LOCAL_CONSERVATION_BOUND:.0e} bound (memory no longer "
+            "absorbs the quantization error exactly)")
+    return errs
+
+
 CHECKS = {
     "BENCH_topk.json": check_topk,
     "BENCH_wire.json": check_wire,
@@ -271,6 +311,7 @@ CHECKS = {
     "BENCH_refresh.json": check_refresh,
     "BENCH_overlap.json": check_overlap,
     "BENCH_budget.json": check_budget,
+    "BENCH_local.json": check_local,
 }
 
 
@@ -379,6 +420,25 @@ def write_summary(baseline_dir: str, fresh_dir: str, errors: List[str],
                 f"x{tr.get('padded_vs_realized', 0):.2f}; water-filled "
                 f"budget captures x{al.get('mean_advantage', 0):.3f} the "
                 f"mass-per-byte of a frozen static split\n\n")
+    lpath = os.path.join(fresh_dir, "BENCH_local.json")
+    if os.path.exists(lpath):
+        payload, errs = _load_payload(lpath, "fresh", "BENCH_local.json")
+        ac = {} if errs else payload.get("accounting", {})
+        runs = {} if errs else payload.get("smoke", {}).get("runs", {})
+        amort = ac.get("amortized_bytes_per_step", {})
+        if "1" in amort and "8" in amort:
+            comp = ac.get("quant_value_compression", 0)
+            conv = ""
+            if "1" in runs and "8" in runs:
+                conv = (f"; smoke losses H=1 "
+                        f"{runs['1'].get('final_loss', 0):.2f} / H=8 "
+                        f"{runs['8'].get('final_loss', 0):.2f} from "
+                        f"{runs['1'].get('init_loss', 0):.2f}")
+            fh.write(
+                f"**Qsparse-local-SGD:** amortized cross-worker bytes/"
+                f"step {amort['1']:.0f}B at H=1 -> {amort['8']:.0f}B at "
+                f"H=8 (exact 1/H), QSGD wire x{comp:.2f} smaller than "
+                f"the exact f32 tier{conv}\n\n")
     for fname in CHECKS:
         fpath = os.path.join(fresh_dir, fname)
         if not os.path.exists(fpath):

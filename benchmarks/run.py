@@ -1413,6 +1413,176 @@ def overlap(full: bool = False):
     return payload
 
 
+def local(full: bool = False):
+    """Qsparse-local-SGD: H local steps x s-level quantization x one
+    shared error memory behind the grouped SyncConfig API.
+
+    (a) accounting: the amortized cross-worker bytes/step of the
+    quantized packed wire scale EXACTLY 1/H, and the quantized value
+    section beats the exact f32 tier per message. (b) an 8-device
+    2-pod subprocess: ``repro.core.selfcheck.local_quant_selfcheck``
+    (H=1 accumulator path bitwise-identical to the per-step sync on
+    all three strategies, exact quantized mass conservation, packed ==
+    unpacked bitwise, realized == accounted bytes, exact 1/H
+    amortization) plus an rwkv6-3b smoke H-sweep (H in {1, 2, 4, 8},
+    quant=15): every run must improve on the init loss with zero
+    steady-state recompiles while the accounted bytes/step drop 1/H.
+    Writes BENCH_local.json."""
+    import subprocess
+    import textwrap
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import buckets as bk
+    from repro.core import theory
+    from repro.core.distributed import (
+        SyncConfig,
+        WireConfig,
+        amortized_bytes_per_step,
+        bucketed_message_bytes,
+    )
+    from repro.core.encoding import dense_bits
+
+    # -- (a) amortized byte accounting --------------------------------------
+    cols, ratio, s = 512, 0.02, 15
+    plan = bk.make_plan(
+        {"w": jax.ShapeDtypeStruct((64 * cols,), jnp.float32)},
+        cols=cols, dense_below=cols,
+    )
+    d = sum(sp.rows * sp.cols for sp in plan.buckets)
+    exact = SyncConfig(ratio=ratio, bucketed=True, bucket_cols=cols,
+                       wire=WireConfig(wire="packed"))
+    quant = exact.with_wire(quant=s)
+    exact_b = bucketed_message_bytes(exact, plan)
+    quant_b = bucketed_message_bytes(quant, plan)
+    hs = (1, 2, 4, 8)
+    amortized = {h: amortized_bytes_per_step(
+        SyncConfig.preset("qsparse_local", ratio=ratio, bucket_cols=cols,
+                          local_steps=h), plan) for h in hs}
+    scaling_exact = all(amortized[h] == quant_b / h for h in hs)
+    k = exact.k_for(cols)
+    accounting = {
+        "d": d, "k_per_row": k, "quant_levels": s,
+        "exact_bytes_per_sync": exact_b,
+        "quant_bytes_per_sync": quant_b,
+        "quant_value_compression": exact_b / quant_b,
+        "dense_bytes": dense_bits(d) / 8,
+        "amortized_bytes_per_step": {str(h): amortized[h] for h in hs},
+        "scaling_exact_one_over_h": scaling_exact,
+        "composed_contraction": theory.composed_contraction(cols, k, s),
+        "residual_factors": {str(h): theory.local_steps_residual_factor(h)
+                             for h in hs},
+    }
+    _emit("local_accounting", 0.0,
+          f"quant_compression={exact_b / quant_b:.2f};"
+          f"amortized_H8={amortized[8]:.0f}B;"
+          f"scaling_exact={scaling_exact}")
+
+    # -- (b) 2-pod selfcheck + rwkv6-3b H-sweep smoke -----------------------
+    steps = 48 if full else 24
+    script = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys, json
+        sys.path.insert(0, {src!r})
+        import jax, jax.numpy as jnp
+        from repro.configs import MESHES, get_smoke_config
+        from repro.core import buckets as bk
+        from repro.core.distributed import (SyncConfig,
+                                            amortized_bytes_per_step)
+        from repro.core.selfcheck import local_quant_selfcheck
+        from repro.data import token_batches
+        from repro.data.pipeline import ShardedBatcher, take
+        from repro.launch.mesh import mesh_from_config
+        from repro.launch.train import TrainConfig, train
+        from repro.models import build_model
+
+        STEPS = {steps}
+        mesh = mesh_from_config(MESHES["smoke_2pod"])
+        rec = local_quant_selfcheck(mesh)
+
+        cfg = get_smoke_config("rwkv6-3b")
+        model = build_model(cfg)
+        plan = bk.make_plan(model.param_shapes())
+        batch_list = list(take(iter(ShardedBatcher(
+            mesh, token_batches(cfg.vocab_size, 8, 32, seed=9),
+            batch_axes=("pod", "data"), prefetch=0)), STEPS))
+        runs = {{}}
+        for h in (1, 2, 4, 8):
+            sync = SyncConfig.preset("qsparse_local", ratio=0.02,
+                                     local_steps=h)
+            diag = {{}}
+            tc = TrainConfig(optimizer="memsgd", eta=0.1, sync=sync)
+            *_, hist = train(
+                model, mesh, tc, iter(batch_list), n_steps=STEPS,
+                log_every=1, rng=jax.random.PRNGKey(0),
+                diagnostics=diag)
+            runs[str(h)] = {{
+                "init_loss": hist[0][1],
+                "final_loss": hist[-1][1],
+                "bytes_per_step": amortized_bytes_per_step(sync, plan),
+                "steady_state_recompiles":
+                    diag["steady_state_recompiles"],
+            }}
+        rec.update({{"runs": runs}})
+        print(json.dumps(rec))
+        """
+    ).format(src=os.path.join(_ROOT, "src"), steps=steps)
+    t0 = time.time()
+    out = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        timeout=3600,
+    )
+    assert out.returncode == 0, out.stderr[-4000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    wall_us = (time.time() - t0) * 1e6
+    runs = rec["runs"]
+    b1 = runs["1"]["bytes_per_step"]
+    smoke = {
+        "plan": "rwkv6-3b-smoke", "mesh": "smoke_2pod", "steps": steps,
+        "quant_levels": s,
+        "h1_accum_bitwise": rec["h1_accum_bitwise"],
+        "quant_conservation_max_err": rec["quant_conservation_max_err"],
+        "quant_bit_identical": rec["quant_bit_identical"],
+        "quant_accounting_exact": rec["quant_accounting_exact"],
+        "amortized_ratio_exact": rec["amortized_ratio_exact"],
+        "runs": runs,
+        "bytes_scaling_exact": all(
+            runs[str(h)]["bytes_per_step"] == b1 / h for h in hs),
+        "all_converge": all(
+            runs[str(h)]["final_loss"] < runs[str(h)]["init_loss"]
+            for h in hs),
+        "zero_recompiles": all(
+            runs[str(h)]["steady_state_recompiles"] == 0 for h in hs),
+    }
+    _emit("local_smoke", wall_us / max(1, 4 * steps),
+          f"h1_bitwise={rec['h1_accum_bitwise']};"
+          f"bytes/step H1={b1:.0f} H8={runs['8']['bytes_per_step']:.0f};"
+          f"all_converge={smoke['all_converge']};"
+          f"zero_recompiles={smoke['zero_recompiles']}")
+
+    payload = {"accounting": accounting, "smoke": smoke}
+    _save("local", payload)
+    with open(os.path.join(_ROOT, "BENCH_local.json"), "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    # acceptance: H=1 accumulator path bitwise, quantized conservation
+    # exact, amortized bytes scale exactly 1/H (accounting AND the real
+    # rwkv6-3b plan), every H-sweep run converges with zero recompiles
+    assert accounting["scaling_exact_one_over_h"], accounting
+    assert accounting["quant_value_compression"] > 1.0, accounting
+    assert smoke["h1_accum_bitwise"], smoke
+    assert smoke["quant_conservation_max_err"] < 1e-5, smoke
+    assert smoke["quant_bit_identical"], smoke
+    assert smoke["quant_accounting_exact"], smoke
+    assert smoke["amortized_ratio_exact"], smoke
+    assert smoke["bytes_scaling_exact"], smoke
+    assert smoke["all_converge"], smoke
+    assert smoke["zero_recompiles"], smoke
+    return payload
+
+
 BENCHES = {
     "fig2_convergence": fig2_convergence,
     "fig3_qsgd": fig3_qsgd,
@@ -1425,6 +1595,7 @@ BENCHES = {
     "refresh": refresh,
     "overlap": overlap,
     "budget": budget,
+    "local": local,
     "remark23_ultra": remark23_ultra,
 }
 

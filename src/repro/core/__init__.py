@@ -30,14 +30,20 @@ from repro.core.memsgd import (
 )
 from repro.core.buckets import (
     BucketPlan,
+    accumulate_local,
     bucket_memory_step,
     init_bucket_memory,
+    init_local_accum,
     make_plan,
     pack,
     unpack,
 )
 from repro.core.distributed import (
+    PodConfig,
     SyncConfig,
+    TransportConfig,
+    WireConfig,
+    amortized_bytes_per_step,
     bucketed_message_bytes,
     bucketed_sync_gradients,
     message_bytes,
@@ -63,12 +69,18 @@ __all__ = [
     "leaf_compressor_from_ratio",
     "constant_eta",
     "BucketPlan",
+    "accumulate_local",
     "bucket_memory_step",
     "init_bucket_memory",
+    "init_local_accum",
     "make_plan",
     "pack",
     "unpack",
+    "PodConfig",
     "SyncConfig",
+    "TransportConfig",
+    "WireConfig",
+    "amortized_bytes_per_step",
     "bucketed_message_bytes",
     "bucketed_sync_gradients",
     "message_bytes",

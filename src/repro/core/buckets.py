@@ -222,6 +222,28 @@ def init_bucket_memory(plan: BucketPlan, dtype=jnp.float32) -> Tuple[Array, ...]
     )
 
 
+def init_local_accum(plan: BucketPlan, dtype=jnp.float32) -> Tuple[Array, ...]:
+    """Zero local-step accumulator, one buffer per bucket.
+
+    Qsparse-local-SGD (``SyncConfig(local_steps=H)``): between syncs each
+    worker folds its per-step scaled gradients into this bucket-space
+    accumulator, acc = sum_h eta_h * g_h; the sync round then compresses
+    u = m + acc and resets acc to zero. Same shapes/dtype as the
+    error-feedback memory, so it shares the memory's sharding."""
+    return tuple(
+        jnp.zeros(spec.shape, dtype=dtype) for spec in plan.buckets
+    )
+
+
+def accumulate_local(
+    plan: BucketPlan, acc_bufs: Sequence[Array], grad_tree, eta
+) -> Tuple[Array, ...]:
+    """One uncommunicated local step: acc += eta * pack(g) per bucket."""
+    g_bufs = pack(plan, grad_tree, dtype=jnp.float32)
+    e = jnp.asarray(eta, jnp.float32)
+    return tuple(a + e * g for a, g in zip(acc_bufs, g_bufs))
+
+
 def bucket_memory_step(
     plan: BucketPlan,
     memory_bufs: Sequence[Array],

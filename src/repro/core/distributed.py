@@ -49,38 +49,35 @@ Sync strategies
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+import warnings
+from typing import Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import pipeline
-from repro.core.pipeline import COMM, COMPUTE, REPACK
+from repro.core.pipeline import COMM, COMPUTE, QUANT, REPACK
 from repro.utils import compat
 
 Array = jax.Array
 
 
 @dataclasses.dataclass(frozen=True)
-class SyncConfig:
-    """How gradients are synchronized across the data-parallel axes."""
+class PodConfig:
+    """The two-level (pod-aware) half of a ``SyncConfig``."""
 
-    strategy: str = "sparse_allgather"  # | "hierarchical" | "dense"
-    ratio: float = 0.001  # per-row k_row = max(k_min, ratio * row_len)
-    k_min: int = 1
-    k_max: Optional[int] = None
     # hierarchical only: re-compression ratio for the intra-pod mean
-    pod_ratio: Optional[float] = None
+    ratio: Optional[float] = None
     # hierarchical + bucketed: per-bucket pod re-compression ratios
     # (index-aligned with BucketPlan.buckets), overriding the global
-    # ``pod_ratio`` bucket by bucket. Produced by ``autotune_pod_ratios``
+    # ``ratio`` bucket by bucket. Produced by ``autotune_pod_ratios``
     # from each bucket's realized mass capture so attention-sized and
     # bias-sized buckets don't share one k.
-    pod_ratios: Optional[Tuple[float, ...]] = None
+    ratios: Optional[Tuple[float, ...]] = None
     # mass-capture target the autotuner sizes each bucket's pod k for:
     # the smallest k whose top-k captures this fraction of the bucket's
     # per-row squared mass (clamped to the pod mean's support bound).
-    pod_mass_target: float = 0.9
+    mass_target: float = 0.9
     # Runtime pod k (bucketed hierarchical only): shape every buffer,
     # wire message and all-gather at the static per-bucket
     # ``pod_k_max_for_bucket`` while the LIVE k arrives as a traced
@@ -90,12 +87,50 @@ class SyncConfig:
     # count rides in the packed header (``encoding.LIVE_N_WORD``). This is what
     # lets ``autotune_pod_ratios`` re-calibrate mid-run with ZERO
     # recompiles (see launch.train ``--pod-refresh-every``).
-    pod_dynamic: bool = False
+    dynamic: bool = False
     # optional cap (fraction of cols) on the static padded pod k —
     # bounds the gathered buffer below the full n_data*k_row support
     # bound at the cost of clamping how far a refresh can raise k.
-    pod_k_max_ratio: Optional[float] = None
-    # Header-aware repack transport (bucketed hierarchical + pod_dynamic):
+    k_max_ratio: Optional[float] = None
+    # the mesh axis pods are laid out over (set on multi-pod meshes)
+    axis: Optional[str] = None
+
+    def __post_init__(self):
+        if self.ratios is not None and not isinstance(self.ratios, tuple):
+            object.__setattr__(self, "ratios", tuple(self.ratios))
+
+
+@dataclasses.dataclass(frozen=True)
+class WireConfig:
+    """What one sync message looks like on the wire."""
+
+    # Wire format for the all-gather (repro.core.encoding):
+    #  * "unpacked": separate (value_dtype values, int32 indices) arrays —
+    #    k * (value_bits + 32) bits per row.
+    #  * "packed": one uint32 buffer per leaf/bucket with bf16/f32 values
+    #    and ceil(log2 cols)-bit row-local indices — k * (value_bits +
+    #    ceil(log2 cols)) bits per row plus header/alignment slack. The
+    #    decode + scatter-add runs shard-locally after the gather; results
+    #    are bit-identical to the unpacked path. NB: on model-sharded
+    #    leaves the encode's (rows, k) reshape can force GSPMD gathers —
+    #    the bucketed path (already model-axis-free) is the primary user.
+    wire: str = "unpacked"
+    value_dtype: str = "float32"
+    # QSGD-style stochastic quantization of the selected values to
+    # ``quant`` levels (Qsparse-local-SGD's Q step): every sync stage
+    # quantizes BEFORE its encode, the sender's own contribution uses
+    # the DEQUANTIZED values so the error-feedback memory absorbs the
+    # quantization error, and the packed wire ships
+    # ``1 + ceil(log2(quant+1))``-bit codes plus one f32 row norm (see
+    # ``encoding.WireSpec(quant=...)``). ``None`` = exact values.
+    quant: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class TransportConfig:
+    """How sync messages move and are budgeted across the slow links."""
+
+    # Header-aware repack transport (bucketed hierarchical + pod dynamic):
     # grow each bucket's stage chain an explicit R stage between the pod
     # re-select/encode and the cross-pod gather — the point where a
     # header-aware transport compacts the k_max-padded summary down to
@@ -113,9 +148,90 @@ class SyncConfig:
     # water-fills this budget across buckets by marginal
     # mass-per-byte. ``None`` keeps the mass-target sizing.
     byte_budget: Optional[int] = None
+    # Software-pipelined bucket schedule (repro.core.pipeline):
+    #  * None  — legacy bucket-after-bucket emission (no barriers).
+    #  * False — strict sequential schedule, pinned with barriers
+    #            (depth 1: the honest overlap-off baseline).
+    #  * True  — double buffer (depth 2): bucket b's all-gather +
+    #            decode overlaps bucket b+1's top-k select + encode.
+    # All three modes apply BITWISE-identical params and memory: the
+    # pipeline only reorders stage emission and adds
+    # ``optimization_barrier`` edges, never a value-changing op.
+    overlap: Optional[bool] = None
+
+
+# legacy flat SyncConfig keyword -> (grouped field, name inside the group)
+_FLAT_TO_GROUP = {
+    "pod_ratio": ("pod", "ratio"),
+    "pod_ratios": ("pod", "ratios"),
+    "pod_mass_target": ("pod", "mass_target"),
+    "pod_dynamic": ("pod", "dynamic"),
+    "pod_k_max_ratio": ("pod", "k_max_ratio"),
+    "pod_axis": ("pod", "axis"),
+    "wire": ("wire_cfg", "wire"),
+    "value_dtype": ("wire_cfg", "value_dtype"),
+    "quant": ("wire_cfg", "quant"),
+    "repack": ("transport", "repack"),
+    "byte_budget": ("transport", "byte_budget"),
+    "overlap": ("transport", "overlap"),
+}
+
+# known-good flag bundles (see SyncConfig.preset)
+_PRESETS = {
+    # vanilla data-parallel all-reduce baseline
+    "dense": dict(strategy="dense"),
+    # the paper's Mem-SGD: bucketed top-k over the packed wire
+    "topk": dict(strategy="sparse_allgather", bucketed=True,
+                 wire_cfg=WireConfig(wire="packed")),
+    # Qsparse-local-SGD: H local steps, top-k + s-level quantization,
+    # one shared error memory (Basu et al.)
+    "qsparse_local": dict(strategy="sparse_allgather", bucketed=True,
+                          local_steps=4,
+                          wire_cfg=WireConfig(wire="packed", quant=15)),
+    # two-level pod sync with runtime pod k, header-aware repack
+    # transport and the byte-budget water-filler ready to take a budget
+    "pod_budgeted": dict(strategy="hierarchical", bucketed=True,
+                         wire_cfg=WireConfig(wire="packed"),
+                         pod=PodConfig(dynamic=True),
+                         transport=TransportConfig(repack=True)),
+}
+
+
+@dataclasses.dataclass(frozen=True, init=False)
+class SyncConfig:
+    """How gradients are synchronized across the data-parallel axes.
+
+    Grouped API: the pod-hierarchy knobs live in ``cfg.pod``
+    (:class:`PodConfig`), the message format in ``cfg.wire_cfg``
+    (:class:`WireConfig`) and the transport/scheduling knobs in
+    ``cfg.transport`` (:class:`TransportConfig`)::
+
+        SyncConfig(strategy="hierarchical", bucketed=True,
+                   pod=PodConfig(dynamic=True, axis="pod"),
+                   wire=WireConfig(wire="packed"),
+                   transport=TransportConfig(repack=True))
+
+    or start from a known-good bundle: ``SyncConfig.preset("topk")``.
+    Flat reads (``cfg.pod_dynamic``, ``cfg.wire``, ``cfg.repack``, ...)
+    keep working as properties. Flat CONSTRUCTION keywords
+    (``SyncConfig(pod_dynamic=True, wire="packed")``) still parse via a
+    deprecation shim — one release of warning before removal; use the
+    grouped form or ``preset(...)``. Cross-flag constraints are enforced
+    by ``validate()``, called at every sync entry point.
+    """
+
+    strategy: str = "sparse_allgather"  # | "hierarchical" | "dense"
+    ratio: float = 0.001  # per-row k_row = max(k_min, ratio * row_len)
+    k_min: int = 1
+    k_max: Optional[int] = None
+    # Qsparse-local-SGD local steps: workers take H uncommunicated steps
+    # accumulating u = sum_h eta_h * g_h in bucket space, then sync ONCE
+    # through the top-k (+ quantize) wire path — cross-worker bytes per
+    # step drop by ~H while the shared memory absorbs every residual.
+    # H=1 is the per-step paper path, bit-for-bit (the driver keeps it
+    # on the literal unaccumulated code path).
+    local_steps: int = 1
     data_axes: Tuple[str, ...] = ("data",)
-    pod_axis: Optional[str] = None  # set on multi-pod meshes
-    value_dtype: str = "float32"
     # leaves smaller than this sync densely (norm scales, biases): the
     # index overhead would exceed the dense message.
     dense_below: int = 16_384
@@ -146,32 +262,263 @@ class SyncConfig:
     #    argmax loop.
     selection: str = "argmax_onehot"
     argmax_k_limit: int = 64  # fall back to top_k beyond this
-    # Wire format for the all-gather (repro.core.encoding):
-    #  * "unpacked": separate (value_dtype values, int32 indices) arrays —
-    #    k * (value_bits + 32) bits per row.
-    #  * "packed": one uint32 buffer per leaf/bucket with bf16/f32 values
-    #    and ceil(log2 cols)-bit row-local indices — k * (value_bits +
-    #    ceil(log2 cols)) bits per row plus header/alignment slack. The
-    #    decode + scatter-add runs shard-locally after the gather; results
-    #    are bit-identical to the unpacked path. NB: on model-sharded
-    #    leaves the encode's (rows, k) reshape can force GSPMD gathers —
-    #    the bucketed path (already model-axis-free) is the primary user.
-    wire: str = "unpacked"
     # Bucketed flat-buffer engine (repro.core.buckets): pack the pytree
     # into a few dtype-homogeneous (R, bucket_cols) buffers so the sync
     # runs over <= ~4 big tensors instead of one dispatch per leaf.
     bucketed: bool = False
     bucket_cols: int = 1024
-    # Software-pipelined bucket schedule (repro.core.pipeline):
-    #  * None  — legacy bucket-after-bucket emission (no barriers).
-    #  * False — strict sequential schedule, pinned with barriers
-    #            (depth 1: the honest overlap-off baseline).
-    #  * True  — double buffer (depth 2): bucket b's all-gather +
-    #            decode overlaps bucket b+1's top-k select + encode.
-    # All three modes apply BITWISE-identical params and memory: the
-    # pipeline only reorders stage emission and adds
-    # ``optimization_barrier`` edges, never a value-changing op.
-    overlap: Optional[bool] = None
+    pod: PodConfig = PodConfig()
+    wire_cfg: WireConfig = WireConfig()
+    transport: TransportConfig = TransportConfig()
+
+    def __init__(
+        self,
+        strategy: str = "sparse_allgather",
+        ratio: float = 0.001,
+        k_min: int = 1,
+        k_max: Optional[int] = None,
+        local_steps: int = 1,
+        data_axes: Tuple[str, ...] = ("data",),
+        dense_below: int = 16_384,
+        layout: str = "batched",
+        constrain_intermediates: bool = False,
+        selection: str = "argmax_onehot",
+        argmax_k_limit: int = 64,
+        bucketed: bool = False,
+        bucket_cols: int = 1024,
+        pod: Optional[PodConfig] = None,
+        wire: Union[WireConfig, str, None] = None,
+        transport: Optional[TransportConfig] = None,
+        wire_cfg: Optional[WireConfig] = None,
+        _warn: bool = True,
+        **legacy,
+    ):
+        # ``wire=`` doubles as the grouped keyword (a WireConfig) and
+        # the legacy flat format string ("packed"/"unpacked");
+        # ``wire_cfg=`` is the unambiguous field name (what
+        # dataclasses.replace round-trips).
+        if isinstance(wire, WireConfig):
+            if wire_cfg is not None:
+                raise TypeError(
+                    "pass either wire=WireConfig(...) or wire_cfg=, not both"
+                )
+            wire_cfg = wire
+            wire = None
+        if wire is not None:
+            legacy["wire"] = wire
+        pod = pod if pod is not None else PodConfig()
+        wire_cfg = wire_cfg if wire_cfg is not None else WireConfig()
+        transport = transport if transport is not None else TransportConfig()
+        unknown = set(legacy) - set(_FLAT_TO_GROUP)
+        if unknown:
+            raise TypeError(
+                f"SyncConfig got unexpected argument(s) {sorted(unknown)}"
+            )
+        if legacy and _warn:
+            warnings.warn(
+                "flat SyncConfig keyword(s) "
+                f"{sorted(legacy)} are deprecated; use the grouped "
+                "pod=PodConfig(...)/wire=WireConfig(...)/"
+                "transport=TransportConfig(...) fields or "
+                "SyncConfig.preset(...) — the flat shim is kept for one "
+                "release",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+        groups = {"pod": pod, "wire_cfg": wire_cfg, "transport": transport}
+        over: dict = {"pod": {}, "wire_cfg": {}, "transport": {}}
+        for k, v in legacy.items():
+            grp, name = _FLAT_TO_GROUP[k]
+            over[grp][name] = v
+        for grp, kw in over.items():
+            if kw:
+                groups[grp] = dataclasses.replace(groups[grp], **kw)
+        set_ = object.__setattr__
+        set_(self, "strategy", strategy)
+        set_(self, "ratio", ratio)
+        set_(self, "k_min", k_min)
+        set_(self, "k_max", k_max)
+        set_(self, "local_steps", int(local_steps))
+        set_(self, "data_axes", tuple(data_axes))
+        set_(self, "dense_below", dense_below)
+        set_(self, "layout", layout)
+        set_(self, "constrain_intermediates", constrain_intermediates)
+        set_(self, "selection", selection)
+        set_(self, "argmax_k_limit", argmax_k_limit)
+        set_(self, "bucketed", bucketed)
+        set_(self, "bucket_cols", bucket_cols)
+        set_(self, "pod", groups["pod"])
+        set_(self, "wire_cfg", groups["wire_cfg"])
+        set_(self, "transport", groups["transport"])
+
+    # -- flat reads (back-compat with the pre-grouping field names) ---------
+
+    @property
+    def pod_ratio(self) -> Optional[float]:
+        return self.pod.ratio
+
+    @property
+    def pod_ratios(self) -> Optional[Tuple[float, ...]]:
+        return self.pod.ratios
+
+    @property
+    def pod_mass_target(self) -> float:
+        return self.pod.mass_target
+
+    @property
+    def pod_dynamic(self) -> bool:
+        return self.pod.dynamic
+
+    @property
+    def pod_k_max_ratio(self) -> Optional[float]:
+        return self.pod.k_max_ratio
+
+    @property
+    def pod_axis(self) -> Optional[str]:
+        return self.pod.axis
+
+    @property
+    def wire(self) -> str:
+        return self.wire_cfg.wire
+
+    @property
+    def value_dtype(self) -> str:
+        return self.wire_cfg.value_dtype
+
+    @property
+    def quant(self) -> Optional[int]:
+        return self.wire_cfg.quant
+
+    @property
+    def repack(self) -> bool:
+        return self.transport.repack
+
+    @property
+    def byte_budget(self) -> Optional[int]:
+        return self.transport.byte_budget
+
+    @property
+    def overlap(self) -> Optional[bool]:
+        return self.transport.overlap
+
+    # -- warning-free grouped edits -----------------------------------------
+
+    def with_pod(self, **kw) -> "SyncConfig":
+        """Replace fields of ``self.pod`` (grouped, warning-free)."""
+        return dataclasses.replace(
+            self, pod=dataclasses.replace(self.pod, **kw))
+
+    def with_wire(self, **kw) -> "SyncConfig":
+        """Replace fields of ``self.wire_cfg`` (grouped, warning-free)."""
+        return dataclasses.replace(
+            self, wire_cfg=dataclasses.replace(self.wire_cfg, **kw))
+
+    def with_transport(self, **kw) -> "SyncConfig":
+        """Replace fields of ``self.transport`` (grouped, warning-free)."""
+        return dataclasses.replace(
+            self, transport=dataclasses.replace(self.transport, **kw))
+
+    # -- presets ------------------------------------------------------------
+
+    @classmethod
+    def preset(cls, name: str, **overrides) -> "SyncConfig":
+        """A known-good flag bundle, editable via ``overrides`` (grouped
+        keywords replace a whole sub-config; flat keywords edit single
+        fields on top of the bundle, warning-free — presets ARE the
+        blessed construction path):
+
+        * ``"dense"``         — vanilla data-parallel all-reduce.
+        * ``"topk"``          — bucketed Mem-SGD over the packed wire.
+        * ``"qsparse_local"`` — Qsparse-local-SGD: 4 local steps, top-k
+          + 15-level stochastic quantization, packed wire.
+        * ``"pod_budgeted"``  — two-level pod sync, runtime pod k,
+          header-aware repack transport (give it ``byte_budget=...`` to
+          engage the water-filler; pod_axis is filled in by the
+          launcher from the mesh).
+        """
+        try:
+            merged = dict(_PRESETS[name])
+        except KeyError:
+            raise ValueError(
+                f"unknown SyncConfig preset {name!r}; available: "
+                f"{sorted(_PRESETS)}"
+            ) from None
+        for k, v in overrides.items():
+            if k == "wire" and isinstance(v, WireConfig):
+                merged["wire_cfg"] = v
+            else:
+                merged[k] = v
+        return cls(_warn=False, **merged)
+
+    # -- cross-flag validation ----------------------------------------------
+
+    def validate(self, plan=None) -> "SyncConfig":
+        """Check cross-flag consistency; called at every sync entry
+        point. Raises a named ``ValueError`` for each documented illegal
+        combination instead of silently mis-syncing. Pass the
+        ``BucketPlan`` when available to also check per-bucket
+        alignment. Returns ``self`` so call sites can chain."""
+        if self.strategy not in ("sparse_allgather", "hierarchical", "dense"):
+            raise ValueError(f"unknown sync strategy {self.strategy!r}")
+        if self.local_steps < 1:
+            raise ValueError(
+                f"SyncConfig.local_steps must be >= 1, got {self.local_steps}"
+            )
+        if self.local_steps > 1 and not self.bucketed:
+            raise ValueError(
+                "SyncConfig.local_steps > 1 requires the bucketed engine "
+                "(bucketed=True): the local-step accumulator lives in "
+                "bucket space"
+            )
+        if self.quant is not None:
+            if self.quant < 1:
+                raise ValueError(
+                    f"WireConfig.quant must be >= 1 levels, got {self.quant}"
+                )
+            if self.strategy == "dense":
+                raise ValueError(
+                    "WireConfig.quant composes with the sparse selections; "
+                    "the dense all-reduce strategy has no quantize stage"
+                )
+            if not self.bucketed:
+                raise ValueError(
+                    "WireConfig.quant requires the bucketed engine "
+                    "(bucketed=True): quantization is defined on the "
+                    "(rows, cols) bucket layout"
+                )
+            if self.value_dtype != "float32":
+                raise ValueError(
+                    "WireConfig.quant replaces the value dtype on the wire "
+                    "(codes + f32 row norms); combining it with "
+                    f"value_dtype={self.value_dtype!r} would quantize "
+                    "already-rounded values"
+                )
+        if self.pod.dynamic and (
+            self.strategy != "hierarchical" or self.pod.axis is None
+            or not self.bucketed
+        ):
+            raise ValueError(
+                "PodConfig.dynamic (runtime pod k) requires the bucketed "
+                "hierarchical strategy with a pod axis — this config "
+                "would silently ignore the live k schedule"
+            )
+        if self.transport.repack and not self.pod.dynamic:
+            raise ValueError(
+                "TransportConfig.repack requires PodConfig.dynamic: the "
+                "repack boundary compacts the k_max-padded pod summary, "
+                "which only exists on the runtime-k path"
+            )
+        if self.transport.byte_budget is not None and (
+            self.strategy != "hierarchical" or not self.bucketed
+        ):
+            raise ValueError(
+                "TransportConfig.byte_budget requires the bucketed "
+                "hierarchical strategy: the budget water-fills per-bucket "
+                "pod ks across a BucketPlan"
+            )
+        if plan is not None:
+            validate_pod_ratios(self, plan)
+        return self
 
     def overlap_depth(self) -> Optional[int]:
         """Pipeline depth the sync schedules at (None/1/2 — see
@@ -416,20 +763,60 @@ def _run_stages(init, stages):
     return st
 
 
+def _fold_axes(key, axes):
+    """Fold each named axis' index into a PRNG key: folding every data
+    axis makes the key worker-unique (decorrelated level-1 quantization
+    noise); folding only the pod axis keeps it identical WITHIN a pod —
+    required where every worker in a pod must quantize the shared pod
+    mean to the same codes."""
+    for ax in axes:
+        key = jax.random.fold_in(key, jax.lax.axis_index(ax))
+    return key
+
+
+def _quantize_selected(vals, idx, s, key):
+    """QSGD-quantize a (..., k) selection: returns (norms, codes,
+    dequantized f32 values). The dequantized values are what the sender
+    densifies as its OWN contribution — bit-identical to what every
+    receiver decodes (``encoding.dequantize_rows`` is the single shared
+    formula), so the error-feedback memory absorbs exactly the
+    quantization error that ships."""
+    from repro.core import encoding as enc
+    from repro.optim.qsgd import quantize_rows
+
+    norms, codes = quantize_rows(vals.astype(jnp.float32), s, key)
+    return norms, codes, enc.dequantize_rows(norms, codes, s)
+
+
+def _encode_quant(wspec, codes, idx, norms, live_n=None):
+    from repro.core import encoding as enc
+
+    k = wspec.k
+    return enc.encode(
+        wspec, codes.reshape(-1, k), idx.reshape(-1, k).astype(jnp.int32),
+        live_n=live_n, norms=norms.reshape(-1),
+    )
+
+
 def _sparse_stages(shape, dtype, k_row, axes, value_dtype,
                    constrain=lambda x: x, topk=_row_topk,
-                   densify=None, wire: str = "unpacked"):
+                   densify=None, wire: str = "unpacked",
+                   quant: Optional[int] = None, qkey=None):
     """Stage chain for one flat sparse leaf/bucket, decomposed for the
     bucket pipeline (repro.core.pipeline):
 
       E (compute): top-k select + own densify + wire encode
+      Q (quant):   OPTIONAL (``quant=s``) — stochastic s-level
+                   quantization of the selected values (worker-unique
+                   key: ``qkey`` folded over every gather axis). The own
+                   densify moves here and uses the DEQUANTIZED values.
       G (comm):    all-gather over the data axes
       D (compute): wire decode + densify + mean
 
     Returns ``(stages, kinds, nbytes)``; stage 0 takes ``u`` (..., C)
     and the final stage returns ``(mean update, own selection)``. Run
-    back to back the stages compute EXACTLY the op sequence the old
-    monolithic ``_leaf_sparse_sync`` emitted."""
+    back to back, the no-quant stages compute EXACTLY the op sequence
+    the old monolithic ``_leaf_sparse_sync`` emitted."""
     densify = densify or _row_scatter
     rows = 1
     for s in shape[:-1]:
@@ -439,7 +826,8 @@ def _sparse_stages(shape, dtype, k_row, axes, value_dtype,
         from repro.core import encoding as enc
 
         wspec = enc.WireSpec(rows=rows, cols=shape[-1], k=k_row,
-                             value_dtype=jnp.dtype(value_dtype).name)
+                             value_dtype=jnp.dtype(value_dtype).name,
+                             quant=quant)
         nbytes = wspec.nbytes
     else:
         wspec = None
@@ -452,6 +840,20 @@ def _sparse_stages(shape, dtype, k_row, axes, value_dtype,
             payload = _encode_packed(vals.astype(value_dtype), idx, wspec)
         else:
             payload = (vals.astype(value_dtype), idx)
+        return own, payload
+
+    def select(u):
+        return topk(u, k_row, constrain)
+
+    def quantize_encode(st):
+        vals, idx = st
+        key = _fold_axes(jax.random.fold_in(qkey, 1), axes)
+        norms, codes, deq = _quantize_selected(vals, idx, quant, key)
+        own = densify(shape, deq, idx, dtype, constrain)
+        if wspec is not None:
+            payload = _encode_quant(wspec, codes, idx, norms)
+        else:
+            payload = (deq.astype(value_dtype), idx)
         return own, payload
 
     def gather(st):
@@ -471,6 +873,12 @@ def _sparse_stages(shape, dtype, k_row, axes, value_dtype,
                   / W).astype(dtype)
         return update, own
 
+    if quant is not None:
+        if qkey is None:
+            raise ValueError(
+                "quantized sparse stages need a qkey (threaded PRNG key)")
+        return ([select, quantize_encode, gather, decode_apply],
+                (COMPUTE, QUANT, COMM, COMPUTE), nbytes)
     return ([select_encode, gather, decode_apply],
             (COMPUTE, COMM, COMPUTE), nbytes)
 
@@ -520,14 +928,24 @@ def _leaf_hierarchical_sync(u, k_row, k_pod, data_axes, pod_axis, value_dtype,
 def _hier_stages(shape, dtype, k_row, k_pod, data_axes, pod_axis,
                  value_dtype, constrain=lambda x: x, topk=_row_topk,
                  densify=None, wire: str = "unpacked", k_pod_live=None,
-                 repack_boundary: bool = False):
+                 repack_boundary: bool = False,
+                 quant: Optional[int] = None, qkey=None):
     """Stage chain for one two-level (hierarchical) leaf/bucket,
     decomposed for the bucket pipeline:
 
       E1 (compute): worker top-k + own densify + level-1 encode
+      Q1 (quant):   OPTIONAL (``quant=s``) — stochastic quantization of
+                    the worker selection (worker-unique key); the own
+                    densify moves here and uses the DEQUANTIZED values
       G1 (comm):    intra-pod all-gather over the data axes
       M  (compute): level-1 decode + pod mean + pod re-select (live-k
                     mask) + residual + level-2 encode
+      Q2 (quant):   OPTIONAL — quantization of the pod summary with a
+                    key folded over the POD axis only, so every worker
+                    in a pod draws identical codes for the shared pod
+                    mean (the residual kept in memory must equal
+                    pod_mean - dequantized summary on every worker);
+                    the residual computation moves here
       R  (repack):  OPTIONAL (``repack_boundary``) — the header-aware
                     transport's compaction point, right before the slow
                     link. In-jit an identity (static shapes cannot
@@ -538,9 +956,9 @@ def _hier_stages(shape, dtype, k_row, k_pod, data_axes, pod_axis,
       D  (compute): level-2 decode + densify + pod mean
 
     Returns ``(stages, kinds, level_bytes)``; stage 0 takes ``u`` and
-    the final stage returns ``(update, own, residual)``. The op
-    sequence is exactly the old monolithic ``_leaf_hierarchical_sync``
-    body."""
+    the final stage returns ``(update, own, residual)``. Without quant
+    the op sequence is exactly the old monolithic
+    ``_leaf_hierarchical_sync`` body."""
     from repro.core import encoding as enc
 
     densify = densify or _row_scatter
@@ -552,13 +970,15 @@ def _hier_stages(shape, dtype, k_row, k_pod, data_axes, pod_axis,
     n_pods = compat.axis_size(pod_axis)
     name = jnp.dtype(value_dtype).name
     if wire == "packed":
-        w1 = enc.WireSpec(rows=rows, cols=cols, k=k_row, value_dtype=name)
-        w2 = enc.WireSpec(rows=rows, cols=cols, k=k_pod, value_dtype=name)
+        w1 = enc.WireSpec(rows=rows, cols=cols, k=k_row, value_dtype=name,
+                          quant=quant)
+        w2 = enc.WireSpec(rows=rows, cols=cols, k=k_pod, value_dtype=name,
+                          quant=quant)
     else:
         w1 = w2 = None
     level_bytes = (
-        enc.message_nbytes(rows, cols, k_row, name, wire),
-        enc.message_nbytes(rows, cols, k_pod, name, wire),
+        enc.message_nbytes(rows, cols, k_row, name, wire, quant=quant),
+        enc.message_nbytes(rows, cols, k_pod, name, wire, quant=quant),
     )
 
     def l1_select_encode(u):
@@ -570,14 +990,28 @@ def _hier_stages(shape, dtype, k_row, k_pod, data_axes, pod_axis,
             payload = (vals.astype(value_dtype), idx)
         return own, payload
 
+    def l1_select(u):
+        return topk(u, k_row, constrain)
+
+    def l1_quantize_encode(st):
+        vals, idx = st
+        key = _fold_axes(jax.random.fold_in(qkey, 1),
+                         tuple(data_axes) + (pod_axis,))
+        norms, codes, deq = _quantize_selected(vals, idx, quant, key)
+        own = densify(shape, deq, idx, dtype, constrain)
+        if w1 is not None:
+            payload = _encode_quant(w1, codes, idx, norms)
+        else:
+            payload = (deq.astype(value_dtype), idx)
+        return own, payload
+
     def l1_gather(st):
         own, payload = st
         if w1 is not None:
             return own, _gather_buf(payload, data_axes)
         return own, _gather_pairs(*payload, data_axes)
 
-    def pod_reselect_encode(st):
-        own, payload = st
+    def _pod_mean_select(payload):
         if w1 is not None:
             gv, gi = _decode_packed(payload, w1, data_axes, shape[:-1])
         else:
@@ -589,6 +1023,11 @@ def _hier_stages(shape, dtype, k_row, k_pod, data_axes, pod_axis,
 
             pvals, pidx = mask_live_k(pvals, pidx, k_pod_live)
             pvals, pidx = constrain(pvals), constrain(pidx)
+        return pod_mean, pvals, pidx
+
+    def pod_reselect_encode(st):
+        own, payload = st
+        pod_mean, pvals, pidx = _pod_mean_select(payload)
         pod_sel = densify(shape, pvals, pidx, value_dtype, constrain)
         # kept in memory (identical pod-wide)
         residual = pod_mean - pod_sel
@@ -596,6 +1035,26 @@ def _hier_stages(shape, dtype, k_row, k_pod, data_axes, pod_axis,
             payload2 = _encode_packed(pvals, pidx, w2, live_n=k_pod_live)
         else:
             payload2 = (pvals, pidx)
+        return own, residual, payload2
+
+    def pod_reselect(st):
+        own, payload = st
+        pod_mean, pvals, pidx = _pod_mean_select(payload)
+        return own, pod_mean, pvals, pidx
+
+    def pod_quantize_encode(st):
+        own, pod_mean, pvals, pidx = st
+        # pod-axis-only fold: identical codes on every worker of a pod
+        key = _fold_axes(jax.random.fold_in(qkey, 2), (pod_axis,))
+        norms, codes, deq = _quantize_selected(pvals, pidx, quant, key)
+        pod_sel = densify(shape, deq, pidx, value_dtype, constrain)
+        # memory absorbs selection AND quantization error of the summary
+        residual = pod_mean - pod_sel
+        if w2 is not None:
+            payload2 = _encode_quant(w2, codes, pidx, norms,
+                                     live_n=k_pod_live)
+        else:
+            payload2 = (deq.astype(value_dtype), pidx)
         return own, residual, payload2
 
     def repack_boundary_stage(st):
@@ -620,14 +1079,23 @@ def _hier_stages(shape, dtype, k_row, k_pod, data_axes, pod_axis,
                   / n_pods).astype(dtype)
         return update, own, residual.astype(dtype)
 
+    if quant is not None:
+        if qkey is None:
+            raise ValueError(
+                "quantized hierarchical stages need a qkey (threaded "
+                "PRNG key)")
+        stages = [l1_select, l1_quantize_encode, l1_gather, pod_reselect,
+                  pod_quantize_encode]
+        kinds = [COMPUTE, QUANT, COMM, COMPUTE, QUANT]
+    else:
+        stages = [l1_select_encode, l1_gather, pod_reselect_encode]
+        kinds = [COMPUTE, COMM, COMPUTE]
     if repack_boundary:
-        return ([l1_select_encode, l1_gather, pod_reselect_encode,
-                 repack_boundary_stage, l2_gather, l2_decode_apply],
-                (COMPUTE, COMM, COMPUTE, REPACK, COMM, COMPUTE),
-                level_bytes)
-    return ([l1_select_encode, l1_gather, pod_reselect_encode, l2_gather,
-             l2_decode_apply],
-            (COMPUTE, COMM, COMPUTE, COMM, COMPUTE), level_bytes)
+        stages.append(repack_boundary_stage)
+        kinds.append(REPACK)
+    stages += [l2_gather, l2_decode_apply]
+    kinds += [COMM, COMPUTE]
+    return stages, tuple(kinds), level_bytes
 
 
 def _dense_stages(shape, dtype, axes):
@@ -672,6 +1140,7 @@ def sparse_sync_gradients(
     Returns (update_tree [SUBTRACT from params], new_memory_tree,
     bytes_per_worker_per_step [python int]).
     """
+    cfg.validate()
     value_dtype = jnp.dtype(cfg.value_dtype)
     all_axes = tuple(cfg.data_axes) + (
         (cfg.pod_axis,) if cfg.pod_axis else ()
@@ -785,6 +1254,8 @@ def bucketed_sync_gradients(
     eta: Array,
     return_bufs: bool = False,
     pod_ks=None,
+    grad_bufs=None,
+    quant_key=None,
 ):
     """PARALLEL-MEM-SGD gradient exchange over flat buckets.
 
@@ -810,32 +1281,40 @@ def bucketed_sync_gradients(
     [1, ``pod_k_max_for_bucket``]; every buffer/wire/all-gather keeps
     the static k_max shape, so the same jitted step serves any k
     schedule with zero recompiles.
+
+    ``grad_bufs`` (one f32 (rows, cols) buffer per bucket) substitutes
+    for ``grad_tree``'s packing — the Qsparse-local-SGD driver passes
+    its H-step bucket-space accumulator here (with ``eta=1.0``: the
+    per-step stepsizes were already folded in by
+    ``buckets.accumulate_local``). ``quant_key`` (a traced PRNG key,
+    step already folded in) is required when ``cfg.wire_cfg.quant`` is
+    set; each bucket folds its index, each quantize stage its level tag
+    and axis indices.
     """
     from repro.core import buckets as bk
 
-    validate_pod_ratios(cfg, plan)
-    if cfg.pod_dynamic:
-        if cfg.strategy != "hierarchical" or cfg.pod_axis is None:
-            # the converse misconfiguration must be loud too: a flat/
-            # pod-less sync would otherwise silently drop the k schedule
-            # and run fully static
-            raise ValueError(
-                "SyncConfig.pod_dynamic (runtime pod k) requires "
-                "strategy='hierarchical' and a pod_axis — this config "
-                "would silently ignore the live k schedule"
-            )
-        if pod_ks is None:
-            raise ValueError(
-                "SyncConfig.pod_dynamic needs pod_ks (one live pod k "
-                "per bucket) — pass the traced schedule the train step "
-                "threads through, or unset pod_dynamic for static pod "
-                "ratios"
-            )
+    cfg.validate(plan)
+    if cfg.pod_dynamic and pod_ks is None:
+        raise ValueError(
+            "PodConfig.dynamic needs pod_ks (one live pod k "
+            "per bucket) — pass the traced schedule the train step "
+            "threads through, or unset pod.dynamic for static pod "
+            "ratios"
+        )
+    if cfg.quant is not None and quant_key is None:
+        raise ValueError(
+            "WireConfig.quant needs quant_key (a threaded PRNG key; fold "
+            "the step count in before calling) — stochastic rounding "
+            "must draw fresh noise every sync"
+        )
     value_dtype = jnp.dtype(cfg.value_dtype)
     all_axes = tuple(cfg.data_axes) + (
         (cfg.pod_axis,) if cfg.pod_axis else ()
     )
-    g_bufs = bk.pack(plan, grad_tree, dtype=jnp.float32)
+    if grad_bufs is not None:
+        g_bufs = [b.astype(jnp.float32) for b in grad_bufs]
+    else:
+        g_bufs = bk.pack(plan, grad_tree, dtype=jnp.float32)
     # Build every bucket's stage chain up front, then emit in the
     # planned (possibly double-buffered) order. The finish closures run
     # after the schedule: they only combine already-computed values
@@ -844,6 +1323,8 @@ def bucketed_sync_gradients(
     total_bytes = 0
     for b, (spec, m, g) in enumerate(zip(plan.buckets, memory_bufs, g_bufs)):
         u = m + eta * g
+        bkey = (jax.random.fold_in(quant_key, b)
+                if quant_key is not None else None)
         if cfg.strategy == "dense" or spec.kind == "dense":
             stages, kinds, nbytes = _dense_stages(u.shape, u.dtype, all_axes)
 
@@ -873,6 +1354,7 @@ def bucketed_sync_gradients(
                 tuple(cfg.data_axes), cfg.pod_axis, value_dtype,
                 topk=topk, densify=densify, wire=cfg.wire,
                 k_pod_live=k_live, repack_boundary=cfg.repack,
+                quant=cfg.quant, qkey=bkey,
             )
             nbytes = sum(level_bytes)
 
@@ -885,6 +1367,7 @@ def bucketed_sync_gradients(
             stages, kinds, nbytes = _sparse_stages(
                 u.shape, u.dtype, k_row, all_axes, value_dtype,
                 topk=topk, densify=densify, wire=cfg.wire,
+                quant=cfg.quant, qkey=bkey,
             )
 
             def finish(st, u=u):
@@ -952,7 +1435,10 @@ def _sparse_leaf_bytes(cfg: SyncConfig, rows: int, cols: int,
     if cfg.strategy == "hierarchical" and cfg.pod_axis is not None:
         ks.append(pod_k if pod_k is not None else cfg.pod_k_for(cols))
     name = jnp.dtype(cfg.value_dtype).name
-    return sum(enc.message_nbytes(rows, cols, k, name, cfg.wire) for k in ks)
+    return sum(
+        enc.message_nbytes(rows, cols, k, name, cfg.wire, quant=cfg.quant)
+        for k in ks
+    )
 
 
 def autotune_pod_ratios(cfg: SyncConfig, plan, u_bufs, n_data: int,
@@ -1037,7 +1523,7 @@ def bucketed_message_bytes(cfg: SyncConfig, plan, *, by_level: bool = False,
     """
     from repro.core import encoding as enc
 
-    validate_pod_ratios(cfg, plan)
+    cfg.validate(plan)
     if by_level and cfg.pod_axis is not None and n_data is None and (
         cfg.strategy not in ("hierarchical", "dense")
     ):
@@ -1071,9 +1557,10 @@ def bucketed_message_bytes(cfg: SyncConfig, plan, *, by_level: bool = False,
             else:
                 k2 = cfg.pod_k_for_bucket(b, spec.cols)
             lvl1 = enc.message_nbytes(
-                spec.rows, spec.cols, cfg.k_for(spec.cols), name, cfg.wire)
+                spec.rows, spec.cols, cfg.k_for(spec.cols), name, cfg.wire,
+                quant=cfg.quant)
             lvl2 = enc.message_nbytes(
-                spec.rows, spec.cols, k2, name, cfg.wire)
+                spec.rows, spec.cols, k2, name, cfg.wire, quant=cfg.quant)
             total += lvl1 + lvl2
             intra += lvl1
             cross += lvl2
@@ -1088,9 +1575,26 @@ def bucketed_message_bytes(cfg: SyncConfig, plan, *, by_level: bool = False,
     return total
 
 
+def amortized_bytes_per_step(cfg: SyncConfig, plan, *, by_level: bool = False,
+                             n_data: Optional[int] = None,
+                             pod_ks: Optional[Sequence[int]] = None):
+    """Cross-worker bytes per OPTIMIZER step under Qsparse-local-SGD:
+    with ``cfg.local_steps = H`` the workers communicate once every H
+    steps, so the per-step cost is ``bucketed_message_bytes / H`` — the
+    ~1/H scaling the local bench asserts. Same ``by_level`` contract,
+    values as floats."""
+    b = bucketed_message_bytes(cfg, plan, by_level=by_level, n_data=n_data,
+                               pod_ks=pod_ks)
+    H = max(1, cfg.local_steps)
+    if isinstance(b, dict):
+        return {k: v / H for k, v in b.items()}
+    return b / H
+
+
 def message_bytes(cfg: SyncConfig, params, col_axes=None) -> int:
     """Per-worker per-step transmitted bytes for a parameter pytree — the
     exact size of the gathered arrays (or packed wire buffers)."""
+    cfg.validate()
     total = 0
     leaves, treedef = jax.tree.flatten(params)
     if col_axes is None:

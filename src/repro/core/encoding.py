@@ -49,6 +49,25 @@ Two layers live here:
    k * (value_bits + ceil(log2 cols)) plus word-alignment slack — e.g.
    2.46x fewer bytes at k=64, cols=1024, bf16 values.
 
+   **Quantized value tier** (``WireSpec(quant=s)``): beside the f32/bf16
+   tiers, a sparse message may carry QSGD-style s-level stochastically
+   quantized values (Alistarh et al.; composed with top-k + memory per
+   Qsparse-local-SGD). The value section per row becomes::
+
+       [ row_norm : 1 word (f32 bitcast) ]
+       [ codes    : ceil(n_sel * quant_bits / 32) words ]
+
+   where each code is ``(level << 1) | sign_bit`` at
+   ``quant_bits = 1 + ceil(log2(s+1))`` bits, and the decoded value is
+   ``±norm * level / s``. The sign bit is stored SEPARATELY from the
+   magnitude so a (-0.0, 0) padded tail slot (level 0, sign 1) survives
+   the round trip as exact -0.0 — the runtime-k masking invariant holds
+   through quantization. ``decode`` returns dequantized f32 values (the
+   canonical dequant lives here, ``dequantize_rows``, so every consumer
+   applies bit-identical math); ``decode_quant`` exposes the raw
+   (norms, codes). Quantization itself (stochastic rounding, PRNG) is
+   ``optim.qsgd.quantize_rows``.
+
 The accounting functions for the packed format are exact: the test suite
 asserts ``WireSpec.nbits == 8 * encoded.nbytes``.
 """
@@ -74,6 +93,9 @@ _DTYPE_CODES = {"float32": 0, "bfloat16": 1}
 _DTYPE_NAMES = {v: k for k, v in _DTYPE_CODES.items()}
 _KIND_CODES = {"sparse": 0, "dense": 1}
 _KIND_NAMES = {v: k for k, v in _KIND_CODES.items()}
+# quantization levels ride in the high bits of the header dtype word
+# (code | s << 8); capped so a code (sign bit + level) fits 16 bits
+_QUANT_MAX = (1 << 15) - 1
 
 
 # ---------------------------------------------------------------------------
@@ -111,6 +133,14 @@ def qsgd_bits(d: int, s: int) -> float:
     return min(naive, elias)
 
 
+def quant_code_bits(s: int) -> int:
+    """Wire bits per quantized value: a sign bit plus a level in
+    [0, s] — ``1 + ceil(log2(s+1))`` (s=1 ternary: 2 bits, s=15: 5)."""
+    if s < 1:
+        raise ValueError(f"quantization levels must be >= 1, got {s}")
+    return 1 + max(1, math.ceil(math.log2(s + 1)))
+
+
 def memsgd_message_bits(d: int, k: int, value_dtype="float32") -> float:
     """Bits per worker per step for the distributed sparse all-gather."""
     return sparse_bits(d, k, value_bits(value_dtype))
@@ -123,15 +153,19 @@ def reduction_factor(d: int, k: float, bits_per_value: int = 32) -> float:
 
 def message_nbytes(
     rows: int, cols: int, k: int, value_dtype="float32",
-    wire: str = "unpacked",
+    wire: str = "unpacked", quant: Optional[int] = None,
 ) -> int:
     """Exact bytes one sparse (rows, cols, k) message puts on the wire:
     the packed ``WireSpec`` buffer size (header + bit-packed sections) or
     the raw (value_dtype values, int32 indices) pair arrays. This is the
     single source of truth for per-gather-stage byte accounting — the
-    two-level bucketed sync calls it once per level."""
+    two-level bucketed sync calls it once per level. ``quant=s`` accounts
+    the s-level quantized value tier (packed wire only; the unpacked
+    baseline ships dequantized values at full width)."""
     if wire == "packed":
-        return WireSpec(rows, cols, k, jnp.dtype(value_dtype).name).nbytes
+        return WireSpec(
+            rows, cols, k, jnp.dtype(value_dtype).name, quant=quant
+        ).nbytes
     return rows * k * (jnp.dtype(value_dtype).itemsize + 4)
 
 
@@ -147,6 +181,8 @@ class WireSpec:
     ``kind="sparse"``: k (value, row-local index) pairs per row.
     ``kind="dense"``:  all cols values per row, no index section (used by
     the delta stream for uncompressed dense buckets); ``k`` is ignored.
+    ``quant=s``: the value section carries s-level quantized codes plus
+    one f32 row norm instead of full-width values (sparse only).
     """
 
     rows: int
@@ -154,6 +190,7 @@ class WireSpec:
     k: int
     value_dtype: str = "float32"
     kind: str = "sparse"
+    quant: Optional[int] = None
 
     def __post_init__(self):
         if self.value_dtype not in _DTYPE_CODES:
@@ -166,6 +203,18 @@ class WireSpec:
             raise ValueError(
                 f"k={self.k} out of range for cols={self.cols}"
             )
+        if self.quant is not None:
+            if self.kind != "sparse":
+                raise ValueError("quantized wire tier is sparse-only")
+            if self.value_dtype != "float32":
+                raise ValueError(
+                    "quantized wire tier carries f32 row norms; "
+                    f"value_dtype={self.value_dtype!r} is not composable"
+                )
+            if not 1 <= self.quant <= _QUANT_MAX:
+                raise ValueError(
+                    f"quant={self.quant} out of range [1, {_QUANT_MAX}]"
+                )
 
     # -- static layout ------------------------------------------------------
 
@@ -180,11 +229,24 @@ class WireSpec:
 
     @property
     def value_bits(self) -> int:
+        """Wire bits per value entry (code bits on the quantized tier)."""
+        if self.quant is not None:
+            return quant_code_bits(self.quant)
         return value_bits(self.value_dtype)
 
     @property
+    def code_words(self) -> int:
+        """uint32 words per row holding the packed quantized codes."""
+        if self.quant is None:
+            return 0
+        return -(-(self.n_sel * self.value_bits) // 32)
+
+    @property
     def value_words(self) -> int:
-        """uint32 words per row for the value section."""
+        """uint32 words per row for the value section (quantized tier:
+        one f32 norm word + the packed codes)."""
+        if self.quant is not None:
+            return 1 + self.code_words
         return -(-(self.n_sel * self.value_bits) // 32)
 
     @property
@@ -208,14 +270,20 @@ class WireSpec:
     def with_value_dtype(self, value_dtype: str) -> "WireSpec":
         """Same message layout with another wire value dtype (the index
         section and k are unchanged; bf16 halves the value words)."""
+        if self.quant is not None:
+            raise ValueError(
+                "quantized wire messages have no alternate value dtype; "
+                "dequantize and re-encode instead"
+            )
         return dataclasses.replace(self, value_dtype=value_dtype)
 
     # -- self-describing header --------------------------------------------
 
     def header(self) -> Array:
+        dtype_word = _DTYPE_CODES[self.value_dtype] | ((self.quant or 0) << 8)
         return jnp.array(
             [MAGIC, VERSION, self.rows, self.cols, self.n_sel,
-             _DTYPE_CODES[self.value_dtype], _KIND_CODES[self.kind], 0],
+             dtype_word, _KIND_CODES[self.kind], 0],
             jnp.uint32,
         )
 
@@ -232,8 +300,9 @@ class WireSpec:
             )
         return cls(
             rows=int(h[2]), cols=int(h[3]), k=int(h[4]),
-            value_dtype=_DTYPE_NAMES[int(h[5])],
+            value_dtype=_DTYPE_NAMES[int(h[5]) & 0xFF],
             kind=_KIND_NAMES[int(h[6])],
+            quant=(int(h[5]) >> 8) or None,
         )
 
 
@@ -288,8 +357,43 @@ def _unpack_values(spec: WireSpec, packed: Array) -> Array:
     return jax.lax.bitcast_convert_type(u16, jnp.bfloat16)
 
 
+def dequantize_rows(norms: Array, codes: Array, s: int) -> Array:
+    """Canonical dequant of the quantized wire tier: codes
+    ``(level << 1) | sign`` -> ``±norm * level / s`` per row.
+
+    Every consumer (in-jit decode, the sender's own-contribution densify,
+    host repack) calls THIS function, so the memory absorbs exactly the
+    quantization error the receivers see. A (level 0, sign 1) code
+    dequantizes to -0.0 — the padded-tail identity survives."""
+    sign = (codes & 1).astype(jnp.bool_)
+    level = (codes >> 1).astype(jnp.float32)
+    mag = norms.astype(jnp.float32)[..., None] * (level / float(s))
+    return jnp.where(sign, -mag, mag)
+
+
+def _pack_values_quant(spec: WireSpec, codes: Array, norms: Array) -> Array:
+    """(R, n_sel) codes + (R,) norms -> (R, value_words) uint32: one
+    bitcast f32 norm word, then the LSB-first packed code stream."""
+    nw = jax.lax.bitcast_convert_type(
+        norms.astype(jnp.float32), jnp.uint32
+    )[:, None]
+    cw = _pack_bits(codes.astype(jnp.uint32), spec.value_bits,
+                    spec.code_words)
+    return jnp.concatenate([nw, cw], axis=1)
+
+
+def _unpack_values_quant(spec: WireSpec,
+                         packed: Array) -> Tuple[Array, Array]:
+    """Inverse of ``_pack_values_quant`` -> (norms (R,), codes (R, n_sel)
+    int32)."""
+    norms = jax.lax.bitcast_convert_type(packed[:, 0], jnp.float32)
+    codes = _unpack_bits(packed[:, 1:], spec.value_bits, spec.n_sel)
+    return norms, codes.astype(jnp.int32)
+
+
 def encode(spec: WireSpec, vals: Array, idx: Optional[Array] = None,
-           live_n: Optional[Array] = None) -> Array:
+           live_n: Optional[Array] = None,
+           norms: Optional[Array] = None) -> Array:
     """(values (rows, k), indices (rows, k)) -> flat uint32 wire buffer
     of exactly ``spec.words`` words (see the module docstring for the
     layout). For ``kind="dense"`` pass the (rows, cols) values only.
@@ -299,7 +403,10 @@ def encode(spec: WireSpec, vals: Array, idx: Optional[Array] = None,
     — the layout stays the static ``spec``; only the first ``live_n``
     slots per row are meaningful (the padded tail must already be
     masked to (-0.0, 0) by the caller — see
-    ``kernels.topk_select.mask_live_k``)."""
+    ``kernels.topk_select.mask_live_k``).
+
+    On the quantized tier (``spec.quant``) ``vals`` are the integer
+    CODES (rows, k) and ``norms`` (rows,) the f32 row norms."""
     if vals.shape != (spec.rows, spec.n_sel):
         raise ValueError(
             f"values shape {vals.shape} != {(spec.rows, spec.n_sel)}"
@@ -309,7 +416,19 @@ def encode(spec: WireSpec, vals: Array, idx: Optional[Array] = None,
         header = header.at[LIVE_N_WORD].set(
             jnp.asarray(live_n).astype(jnp.uint32)
         )
-    sections = [header, _pack_values(spec, vals).reshape(-1)]
+    if spec.quant is not None:
+        if norms is None:
+            raise ValueError("quantized wire message needs row norms")
+        if norms.shape != (spec.rows,):
+            raise ValueError(
+                f"norms shape {norms.shape} != {(spec.rows,)}"
+            )
+        packed_vals = _pack_values_quant(spec, vals, norms)
+    elif norms is not None:
+        raise ValueError("norms only apply to the quantized tier")
+    else:
+        packed_vals = _pack_values(spec, vals)
+    sections = [header, packed_vals.reshape(-1)]
     if spec.kind == "sparse":
         if idx is None:
             raise ValueError("sparse wire message needs indices")
@@ -346,9 +465,12 @@ def decode(spec: WireSpec, buf: Array) -> Tuple[Array, Optional[Array]]:
             )
     off = HEADER_WORDS
     nv = spec.rows * spec.value_words
-    vals = _unpack_values(
-        spec, buf[off : off + nv].reshape(spec.rows, spec.value_words)
-    )
+    packed_vals = buf[off : off + nv].reshape(spec.rows, spec.value_words)
+    if spec.quant is not None:
+        norms, codes = _unpack_values_quant(spec, packed_vals)
+        vals = dequantize_rows(norms, codes, spec.quant)
+    else:
+        vals = _unpack_values(spec, packed_vals)
     if spec.kind == "dense":
         return vals, None
     ni = spec.rows * spec.index_words
@@ -357,6 +479,29 @@ def decode(spec: WireSpec, buf: Array) -> Tuple[Array, Optional[Array]]:
     )
     idx = _unpack_bits(packed_idx, spec.index_bits, spec.k)
     return vals, idx.astype(jnp.int32)
+
+
+def decode_quant(spec: WireSpec, buf: Array
+                 ) -> Tuple[Array, Array, Array]:
+    """Raw reader for the quantized tier: wire buffer -> (norms (rows,),
+    codes (rows, k) int32, indices (rows, k) int32), without
+    dequantizing — the repack transport and tests need the exact code
+    stream."""
+    if spec.quant is None:
+        raise ValueError("decode_quant wants a quantized WireSpec")
+    if buf.shape != (spec.words,):
+        raise ValueError(f"buffer shape {buf.shape} != {(spec.words,)}")
+    off = HEADER_WORDS
+    nv = spec.rows * spec.value_words
+    norms, codes = _unpack_values_quant(
+        spec, buf[off : off + nv].reshape(spec.rows, spec.value_words)
+    )
+    ni = spec.rows * spec.index_words
+    packed_idx = buf[off + nv : off + nv + ni].reshape(
+        spec.rows, spec.index_words
+    )
+    idx = _unpack_bits(packed_idx, spec.index_bits, spec.k)
+    return norms, codes, idx.astype(jnp.int32)
 
 
 def live_n_of(buf) -> Optional[int]:
@@ -416,6 +561,12 @@ def repack(spec: WireSpec, buf: Array,
     if live_n >= spec.n_sel:
         return spec, buf
     small = repack_spec(spec, live_n)
+    if spec.quant is not None:
+        norms, codes, idx = decode_quant(spec, buf)
+        return small, encode(
+            small, codes[:, : small.k], idx[:, : small.k],
+            live_n=live_n, norms=norms,
+        )
     vals, idx = decode(spec, buf)
     return small, encode(
         small, vals[:, : small.k], idx[:, : small.k], live_n=live_n
@@ -441,11 +592,26 @@ def repad(spec: WireSpec, small_spec: WireSpec, small_buf: Array) -> Array:
         raise ValueError(
             f"repacked k={small_spec.k} exceeds padded n_sel={spec.n_sel}"
         )
+    if small_spec.quant != spec.quant:
+        raise ValueError(
+            f"repacked quant tier {small_spec.quant} does not match "
+            f"{spec.quant}"
+        )
     import numpy as np
 
     raw_live = int(np.asarray(small_buf[LIVE_N_WORD], dtype=np.uint32))
-    vals, idx = decode(small_spec, small_buf)
     pad = spec.n_sel - small_spec.k
+    if spec.quant is not None:
+        norms, codes, idx = decode_quant(small_spec, small_buf)
+        # code 1 = (level 0, sign 1) — dequantizes to the -0.0 identity
+        codes = jnp.concatenate(
+            [codes, jnp.ones((spec.rows, pad), jnp.int32)], axis=1
+        )
+        idx = jnp.concatenate(
+            [idx, jnp.zeros((spec.rows, pad), jnp.int32)], axis=1
+        )
+        return encode(spec, codes, idx, live_n=raw_live, norms=norms)
+    vals, idx = decode(small_spec, small_buf)
     dtype = jnp.dtype(spec.value_dtype)
     vals = jnp.concatenate(
         [vals, jnp.full((spec.rows, pad), -0.0, dtype)], axis=1

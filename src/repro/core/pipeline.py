@@ -61,6 +61,12 @@ COMM = "comm"
 # stage is the identity (static shapes cannot shrink inside a trace);
 # the host executor's repack stage does the real byte reduction.
 REPACK = "repack"
+# A quantization stage: stochastic-rounding of the selected values into
+# wire codes (Qsparse-local-SGD's Q step). Pure local ALU work — it
+# schedules exactly like compute, hiding behind an in-flight transfer —
+# but is named so stage chains and tests can assert where the value
+# precision drops (always BEFORE the encode that feeds a gather).
+QUANT = "quant"
 
 
 def overlap_depth(overlap: Optional[bool]) -> Optional[int]:
@@ -77,9 +83,9 @@ def plan_schedule(kinds: Sequence[Sequence[str]], depth: int
                   ) -> List[Tuple[int, int]]:
     """Total order of (bucket, stage) emissions for the given depth.
 
-    ``kinds[b][s]`` is "compute", "comm" or "repack" (repack stages
-    schedule exactly like compute: local work that hides behind an
-    in-flight transfer). At most ``depth`` buckets are in flight at any
+    ``kinds[b][s]`` is "compute", "comm", "quant" or "repack" (quant and
+    repack stages schedule exactly like compute: local work that hides
+    behind an in-flight transfer). At most ``depth`` buckets are in flight at any
     point; bucket b is admitted only once bucket b-depth has fully
     retired. Depth 1 reproduces the strict sequential order; depth 2
     produces the classic double buffer (for per-bucket kinds [E, G, D]:
@@ -91,7 +97,7 @@ def plan_schedule(kinds: Sequence[Sequence[str]], depth: int
     n = len(kinds)
     for b, ks in enumerate(kinds):
         for s, kind in enumerate(ks):
-            if kind not in (COMPUTE, COMM, REPACK):
+            if kind not in (COMPUTE, COMM, QUANT, REPACK):
                 raise ValueError(
                     f"unknown stage kind {kind!r} at bucket {b} stage {s}")
     order: List[Tuple[int, int]] = []

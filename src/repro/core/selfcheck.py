@@ -288,6 +288,156 @@ def overlap_selfcheck(mesh, ratio: float = 0.05, eta: float = 0.3,
     return out
 
 
+def local_quant_selfcheck(mesh, ratio: float = 0.05, eta: float = 0.3,
+                          quant: int = 15, hs=(2, 4, 8)) -> dict:
+    """Probe the Qsparse-local-SGD invariants on ``mesh`` (axes
+    ``("pod", "data")``). Same tiny 2-bucket tree as
+    ``two_level_selfcheck``. Reports:
+
+    * **h1_accum_bitwise** — the local-step ACCUMULATOR path (pack each
+      step's scaled gradient into bucket space via
+      ``buckets.accumulate_local``, then sync the accumulator with
+      ``grad_bufs=``/``eta=1.0``) is BITWISE identical to the direct
+      per-step sync at H=1, on flat, hierarchical AND runtime-k
+      (pod_dynamic) strategies: packing is elementwise-linear, so
+      ``1.0 * (eta*pack(g))`` reproduces ``eta*pack(g)`` exactly. This
+      is the acceptance invariant that lets the train driver keep H=1
+      on the literal per-step path.
+    * **quant_conservation_max_err** — with the QSGD wire tier
+      (``WireConfig.quant``) mass conservation stays EXACT (float-sum
+      association is the only slack): the memory absorbs the
+      quantization error because the sender's own contribution uses the
+      dequantized values, on both flat and two-level strategies.
+    * **quant_bit_identical** — packed and unpacked wires produce
+      bitwise equal updates and memories under quantization: both ship
+      ``encoding.dequantize_rows`` of the same codes.
+    * **quant_accounting_exact** — realized sync bytes equal the
+      ``bucketed_message_bytes(..., quant)`` prediction (code words +
+      row-norm words, exact).
+    * **amortized_ratio_exact** — ``amortized_bytes_per_step`` scales
+      exactly 1/H for every H in ``hs``.
+    """
+    from repro.core.distributed import amortized_bytes_per_step
+
+    W = int(np.prod([mesh.shape[a] for a in ("pod", "data")]))
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(0), (16, 384)),
+            "b": jax.random.normal(jax.random.PRNGKey(1), (40,))}
+    plan = bk.make_plan(tree, cols=128, dense_below=64)
+    gs = jax.tree.map(lambda x: jnp.stack(
+        [x * (1 + 0.1 * i) + 0.01 * i for i in range(W)]), tree)
+    mem0 = tuple(
+        jax.random.normal(jax.random.PRNGKey(9 + b), (W,) + s.shape)
+        * (0.1 if s.kind == "sparse" else 0.0)
+        for b, s in enumerate(plan.buckets))
+    realized = {}
+
+    def run(cfg, accumulate=False, pod_ks=None, tag=None):
+        qk = (jax.random.PRNGKey(5) if cfg.quant is not None else None)
+
+        def sync(m_, g_):
+            kw = {}
+            if pod_ks is not None:
+                kw["pod_ks"] = pod_ks
+            if qk is not None:
+                kw["quant_key"] = qk
+            g0 = jax.tree.map(lambda x: x[0], g_)
+            if accumulate:
+                acc = bk.init_local_accum(plan)
+                acc = bk.accumulate_local(plan, acc, g0, jnp.float32(eta))
+                kw["grad_bufs"] = acc
+                upd, new_mem, nbytes = bucketed_sync_gradients(
+                    cfg, plan, jax.tree.map(lambda m: m[0], m_), None,
+                    jnp.float32(1.0), **kw)
+            else:
+                upd, new_mem, nbytes = bucketed_sync_gradients(
+                    cfg, plan, jax.tree.map(lambda m: m[0], m_), g0,
+                    jnp.float32(eta), **kw)
+            if tag is not None:
+                realized[tag] = nbytes
+            return upd, jax.tree.map(lambda m: m[None], new_mem)
+
+        wspec = jax.tree.map(lambda _: P(("pod", "data")), mem0)
+        gspec = jax.tree.map(lambda _: P(("pod", "data")), gs)
+        return shard_map(
+            sync, mesh=mesh, in_specs=(wspec, gspec),
+            out_specs=(jax.tree.map(lambda _: P(), tree), wspec))(mem0, gs)
+
+    base = dict(ratio=ratio, data_axes=("data",), bucketed=True,
+                bucket_cols=128)
+    from repro.core.distributed import PodConfig, WireConfig
+
+    # 1) H=1 accumulator routing is bitwise-invisible on every strategy
+    paths = {
+        "flat": SyncConfig(strategy="sparse_allgather",
+                           pod=PodConfig(axis="pod"),
+                           wire=WireConfig(wire="packed"), **base),
+        "hierarchical": SyncConfig(strategy="hierarchical",
+                                   pod=PodConfig(axis="pod",
+                                                 ratios=(1.0, 0.1)),
+                                   wire=WireConfig(wire="packed"), **base),
+        "pod_dynamic": SyncConfig(strategy="hierarchical",
+                                  pod=PodConfig(axis="pod", dynamic=True,
+                                                ratios=(1.0, 9 / 128)),
+                                  wire=WireConfig(wire="packed"), **base),
+    }
+    h1_ok = True
+    for name, cfg in paths.items():
+        pk = (jnp.asarray([1, 9], jnp.int32) if name == "pod_dynamic"
+              else None)
+        direct = run(cfg, accumulate=False, pod_ks=pk)
+        accum = run(cfg, accumulate=True, pod_ks=pk)
+        h1_ok = h1_ok and bitwise_equal(direct, accum)
+
+    # 2) quantized tier: conservation + packed/unpacked identity + bytes
+    cons_err = 0.0
+    bit_ok = True
+    acc_ok = True
+    for name, mk in (
+        ("flat", lambda w: SyncConfig(
+            strategy="sparse_allgather", pod=PodConfig(axis="pod"),
+            wire=WireConfig(wire=w, quant=quant), **base)),
+        ("hier", lambda w: SyncConfig(
+            strategy="hierarchical",
+            pod=PodConfig(axis="pod", ratios=(1.0, 0.1)),
+            wire=WireConfig(wire=w, quant=quant), **base)),
+    ):
+        out_p = run(mk("packed"), tag=f"{name}-packed")
+        out_u = run(mk("unpacked"))
+        bit_ok = bit_ok and bitwise_equal(out_p, out_u)
+        acc_ok = acc_ok and realized[f"{name}-packed"] == (
+            bucketed_message_bytes(mk("packed"), plan))
+        upd_bufs = bk.pack(plan, out_p[0], dtype=jnp.float32)
+        for b in range(len(plan.buckets)):
+            u_w = jnp.stack([
+                mem0[b][w] + eta * bk.pack(
+                    plan, jax.tree.map(lambda x, w=w: x[w], gs),
+                    dtype=jnp.float32)[b]
+                for w in range(W)])
+            lhs = jnp.mean(u_w, axis=0)
+            rhs = upd_bufs[b] + jnp.mean(out_p[1][b], axis=0)
+            cons_err = max(cons_err, float(jnp.max(jnp.abs(lhs - rhs))))
+
+    # 3) amortized byte accounting scales exactly 1/H
+    q = SyncConfig(strategy="sparse_allgather", pod=PodConfig(axis="pod"),
+                   wire=WireConfig(wire="packed", quant=quant), **base)
+    full = bucketed_message_bytes(q, plan)
+    ratio_ok = all(
+        amortized_bytes_per_step(
+            SyncConfig(strategy="sparse_allgather",
+                       pod=PodConfig(axis="pod"),
+                       wire=WireConfig(wire="packed", quant=quant),
+                       local_steps=h, **base),
+            plan) == full / h
+        for h in hs)
+    return {
+        "h1_accum_bitwise": bool(h1_ok),
+        "quant_conservation_max_err": cons_err,
+        "quant_bit_identical": bool(bit_ok),
+        "quant_accounting_exact": bool(acc_ok),
+        "amortized_ratio_exact": bool(ratio_ok),
+    }
+
+
 def repack_selfcheck(mesh, ratio: float = 0.05, eta: float = 0.3,
                      ks=(9, 4)) -> dict:
     """Probe the header-aware repack transport invariants on ``mesh``

@@ -9,12 +9,57 @@ Averaging (Thm 2.4): x_bar = (1/S_T) * sum_t w_t x_t with w_t = (a + t)^2.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+import math
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 Array = jax.Array
+
+
+def qsgd_variance_bound(d: int, s: int) -> float:
+    """QSGD Lemma 3.1 (Alistarh et al.): the s-level stochastic quantizer
+    is unbiased with relative variance
+    E||Q_s(x) - x||^2 <= beta ||x||^2, beta = min(d/s^2, sqrt(d)/s)."""
+    return min(d / float(s) ** 2, math.sqrt(d) / s)
+
+
+def composed_contraction(d: int, k: float,
+                         s: Optional[int] = None) -> float:
+    """Contraction factor delta of the composed compressor
+    ``Q_s ∘ top_k`` (Qsparse-local-SGD, Basu et al.):
+    E||C(x) - x||^2 <= (1 - delta) ||x||^2.
+
+    top_k alone keeps mass >= (k/d)||x||^2, so delta = k/d (paper
+    eq. (3)). Quantizing the k kept entries re-injects QSGD variance on
+    the kept mass only: with beta_k = min(k/s^2, sqrt(k)/s),
+
+        E||Q(top_k(x)) - x||^2
+          = E||Q(x_k) - x_k||^2 + ||x - x_k||^2     (Q unbiased on x_k)
+          <= beta_k ||x_k||^2 + (||x||^2 - ||x_k||^2)
+          = ||x||^2 - (1 - beta_k) ||x_k||^2,
+
+    giving delta = (k/d) * (1 - beta_k) — a strict contraction whenever
+    beta_k < 1, which is what keeps the error-feedback memory bounded
+    (Thm 2.4's (1-delta)/delta^2 residual term) under the composition.
+    ``s=None`` (no quantization) reduces to the paper's k/d."""
+    base = k / float(d)
+    if s is None:
+        return base
+    beta_k = qsgd_variance_bound(max(1, int(math.ceil(k))), s)
+    return base * max(0.0, 1.0 - beta_k)
+
+
+def local_steps_residual_factor(H: int) -> float:
+    """Scale of Thm 2.4's memory-residual term when syncing every H
+    steps: the committed displacement is the H-step accumulation
+    sum_h eta_h g_h, so the 4 eta^2 G^2 (1-delta)/delta^2 bound on
+    ||memory||^2 grows by H^2 (Qsparse-local-SGD's H-dependence; the
+    leading 1/(mu T) term is unchanged)."""
+    if H < 1:
+        raise ValueError(f"local_steps must be >= 1, got {H}")
+    return float(H) ** 2
 
 
 def theoretical_shift(d: int, k: float, alpha: float = 5.0) -> float:

@@ -72,6 +72,11 @@ class TrainConfig:
     # the k-padded wire (SyncConfig.pod_dynamic, forced on when enabled)
     # makes the live k a plain data input, so no step ever re-jits.
     pod_refresh: Optional[PodRefreshConfig] = None
+    # Base seed for the QSGD stochastic-rounding PRNG (WireConfig.quant):
+    # the step folds the step count in, each quantize stage folds its
+    # bucket/level/axis indices — two runs with the same seed draw the
+    # same rounding noise (reproducible quantized training).
+    quant_seed: int = 0
 
 
 def _eta_schedule(tc: TrainConfig):
@@ -177,6 +182,18 @@ def make_train_step(model, mesh, tc: TrainConfig):
     fixed by the bucket plan, so feeding a new schedule is a pure data
     change — the step never re-traces (``step._cache_size()`` stays 1).
     The static padded ceilings are exposed as ``step.pod_k_max``.
+
+    With ``tc.sync.local_steps = H > 1`` (Qsparse-local-SGD) the state
+    gains a bucket-space accumulator between memory and opt:
+
+        (params, memory, acc, opt, count, batch) -> (... same ...)
+
+    and TWO jitted functions come back: the returned ``step`` is the
+    sync step (communicates once, resets ``acc``) and ``step.accum``
+    is the local step (``acc += eta_t * pack(g_t)``, zero
+    communication). Call ``step.accum`` H-1 times, then ``step``.
+    With H == 1 the per-step path is returned literally unchanged —
+    bitwise identical to previous behavior when quantization is off.
     """
     cfg = model.cfg
     data_axes = (("pod",) if "pod" in mesh.axis_names else ()) + ("data",)
@@ -187,9 +204,8 @@ def make_train_step(model, mesh, tc: TrainConfig):
     plan = _bucket_plan(tc, pshapes)
     eta_fn = _eta_schedule(tc)
     sync_cfg = dataclasses.replace(
-        tc.sync,
+        tc.sync.with_pod(axis="pod" if "pod" in mesh.axis_names else None),
         data_axes=("data",),
-        pod_axis="pod" if "pod" in mesh.axis_names else None,
         strategy="dense" if tc.optimizer == "dense" else tc.sync.strategy,
     )
     worker = data_axes if len(data_axes) > 1 else data_axes[0]
@@ -201,6 +217,14 @@ def make_train_step(model, mesh, tc: TrainConfig):
             "sync.pod_dynamic (runtime pod k) requires sync.bucketed, "
             "strategy='hierarchical' and a (pod, data) mesh"
         )
+    H = max(1, int(sync_cfg.local_steps))
+    if H > 1 and plan is None:
+        raise ValueError(
+            "sync.local_steps > 1 requires sync.bucketed (the local "
+            "accumulator lives in bucket space)"
+        )
+    quant = sync_cfg.quant
+    sync_cfg.validate(plan) if plan is not None else sync_cfg.validate()
     pod_k_max = None
     if dyn:
         n_data_mesh = int(mesh.shape["data"])
@@ -229,14 +253,15 @@ def make_train_step(model, mesh, tc: TrainConfig):
         loss, metrics = model.loss(params, batch)
         return loss, metrics
 
-    def step_body(params, memory, opt, count, batch, pod_ks=None):
+    def _constrain_params(params):
         # params: full (model-auto) view; memory leaves (1, *shape) local
-        params = jax.tree.map(
+        return jax.tree.map(
             lambda p, s: jax.lax.with_sharding_constraint(
                 p, NamedSharding(mesh, s)),
             params, pspecs, is_leaf=None,
         )
-        mem_local = jax.tree.map(lambda m_: m_[0], memory)
+
+    def compute_grads(params, count, batch):
         tok = None
         moe_tok = None
         if tc.seq_shard_activations:
@@ -290,21 +315,24 @@ def make_train_step(model, mesh, tc: TrainConfig):
             eta = eta_fn(count)
         else:  # adam_compressed: memory accumulates raw gradients
             eta = jnp.asarray(1.0, jnp.float32)
-        up_bufs = None
-        if plan is not None and dspec is not None:
-            update, new_mem, _, up_bufs = bucketed_sync_gradients(
-                sync_cfg, plan, mem_local, grads, eta, return_bufs=True,
-                pod_ks=pod_ks,
-            )
-        elif plan is not None:
-            update, new_mem, _ = bucketed_sync_gradients(
-                sync_cfg, plan, mem_local, grads, eta, pod_ks=pod_ks
-            )
-        else:
-            update, new_mem, _ = sparse_sync_gradients(
-                sync_cfg, mem_local, grads, eta, col_axes,
-                specs=pspecs, mesh=mesh,
-            )
+        return grads, eta, metrics
+
+    def _quant_key(count):
+        # per-step rounding-noise key; the sync stages fold in bucket /
+        # level / axis indices on top (see distributed._fold_axes)
+        if quant is None:
+            return None
+        return jax.random.fold_in(
+            jax.random.PRNGKey(tc.quant_seed), count)
+
+    def _mean_metrics(metrics):
+        ax = data_axes if len(data_axes) > 1 else data_axes[0]
+        return {
+            "loss": jax.lax.pmean(metrics["xent"], ax),
+            "aux": jax.lax.pmean(metrics["aux"], ax),
+        }
+
+    def apply_optimizer(params, opt, count, update):
         if tc.optimizer in ("memsgd", "dense"):
             new_params = jax.tree.map(
                 lambda p, u: (p - u.astype(p.dtype)), params, update
@@ -341,18 +369,83 @@ def make_train_step(model, mesh, tc: TrainConfig):
             new_opt = {"mu": mu, "nu": nu}
         else:
             raise ValueError(tc.optimizer)
+        return new_params, new_opt
+
+    def step_body(params, memory, opt, count, batch, pod_ks=None):
+        params = _constrain_params(params)
+        mem_local = jax.tree.map(lambda m_: m_[0], memory)
+        grads, eta, metrics = compute_grads(params, count, batch)
+        qkey = _quant_key(count)
+        up_bufs = None
+        if plan is not None and dspec is not None:
+            update, new_mem, _, up_bufs = bucketed_sync_gradients(
+                sync_cfg, plan, mem_local, grads, eta, return_bufs=True,
+                pod_ks=pod_ks, quant_key=qkey,
+            )
+        elif plan is not None:
+            update, new_mem, _ = bucketed_sync_gradients(
+                sync_cfg, plan, mem_local, grads, eta, pod_ks=pod_ks,
+                quant_key=qkey,
+            )
+        else:
+            update, new_mem, _ = sparse_sync_gradients(
+                sync_cfg, mem_local, grads, eta, col_axes,
+                specs=pspecs, mesh=mesh,
+            )
+        new_params, new_opt = apply_optimizer(params, opt, count, update)
         new_memory = jax.tree.map(lambda m_: m_[None], new_mem)
-        loss_mean = jax.lax.pmean(metrics["xent"], data_axes
-                                  if len(data_axes) > 1 else data_axes[0])
-        out_metrics = {
-            "loss": loss_mean,
-            "aux": jax.lax.pmean(metrics["aux"], data_axes
-                                 if len(data_axes) > 1 else data_axes[0]),
-        }
-        ret = (new_params, new_memory, new_opt, count + 1, out_metrics)
+        ret = (new_params, new_memory, new_opt, count + 1,
+               _mean_metrics(metrics))
         if dspec is not None:
             # the gathered update is identical on every worker, so the
             # encoded wire buffers are replicated outputs (out_spec P())
+            from repro.launch import delta_stream as ds
+
+            ret += (tuple(ds.encode_delta_bufs(dspec, up_bufs)),)
+        return ret
+
+    def accum_body(params, memory, acc, opt, count, batch):
+        # local step h < H: fold eta_t * g_t into the bucket-space
+        # accumulator; no communication, params/memory/opt untouched
+        params = _constrain_params(params)
+        grads, eta, metrics = compute_grads(params, count, batch)
+        acc_local = tuple(a[0] for a in acc)
+        new_acc = tuple(
+            a[None]
+            for a in bk.accumulate_local(plan, acc_local, grads, eta)
+        )
+        return (params, memory, new_acc, opt, count + 1,
+                _mean_metrics(metrics))
+
+    def sync_body(params, memory, acc, opt, count, batch, pod_ks=None):
+        # local step h == H: finish the accumulator, then one sync of
+        # u = m + sum_h eta_h*g_h through top-k (-> QSGD quantize ->)
+        # the packed wire; memory absorbs BOTH the sparsification
+        # residual and the quantization error; accumulator resets
+        params = _constrain_params(params)
+        mem_local = jax.tree.map(lambda m_: m_[0], memory)
+        grads, eta, metrics = compute_grads(params, count, batch)
+        acc_local = tuple(a[0] for a in acc)
+        u_bufs = bk.accumulate_local(plan, acc_local, grads, eta)
+        qkey = _quant_key(count)
+        one = jnp.asarray(1.0, jnp.float32)
+        up_bufs = None
+        if dspec is not None:
+            update, new_mem, _, up_bufs = bucketed_sync_gradients(
+                sync_cfg, plan, mem_local, grads, one, return_bufs=True,
+                pod_ks=pod_ks, grad_bufs=u_bufs, quant_key=qkey,
+            )
+        else:
+            update, new_mem, _ = bucketed_sync_gradients(
+                sync_cfg, plan, mem_local, grads, one, pod_ks=pod_ks,
+                grad_bufs=u_bufs, quant_key=qkey,
+            )
+        new_params, new_opt = apply_optimizer(params, opt, count, update)
+        new_memory = jax.tree.map(lambda m_: m_[None], new_mem)
+        zero_acc = tuple(jnp.zeros_like(a) for a in acc)
+        ret = (new_params, new_memory, zero_acc, new_opt, count + 1,
+               _mean_metrics(metrics))
+        if dspec is not None:
             from repro.launch import delta_stream as ds
 
             ret += (tuple(ds.encode_delta_bufs(dspec, up_bufs)),)
@@ -384,22 +477,62 @@ def make_train_step(model, mesh, tc: TrainConfig):
     if dspec is not None:
         out_specs += (tuple(P() for _ in dspec.wires),)
 
-    def step(params, memory, opt, count, batch, *pod_ks):
-        # *pod_ks: exactly one (n_buckets,) int32 array on the dynamic
-        # path, nothing otherwise — one closure serves both so the
-        # specs can never diverge between them
-        sm = compat.shard_map(
-            step_body,
-            mesh=mesh,
-            in_specs=(pspec_P0, mem_manual, opt_in, P(),
-                      batch_specs(batch)) + ((P(),) if dyn else ()),
-            out_specs=out_specs,
-            axis_names=set(data_axes),
-            check_vma=False,
-        )
-        return sm(params, memory, opt, count, batch, *pod_ks)
+    if H == 1:
+        def step(params, memory, opt, count, batch, *pod_ks):
+            # *pod_ks: exactly one (n_buckets,) int32 array on the
+            # dynamic path, nothing otherwise — one closure serves both
+            # so the specs can never diverge between them
+            sm = compat.shard_map(
+                step_body,
+                mesh=mesh,
+                in_specs=(pspec_P0, mem_manual, opt_in, P(),
+                          batch_specs(batch)) + ((P(),) if dyn else ()),
+                out_specs=out_specs,
+                axis_names=set(data_axes),
+                check_vma=False,
+            )
+            return sm(params, memory, opt, count, batch, *pod_ks)
 
-    step = jax.jit(step, donate_argnums=(0, 1, 2))
+        step = jax.jit(step, donate_argnums=(0, 1, 2))
+    else:
+        # Qsparse-local-SGD: two jitted steps over shared closures. The
+        # accumulator rides next to the memory — same (W, rows, cols)
+        # bucket layout, same per-worker sharding — so the sync step's
+        # u = m + acc is plain bucket arithmetic.
+        acc_manual = tuple(P(worker) for _ in plan.buckets)
+        local_out = (pspec_P0, mem_manual, acc_manual, opt_in, P(),
+                     {"loss": P(), "aux": P()})
+        sync_out = local_out
+        if dspec is not None:
+            sync_out += (tuple(P() for _ in dspec.wires),)
+
+        def sync_step(params, memory, acc, opt, count, batch, *pod_ks):
+            sm = compat.shard_map(
+                sync_body,
+                mesh=mesh,
+                in_specs=(pspec_P0, mem_manual, acc_manual, opt_in, P(),
+                          batch_specs(batch)) + ((P(),) if dyn else ()),
+                out_specs=sync_out,
+                axis_names=set(data_axes),
+                check_vma=False,
+            )
+            return sm(params, memory, acc, opt, count, batch, *pod_ks)
+
+        def accum_step(params, memory, acc, opt, count, batch):
+            sm = compat.shard_map(
+                accum_body,
+                mesh=mesh,
+                in_specs=(pspec_P0, mem_manual, acc_manual, opt_in, P(),
+                          batch_specs(batch)),
+                out_specs=local_out,
+                axis_names=set(data_axes),
+                check_vma=False,
+            )
+            return sm(params, memory, acc, opt, count, batch)
+
+        step = jax.jit(sync_step, donate_argnums=(0, 1, 2, 3))
+        step.accum = jax.jit(accum_step, donate_argnums=(0, 1, 2, 3))
+    step.local_steps = H
     if dspec is not None:
         step.delta_spec = dspec  # static wire layout for replica decoders
     if pod_k_max is not None:
@@ -515,13 +648,11 @@ def _maybe_autotune_pod_ratios(model, mesh, tc: TrainConfig, plan, params,
     calib = calib or PodRatioCalibrator(model, plan, n_data)
     u_bufs = calib.u_bufs(params, first, tc.eta)
     ratios = _calibrate_pod_ratios(tc.sync, plan, u_bufs, n_data)
-    tc = dataclasses.replace(
-        tc, sync=dataclasses.replace(tc.sync, pod_ratios=ratios)
-    )
+    tc = dataclasses.replace(tc, sync=tc.sync.with_pod(ratios=ratios))
     from repro.core.distributed import bucketed_message_bytes
 
     lv = bucketed_message_bytes(
-        dataclasses.replace(tc.sync, pod_axis="pod"), plan, by_level=True,
+        tc.sync.with_pod(axis="pod"), plan, by_level=True,
         n_data=n_data,
     )
     print(
@@ -530,6 +661,20 @@ def _maybe_autotune_pod_ratios(model, mesh, tc: TrainConfig, plan, params,
         + f"  intra-pod {lv['intra']}B cross-pod {lv['cross']}B /step/worker"
     )
     return tc, itertools.chain([first], batches)
+
+
+def _cache_sizes(step, H: int):
+    """Combined jit-cache population of the step fn(s): the sync step
+    plus (at H > 1) its ``step.accum`` sibling. None when the runtime
+    doesn't expose ``_cache_size``."""
+    sizes = [step] + ([step.accum] if H > 1 else [])
+    total = 0
+    for f in sizes:
+        c = getattr(f, "_cache_size", None)
+        if not callable(c):
+            return None
+        total += int(c())
+    return total
 
 
 def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
@@ -570,12 +715,10 @@ def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
     refresh = tc.pod_refresh if (
         tc.pod_refresh is not None and tc.pod_refresh.enabled) else None
     if refresh is not None or pod_k_schedule is not None:
-        kw = {"pod_dynamic": True}
+        kw = {"dynamic": True}
         if refresh is not None and refresh.k_max_ratio is not None:
-            kw["pod_k_max_ratio"] = refresh.k_max_ratio
-        tc = dataclasses.replace(
-            tc, sync=dataclasses.replace(tc.sync, **kw)
-        )
+            kw["k_max_ratio"] = refresh.k_max_ratio
+        tc = dataclasses.replace(tc, sync=tc.sync.with_pod(**kw))
     dyn = tc.sync.pod_dynamic
     if dyn and (plan is None or tc.sync.strategy != "hierarchical"
                 or "pod" not in mesh.axis_names):
@@ -602,6 +745,18 @@ def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
     if oshard != ():
         opt = jax.device_put(opt, oshard)
     step = make_train_step(model, mesh, tc)
+    H = int(getattr(step, "local_steps", 1))
+    acc = None
+    if H > 1:
+        # bucket-space local accumulator: same (W, rows, cols) layout
+        # and per-worker sharding as the error-feedback memory
+        data_axes = (("pod",) if "pod" in mesh.axis_names else ()) + ("data",)
+        W = _worker_count(mesh, data_axes)
+        acc = jax.device_put(
+            tuple(jnp.zeros((W,) + spec.shape, jnp.float32)
+                  for spec in plan.buckets),
+            mshard,
+        )
     pod_ks = live_ks = k_caps = None
     sched = dict(pod_k_schedule) if pod_k_schedule is not None else None
     if dyn:
@@ -623,6 +778,11 @@ def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
     # typically infinite) stream — a bare `enumerate + break` would pull
     # and discard one extra batch per run
     for i, batch in enumerate(take(batches, n_steps)):
+        # Qsparse-local-SGD cadence: steps i with (i+1) % H != 0 only
+        # accumulate locally; step i with (i+1) % H == 0 closes sync
+        # round j = i // H (H == 1: every step syncs, j == i)
+        j = i // H
+        is_sync = (i + 1) % H == 0
         if dyn and sched is not None and i in sched:
             # clamp to the step's static padded ceilings HOST-SIDE, so
             # the recorded/applied schedule and the effective-byte
@@ -634,8 +794,8 @@ def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
             )
             pod_ks = jnp.asarray(live_ks, jnp.int32)
             applied_schedule.append((i, live_ks))
-        elif (dyn and sched is None and refresh is not None and i > 0
-              and i % refresh.every == 0):
+        elif (dyn and sched is None and refresh is not None and is_sync
+              and j > 0 and j % refresh.every == 0):
             # live re-calibration (an explicit pod_k_schedule REPLACES
             # it entirely — a replay must stay deterministic even past
             # the recorded entries): read-only on params/memory (fully
@@ -648,7 +808,11 @@ def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
                 if tc.optimizer in ("memsgd", "memsgd_momentum", "dense")
                 else 1.0
             )
-            u_bufs = calib.u_bufs(params, batch, eta_now, memory=memory)
+            # at H > 1 the sync consumes u = m + acc (+ eta*g): fold the
+            # live local accumulator into the calibration view of memory
+            mem_live = (memory if acc is None else
+                        tuple(m + a for m, a in zip(memory, acc)))
+            u_bufs = calib.u_bufs(params, batch, eta_now, memory=mem_live)
             ratios = _calibrate_pod_ratios(
                 tc.sync, plan, u_bufs, n_data,
                 mass_target=refresh.mass_target, k_caps=k_caps,
@@ -660,7 +824,7 @@ def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
             )
             pod_ks = jnp.asarray(live_ks, jnp.int32)
             lv = bucketed_message_bytes(
-                dataclasses.replace(tc.sync, pod_axis="pod"), plan,
+                tc.sync.with_pod(axis="pod"), plan,
                 by_level=True, n_data=n_data, pod_ks=live_ks,
             )
             print(
@@ -671,14 +835,28 @@ def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
             applied_schedule.append((i, live_ks))
             if refresh_cb is not None:
                 refresh_cb(i, live_ks)
-        out = (step(params, memory, opt, count, batch, pod_ks)
-               if dyn else step(params, memory, opt, count, batch))
+        if H > 1:
+            if is_sync:
+                out = (step(params, memory, acc, opt, count, batch, pod_ks)
+                       if dyn else
+                       step(params, memory, acc, opt, count, batch))
+            else:
+                out = step.accum(params, memory, acc, opt, count, batch)
+        else:
+            out = (step(params, memory, opt, count, batch, pod_ks)
+                   if dyn else step(params, memory, opt, count, batch))
         if diagnostics is not None:
-            cache = getattr(step, "_cache_size", None)
             diagnostics.setdefault("step_cache_sizes", []).append(
-                int(cache()) if callable(cache) else None
+                _cache_sizes(step, H)
             )
-        if tc.emit_deltas:
+        if H > 1:
+            if tc.emit_deltas and is_sync:
+                params, memory, acc, opt, count, metrics, delta = out
+                if delta_sink is not None:
+                    delta_sink(i, delta)
+            else:
+                params, memory, acc, opt, count, metrics = out
+        elif tc.emit_deltas:
             params, memory, opt, count, metrics, delta = out
             if delta_sink is not None:
                 delta_sink(i, delta)
@@ -698,22 +876,71 @@ def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
             else:
                 checkpointer.save(i + 1, {"params": params})
     if diagnostics is not None:
-        cache = getattr(step, "_cache_size", None)
-        diagnostics["step_cache_size"] = (
-            int(cache()) if callable(cache) else None
-        )
+        diagnostics["step_cache_size"] = _cache_sizes(step, H)
         diagnostics["pod_refresh_schedule"] = applied_schedule
         diagnostics["initial_pod_ks"] = initial_pod_ks
-        # steady-state compile check: entries added after the second
-        # step (the first call traces; the second may re-trace once as
-        # donated/committed shardings settle) are REAL recompiles — a
-        # live pod-k refresh must never add one
+        # steady-state compile check: entries added after the first full
+        # sync round settles are REAL recompiles — a live pod-k refresh
+        # must never add one. At H == 1 that's after the second step
+        # (the first call traces; the second may re-trace once as
+        # donated/committed shardings settle); at H > 1 both the accum
+        # and sync steps need their trace + settle, so the baseline sits
+        # at the end of the second round (index 2H - 1)
         sizes = diagnostics.get("step_cache_sizes") or []
         diagnostics["steady_state_recompiles"] = (
-            (sizes[-1] - sizes[min(1, len(sizes) - 1)])
+            (sizes[-1] - sizes[min(2 * H - 1, len(sizes) - 1)])
             if sizes and sizes[0] is not None else None
         )
     return params, memory, opt, count, history
+
+
+def _sync_from_args(ap, args) -> SyncConfig:
+    """CLI arg assembly for the sync config, routed through the grouped
+    SyncConfig API. With ``--preset`` the named ``SyncConfig.preset``
+    bundle is the base and only flags the user set EXPLICITLY (value
+    differs from the argparse default) override it; without a preset
+    every flag lands in the grouped constructors directly."""
+    from repro.core.distributed import (
+        PodConfig,
+        TransportConfig,
+        WireConfig,
+    )
+
+    bucketed = (args.bucketed or args.emit_deltas or args.ckpt_wire
+                or args.pod_refresh_every > 0 or args.local_steps > 1
+                or args.wire_quant is not None)
+    overlap = None if args.overlap == "auto" else args.overlap == "on"
+    if args.preset is not None:
+        # flat override keys are the blessed warning-free preset inputs
+        overrides = {}
+        for arg, key in (("ratio", "ratio"), ("strategy", "strategy"),
+                         ("local_steps", "local_steps"), ("wire", "wire"),
+                         ("wire_quant", "quant"),
+                         ("pod_ratio", "pod_ratio"),
+                         ("pod_mass_target", "pod_mass_target"),
+                         ("pod_k_max_ratio", "pod_k_max_ratio"),
+                         ("byte_budget", "byte_budget"),
+                         ("repack", "repack")):
+            if getattr(args, arg) != ap.get_default(arg):
+                overrides[key] = getattr(args, arg)
+        if args.overlap != ap.get_default("overlap"):
+            overrides["overlap"] = overlap
+        if bucketed:
+            overrides["bucketed"] = True
+        return SyncConfig.preset(args.preset, **overrides)
+    return SyncConfig(
+        ratio=args.ratio,
+        strategy=args.strategy,
+        local_steps=args.local_steps,
+        bucketed=bucketed,
+        wire=WireConfig(wire=args.wire, quant=args.wire_quant),
+        pod=PodConfig(ratio=args.pod_ratio,
+                      mass_target=args.pod_mass_target,
+                      k_max_ratio=args.pod_k_max_ratio),
+        transport=TransportConfig(repack=args.repack,
+                                  byte_budget=args.byte_budget,
+                                  overlap=overlap),
+    )
 
 
 def main():
@@ -783,6 +1010,29 @@ def main():
                          "invariant 11)")
     ap.add_argument("--bucketed", action="store_true",
                     help="flat-buffer bucketed sync (repro.core.buckets)")
+    ap.add_argument("--preset", default=None,
+                    choices=("dense", "topk", "qsparse_local",
+                             "pod_budgeted"),
+                    help="start from a named SyncConfig.preset; other "
+                         "sync flags given EXPLICITLY on the command "
+                         "line override the preset's fields")
+    ap.add_argument("--local-steps", type=int, default=1,
+                    help="Qsparse-local-SGD: take H uncommunicated local "
+                         "steps (accumulating eta_t*g_t in bucket space "
+                         "next to the error memory), then sync ONCE "
+                         "through top-k (+ optional --wire-quant) — "
+                         "cross-worker bytes/step shrink ~1/H (implies "
+                         "--bucketed; 1 = classic per-step sync)")
+    ap.add_argument("--wire-quant", type=int, default=None,
+                    help="QSGD stochastic-rounding quantization level s "
+                         "for the packed sparse wire: values ship as one "
+                         "f32 row norm + (1+ceil(log2(s+1)))-bit codes; "
+                         "memory absorbs the quantization error (implies "
+                         "--bucketed; requires --wire packed for byte "
+                         "savings)")
+    ap.add_argument("--quant-seed", type=int, default=0,
+                    help="base PRNG seed for the QSGD rounding noise "
+                         "(step count folded in per step)")
     ap.add_argument("--wire", default="unpacked",
                     choices=("unpacked", "packed"),
                     help="sync wire format (repro.core.encoding)")
@@ -847,24 +1097,13 @@ def main():
 
         refresh = PodRefreshConfig(every=args.pod_refresh_every,
                                    k_max_ratio=args.pod_k_max_ratio)
+    sync = _sync_from_args(ap, args)
     tc = TrainConfig(optimizer=args.optimizer, eta=args.eta,
                      emit_deltas=args.emit_deltas,
                      pod_autotune=not args.no_pod_autotune,
                      pod_refresh=refresh,
-                     sync=SyncConfig(ratio=args.ratio,
-                                     strategy=args.strategy,
-                                     wire=args.wire,
-                                     overlap=(None if args.overlap == "auto"
-                                              else args.overlap == "on"),
-                                     pod_ratio=args.pod_ratio,
-                                     pod_mass_target=args.pod_mass_target,
-                                     pod_k_max_ratio=args.pod_k_max_ratio,
-                                     byte_budget=args.byte_budget,
-                                     repack=args.repack,
-                                     bucketed=args.bucketed
-                                     or args.emit_deltas
-                                     or args.ckpt_wire
-                                     or args.pod_refresh_every > 0))
+                     quant_seed=args.quant_seed,
+                     sync=sync)
     batches = ShardedBatcher(
         mesh, token_batches(cfg.vocab_size, args.batch, args.seq, seed=0),
         batch_axes=batch_axes,

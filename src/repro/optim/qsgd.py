@@ -1,4 +1,5 @@
-"""QSGD (Alistarh et al., NIPS 2017) — the paper's quantization baseline.
+"""QSGD (Alistarh et al., NIPS 2017) — the paper's quantization baseline,
+and the quantizer half of the Qsparse-local-SGD composition.
 
 QSGD quantizes each gradient coordinate to one of s levels of |g|/||g||_2
 with stochastic rounding so that the quantized vector is an UNBIASED
@@ -9,31 +10,62 @@ Q_s(g)_i = ||g||_2 * sign(g_i) * xi_i(g, s)
 
 where xi_i = (l+1)/s with probability |g_i|/||g|| * s - l, else l/s,
 with l = floor(|g_i|/||g|| * s).
+
+``quantize_rows`` is the bucket-space form: normalization is PER ROW of
+an (..., C) buffer (so it composes with the (R, C) bucket layout and the
+top-k's (rows, k) selections), the PRNG key is a threaded argument (no
+python-side seed state — callers fold step count / bucket / worker into
+the key themselves), and the output is the wire-code representation of
+``core.encoding``'s quantized tier: ``(level << 1) | sign_bit`` plus the
+f32 row norm. Dequantization (``encoding.dequantize_rows``) is the
+single shared formula, so the sender's own-contribution densify, the
+in-jit decode, and the host repack all see bit-identical values — the
+error-feedback memory absorbs exactly the quantization error that ships.
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple
+from typing import Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.encoding import dequantize_rows
 from repro.optim.base import GradientTransformation
 
 Array = jax.Array
 Schedule = Callable[[Array], Array]
 
 
-def qsgd_quantize(g: Array, s: int, key: Array) -> Array:
-    """Unbiased s-level stochastic quantization of a flat vector."""
-    norm = jnp.linalg.norm(g)
+def quantize_rows(vals: Array, s: int, key: Array) -> Tuple[Array, Array]:
+    """Stochastic s-level quantization of (..., C) rows -> (norms (...,),
+    codes (..., C) int32).
+
+    Unbiased per entry: E[dequantize_rows(norms, codes, s)] == vals.
+    jit/vmap/shard_map-safe — pure tensor ops on a threaded ``key``.
+    Sign and level are coded separately, so an exact -0.0 input (the
+    runtime-k padded tail) maps to code 1 = (level 0, sign 1), which
+    dequantizes back to -0.0: masking survives quantization. A zero-norm
+    row emits all-zero levels (its entries are all ±0 already)."""
+    v = vals.astype(jnp.float32)
+    norm = jnp.sqrt(jnp.sum(jnp.square(v), axis=-1))
     safe = jnp.where(norm > 0, norm, 1.0)
-    r = jnp.abs(g) / safe * s  # in [0, s]
+    r = jnp.abs(v) / safe[..., None] * s  # in [0, s]
     lo = jnp.floor(r)
-    p_up = r - lo  # probability of rounding up
-    up = jax.random.bernoulli(key, jnp.clip(p_up, 0.0, 1.0), shape=g.shape)
-    level = (lo + up.astype(lo.dtype)) / s
-    q = norm * jnp.sign(g) * level
-    return jnp.where(norm > 0, q, jnp.zeros_like(g))
+    p_up = jnp.clip(r - lo, 0.0, 1.0)
+    up = jax.random.bernoulli(key, p_up, shape=v.shape)
+    level = jnp.minimum(lo + up.astype(jnp.float32), float(s))
+    sign = jnp.signbit(v).astype(jnp.int32)
+    codes = (level.astype(jnp.int32) << 1) | sign
+    return norm, codes
+
+
+def qsgd_quantize(g: Array, s: int, key: Array) -> Array:
+    """Unbiased s-level stochastic quantization (quantize + dequantize).
+
+    Rows are the trailing axis; pass a 1-D vector for the paper's
+    whole-vector normalization."""
+    norm, codes = quantize_rows(g, s, key)
+    return dequantize_rows(norm, codes, s).astype(g.dtype)
 
 
 class QSGDState(NamedTuple):

@@ -69,6 +69,19 @@ BUDGET = {
               "transport_accounting_exact": True,
               "refresh_within_budget": True, "zero_recompiles": True},
 }
+LOCAL = {
+    "accounting": {"scaling_exact_one_over_h": True,
+                   "quant_value_compression": 2.81,
+                   "amortized_bytes_per_step": {"1": 4224.0, "2": 2112.0,
+                                                "4": 1056.0, "8": 528.0}},
+    "smoke": {"h1_accum_bitwise": True, "quant_bit_identical": True,
+              "quant_accounting_exact": True,
+              "amortized_ratio_exact": True, "bytes_scaling_exact": True,
+              "all_converge": True, "zero_recompiles": True,
+              "quant_conservation_max_err": 3.1e-7,
+              "runs": {"1": {"init_loss": 6.9, "final_loss": 4.1},
+                       "8": {"init_loss": 6.9, "final_loss": 5.2}}},
+}
 
 
 def test_identical_payloads_pass():
@@ -79,6 +92,7 @@ def test_identical_payloads_pass():
     assert gate.check_refresh(REFRESH, copy.deepcopy(REFRESH), 1.15) == []
     assert gate.check_overlap(OVERLAP, copy.deepcopy(OVERLAP), 1.15) == []
     assert gate.check_budget(BUDGET, copy.deepcopy(BUDGET), 1.15) == []
+    assert gate.check_local(LOCAL, copy.deepcopy(LOCAL), 1.15) == []
 
 
 def test_refresh_regressions_fail():
@@ -176,6 +190,56 @@ def test_budget_regressions_fail():
     del fresh5["transport"]["byte_ratio_realized_vs_accounted"]
     assert any("missing" in e
                for e in gate.check_budget(BUDGET, fresh5, 1.15))
+
+
+def test_local_regressions_fail():
+    # every correctness bit is load-bearing
+    for path, flag in [("accounting", "scaling_exact_one_over_h"),
+                       ("smoke", "h1_accum_bitwise"),
+                       ("smoke", "quant_bit_identical"),
+                       ("smoke", "quant_accounting_exact"),
+                       ("smoke", "amortized_ratio_exact"),
+                       ("smoke", "bytes_scaling_exact"),
+                       ("smoke", "all_converge"),
+                       ("smoke", "zero_recompiles")]:
+        fresh = copy.deepcopy(LOCAL)
+        fresh[path][flag] = False
+        assert any(flag in e
+                   for e in gate.check_local(LOCAL, fresh, 1.15)), flag
+    # the quantized wire's compression edge shrinking (or inverting)
+    fresh2 = copy.deepcopy(LOCAL)
+    fresh2["accounting"]["quant_value_compression"] = 2.0
+    assert any("quant_value_compression" in e
+               for e in gate.check_local(LOCAL, fresh2, 1.15))
+    fresh2["accounting"]["quant_value_compression"] = 0.9
+    base2 = copy.deepcopy(LOCAL)
+    base2["accounting"]["quant_value_compression"] = 0.9
+    assert any("<= 1.0" in e
+               for e in gate.check_local(base2, fresh2, 1.15))
+    # quantized mass conservation blowing past the float bound fails
+    fresh3 = copy.deepcopy(LOCAL)
+    fresh3["smoke"]["quant_conservation_max_err"] = 1e-3
+    assert any("quant_conservation_max_err" in e
+               for e in gate.check_local(LOCAL, fresh3, 1.15))
+    # a tracked key going missing fails
+    fresh4 = copy.deepcopy(LOCAL)
+    del fresh4["smoke"]["quant_conservation_max_err"]
+    assert any("missing" in e
+               for e in gate.check_local(LOCAL, fresh4, 1.15))
+
+
+def test_local_headline_in_summary(tmp_path):
+    basedir, freshdir = tmp_path / "base", tmp_path / "fresh"
+    basedir.mkdir(), freshdir.mkdir()
+    (basedir / "BENCH_local.json").write_text(json.dumps(LOCAL))
+    (freshdir / "BENCH_local.json").write_text(json.dumps(LOCAL))
+    out = tmp_path / "summary.md"
+    with open(out, "w") as fh:
+        gate.write_summary(str(basedir), str(freshdir), [], fh)
+    text = out.read_text()
+    assert "**Qsparse-local-SGD:**" in text
+    assert "4224B at H=1 -> 528B at H=8" in text
+    assert "x2.81 smaller" in text
 
 
 def test_budget_headline_in_summary(tmp_path):

@@ -1,0 +1,144 @@
+"""Quantized wire tier tests (repro.core.encoding quant=s +
+repro.optim.qsgd.quantize_rows): round-trip, byte accounting, repack,
+and the -0.0 masking identity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import encoding as enc
+from repro.optim.qsgd import quantize_rows
+
+
+def _codes(rows, k, s, seed=0):
+    """Random valid wire codes + norms for an (rows, k) selection."""
+    kv, kn, kq = jax.random.split(jax.random.PRNGKey(seed), 3)
+    vals = jax.random.normal(kv, (rows, k))
+    norms, codes = quantize_rows(vals, s, kq)
+    return norms, codes
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    rows=st.integers(min_value=1, max_value=7),
+    # non-pow2 cols positions sit at the fallback sweep's SPREAD
+    # sample indices (see test_wire_codec.py)
+    cols=st.sampled_from([1024, 17, 1, 100, 3, 2, 1000, 700]),
+    s=st.sampled_from([1, 3, 15, 255, 32767]),
+)
+def test_quant_roundtrip_property(rows, cols, s):
+    """decode(encode(codes, idx, norms)) == dequantize_rows(norms,
+    codes, s) BITWISE, and the accounted bytes equal the realized
+    buffer size, for s in {1, 3, 15, ...} and non-power-of-two cols."""
+    k = max(1, cols // 3)
+    norms, codes = _codes(rows, k, s, seed=rows * cols + s)
+    idx = jax.random.randint(
+        jax.random.PRNGKey(1), (rows, k), 0, cols
+    ).astype(jnp.int32)
+    spec = enc.WireSpec(rows, cols, k, "float32", quant=s)
+    # the encode is bit-exact under jit (pure integer packing); the
+    # DEQUANT comparison stays eager — XLA may reassociate
+    # norm*(level/s) across a jit boundary, and the in-jit bitwise
+    # claim (decode == own-contribution densify inside ONE jitted
+    # sync) is covered by core.selfcheck.local_quant_selfcheck
+    buf_jit = jax.jit(lambda c, i, n: enc.encode(spec, c, i, norms=n))(
+        codes, idx, norms)
+    buf = enc.encode(spec, codes, idx, norms=norms)
+    assert np.array_equal(np.asarray(buf_jit), np.asarray(buf))
+    assert buf.shape == (spec.words,)
+    # accounting == realized bytes
+    assert buf.nbytes == enc.message_nbytes(
+        rows, cols, k, "float32", wire="packed", quant=s)
+    v2, i2 = enc.decode(spec, buf)
+    np.testing.assert_array_equal(np.asarray(i2), np.asarray(idx))
+    want = np.asarray(enc.dequantize_rows(norms, codes, s))
+    got = np.asarray(v2)
+    assert np.array_equal(got.view(np.uint8), want.view(np.uint8))
+    # the raw reader hands back the exact code/norm stream
+    n3, c3, i3 = enc.decode_quant(spec, buf)
+    np.testing.assert_array_equal(np.asarray(c3), np.asarray(codes))
+    np.testing.assert_array_equal(np.asarray(i3), np.asarray(idx))
+    assert np.array_equal(np.asarray(n3).view(np.uint8),
+                          np.asarray(norms).view(np.uint8))
+
+
+def test_quant_code_bits_and_value_section():
+    assert enc.quant_code_bits(1) == 2   # ternary: sign + 1 level bit
+    assert enc.quant_code_bits(15) == 5
+    assert enc.quant_code_bits(255) == 9
+    # value section = one f32 norm word + packed codes
+    spec = enc.WireSpec(4, 100, 10, "float32", quant=15)
+    assert spec.value_words == 1 + -(-10 * 5 // 32)
+
+
+def test_quant_negative_zero_identity():
+    """A -0.0 input (the runtime-k padded tail) survives quantization:
+    code 1 dequantizes to exactly -0.0, so decode+scatter-add is a
+    no-op on padded slots."""
+    vals = jnp.array([[1.0, -0.0, 0.0, -2.0]])
+    norms, codes = quantize_rows(vals, 15, jax.random.PRNGKey(0))
+    assert int(codes[0, 1]) == 1
+    deq = np.asarray(enc.dequantize_rows(norms, codes, 15))
+    assert deq[0, 1] == 0.0 and np.signbit(deq[0, 1])
+    assert deq[0, 2] == 0.0 and not np.signbit(deq[0, 2])
+
+
+def test_quantize_rows_levels_and_unbiasedness():
+    """Levels stay in [0, s]; the stochastic rounding is unbiased —
+    the mean dequantized value over many keys approaches the input."""
+    s = 7
+    vals = jax.random.normal(jax.random.PRNGKey(3), (4, 64))
+    norms, codes = quantize_rows(vals, s, jax.random.PRNGKey(0))
+    levels = np.asarray(codes >> 1)
+    assert levels.min() >= 0 and levels.max() <= s
+    acc = np.zeros(vals.shape, np.float64)
+    N = 200
+    for i in range(N):
+        n, c = quantize_rows(vals, s, jax.random.PRNGKey(i))
+        acc += np.asarray(enc.dequantize_rows(n, c, s), np.float64)
+    err = np.abs(acc / N - np.asarray(vals, np.float64))
+    # MC error ~ norm/(s*sqrt(N)); allow 5 sigma-ish slack
+    tol = 5.0 * float(norms.max()) / (s * np.sqrt(N))
+    assert err.max() < tol
+
+
+def test_quant_zero_norm_row():
+    norms, codes = quantize_rows(jnp.zeros((2, 8)), 15,
+                                 jax.random.PRNGKey(0))
+    assert float(jnp.max(jnp.abs(norms))) == 0.0
+    assert int(jnp.max(codes >> 1)) == 0
+
+
+def test_quant_repack_repad_bitwise():
+    """Header-aware repack of a k-padded QUANTIZED message: the
+    compacted buffer re-expands bitwise, and its bytes track the live
+    k through the quantized accounting."""
+    rows, cols, k_pad, live, s = 3, 257, 24, 5, 15
+    norms, codes = _codes(rows, k_pad, s, seed=9)
+    # contract-ordered: live pairs first, (-0.0, 0) identity tail
+    codes = jnp.concatenate(
+        [codes[:, :live], jnp.ones((rows, k_pad - live), jnp.int32)],
+        axis=1)
+    idx = jnp.concatenate(
+        [jax.random.randint(jax.random.PRNGKey(2), (rows, live), 0, cols),
+         jnp.zeros((rows, k_pad - live), jnp.int32)],
+        axis=1).astype(jnp.int32)
+    spec = enc.WireSpec(rows, cols, k_pad, "float32", quant=s)
+    buf = enc.encode(spec, codes, idx, live_n=live, norms=norms)
+    small_spec, small = enc.repack(spec, buf)
+    assert small_spec.k == live and small_spec.quant == s
+    assert small.nbytes == enc.message_nbytes(
+        rows, cols, live, "float32", wire="packed", quant=s)
+    back = enc.repad(spec, small_spec, small)
+    assert np.array_equal(np.asarray(back), np.asarray(buf))
+
+
+def test_quant_requires_sparse_f32():
+    with pytest.raises(ValueError):
+        enc.WireSpec(2, 8, 2, "bfloat16", quant=15)
+    with pytest.raises(ValueError):
+        enc.WireSpec(2, 8, 2, "float32", kind="dense", quant=15)
+    with pytest.raises(ValueError):
+        enc.WireSpec(2, 8, 2, "float32", quant=1 << 16)  # > _QUANT_MAX

@@ -1,0 +1,219 @@
+"""Grouped SyncConfig API tests: nested sub-configs, the legacy flat
+keyword shim, presets and the cross-flag validate() matrix
+(repro.core.distributed)."""
+import contextlib
+import dataclasses
+import warnings
+
+import pytest
+
+from repro.core import buckets as bk
+from repro.core.distributed import (
+    PodConfig,
+    SyncConfig,
+    TransportConfig,
+    WireConfig,
+)
+
+
+@contextlib.contextmanager
+def _no_deprecation():
+    """Context that turns any DeprecationWarning into a failure."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        yield
+
+
+# ---------------------------------------------------------------------------
+# grouped construction + compat properties
+# ---------------------------------------------------------------------------
+
+
+def test_grouped_construction_is_warning_free():
+    with _no_deprecation():
+        cfg = SyncConfig(
+            strategy="hierarchical", ratio=0.01, bucketed=True,
+            local_steps=4,
+            pod=PodConfig(ratio=0.1, dynamic=True, axis="pod"),
+            wire=WireConfig(wire="packed", quant=15),
+            transport=TransportConfig(repack=True, byte_budget=4096),
+        )
+    assert cfg.pod.ratio == 0.1 and cfg.pod.dynamic and cfg.pod.axis == "pod"
+    assert cfg.wire_cfg.wire == "packed" and cfg.wire_cfg.quant == 15
+    assert cfg.transport.repack and cfg.transport.byte_budget == 4096
+    assert cfg.local_steps == 4
+
+
+def test_flat_read_properties_mirror_groups():
+    cfg = SyncConfig(
+        pod=PodConfig(ratio=0.2, ratios=(0.1, 0.3), mass_target=0.8,
+                      dynamic=True, k_max_ratio=0.5, axis="pod"),
+        wire=WireConfig(wire="packed", value_dtype="bfloat16", quant=None),
+        transport=TransportConfig(repack=True, byte_budget=1024,
+                                  overlap=True),
+        strategy="hierarchical", bucketed=True,
+    )
+    assert cfg.pod_ratio == 0.2
+    assert cfg.pod_ratios == (0.1, 0.3)
+    assert cfg.pod_mass_target == 0.8
+    assert cfg.pod_dynamic is True
+    assert cfg.pod_k_max_ratio == 0.5
+    assert cfg.pod_axis == "pod"
+    assert cfg.wire == "packed"
+    assert cfg.value_dtype == "bfloat16"
+    assert cfg.quant is None
+    assert cfg.repack is True
+    assert cfg.byte_budget == 1024
+    assert cfg.overlap is True
+
+
+def test_legacy_flat_kwargs_warn_and_land_in_groups():
+    with pytest.warns(DeprecationWarning, match="grouped"):
+        cfg = SyncConfig(ratio=0.01, bucketed=True, wire="packed",
+                         pod_ratio=0.1, repack=False, byte_budget=None)
+    assert cfg.wire_cfg.wire == "packed"
+    assert cfg.pod.ratio == 0.1
+
+
+def test_unknown_kwarg_raises_typeerror():
+    with pytest.raises(TypeError):
+        SyncConfig(ratio=0.01, not_a_field=3)
+
+
+def test_replace_roundtrips_groups():
+    cfg = SyncConfig(strategy="hierarchical", bucketed=True,
+                     pod=PodConfig(ratio=0.1, axis="pod"),
+                     wire=WireConfig(wire="packed"))
+    with _no_deprecation():
+        cfg2 = dataclasses.replace(cfg, ratio=0.5)
+    assert cfg2.ratio == 0.5
+    assert cfg2.pod == cfg.pod
+    assert cfg2.wire_cfg == cfg.wire_cfg
+    assert cfg2.transport == cfg.transport
+
+
+def test_with_helpers_are_warning_free():
+    cfg = SyncConfig(strategy="hierarchical", bucketed=True)
+    with _no_deprecation():
+        cfg = cfg.with_pod(axis="pod", dynamic=True)
+        cfg = cfg.with_wire(wire="packed")
+        cfg = cfg.with_transport(repack=True)
+    assert cfg.pod_axis == "pod" and cfg.pod_dynamic
+    assert cfg.wire == "packed" and cfg.repack
+
+
+def test_wire_keyword_double_duty_conflict_raises():
+    with pytest.raises(TypeError):
+        SyncConfig(wire=WireConfig(wire="packed"),
+                   wire_cfg=WireConfig(wire="packed"))
+
+
+# ---------------------------------------------------------------------------
+# presets
+# ---------------------------------------------------------------------------
+
+
+def test_presets_exist_and_validate():
+    with _no_deprecation():
+        assert SyncConfig.preset("dense").strategy == "dense"
+        topk = SyncConfig.preset("topk")
+        assert topk.bucketed and topk.wire == "packed"
+        q = SyncConfig.preset("qsparse_local")
+        assert q.local_steps > 1 and q.quant is not None
+        q.validate()
+        pb = SyncConfig.preset("pod_budgeted")
+        assert pb.strategy == "hierarchical" and pb.pod_dynamic
+        assert pb.repack
+        # the launcher fills the pod axis in from the mesh
+        pb.with_pod(axis="pod").validate()
+
+
+def test_preset_flat_overrides_are_warning_free():
+    with _no_deprecation():
+        cfg = SyncConfig.preset("qsparse_local", quant=7, local_steps=2,
+                                ratio=0.05)
+    assert cfg.quant == 7 and cfg.local_steps == 2 and cfg.ratio == 0.05
+
+
+def test_unknown_preset_raises():
+    with pytest.raises(ValueError, match="unknown SyncConfig preset"):
+        SyncConfig.preset("nope")
+
+
+# ---------------------------------------------------------------------------
+# validate() named-error matrix
+# ---------------------------------------------------------------------------
+
+
+def _valid_quant():
+    return SyncConfig(bucketed=True, wire=WireConfig(wire="packed",
+                                                     quant=15))
+
+
+@pytest.mark.parametrize(
+    "cfg_kw, match",
+    [
+        (dict(strategy="ring"), "unknown sync strategy"),
+        (dict(local_steps=0), "local_steps must be >= 1"),
+        (dict(local_steps=2), "local_steps > 1 requires the bucketed"),
+        (dict(bucketed=True, wire=WireConfig(quant=0)),
+         "quant must be >= 1"),
+        (dict(strategy="dense", bucketed=True, wire=WireConfig(quant=15)),
+         "dense all-reduce strategy has no quantize stage"),
+        (dict(wire=WireConfig(quant=15)),
+         "quant requires the bucketed engine"),
+        (dict(bucketed=True,
+              wire=WireConfig(value_dtype="bfloat16", quant=15)),
+         "already-rounded values"),
+        (dict(pod=PodConfig(dynamic=True)),
+         "PodConfig.dynamic .* requires the bucketed"),
+        (dict(strategy="hierarchical", bucketed=True,
+              pod=PodConfig(axis="pod"),
+              transport=TransportConfig(repack=True)),
+         "repack requires PodConfig.dynamic"),
+        (dict(transport=TransportConfig(byte_budget=1024)),
+         "byte_budget requires the bucketed hierarchical"),
+    ],
+)
+def test_validate_rejects_illegal_combo(cfg_kw, match):
+    with pytest.raises(ValueError, match=match):
+        SyncConfig(**cfg_kw).validate()
+
+
+def test_validate_passes_and_chains_on_good_configs():
+    cfg = _valid_quant()
+    assert cfg.validate() is cfg
+    assert SyncConfig().validate().strategy == "sparse_allgather"
+
+
+def test_validate_checks_pod_ratios_against_plan():
+    import jax
+    import jax.numpy as jnp
+
+    plan = bk.make_plan(
+        {"w": jax.ShapeDtypeStruct((16, 384), jnp.float32),
+         "b": jax.ShapeDtypeStruct((40,), jnp.float32)},
+        cols=128, dense_below=64,
+    )
+    cfg = SyncConfig(strategy="hierarchical", bucketed=True,
+                     pod=PodConfig(ratios=(0.5,), axis="pod"))
+    with pytest.raises(ValueError, match="pod_ratios"):
+        cfg.validate(plan)
+    ok = cfg.with_pod(ratios=tuple(0.5 for _ in plan.buckets))
+    assert ok.validate(plan) is ok
+
+
+def test_sync_entry_points_validate():
+    """The sync entry points call validate(): an illegal combo fails
+    with the named error, not a shape error deep in the stack."""
+    from repro.core.distributed import bucketed_message_bytes
+
+    import jax
+    import jax.numpy as jnp
+
+    plan = bk.make_plan(
+        {"w": jax.ShapeDtypeStruct((16, 384), jnp.float32)}, cols=128
+    )
+    bad = SyncConfig(wire=WireConfig(quant=15))  # quant w/o bucketed
+    with pytest.raises(ValueError, match="quant requires the bucketed"):
+        bucketed_message_bytes(bad, plan)
