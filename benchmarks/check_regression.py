@@ -1,9 +1,12 @@
 """Bench regression gate: fresh BENCH_*.json vs committed baselines.
 
-CI stashes the committed baselines, re-runs ``benchmarks/run.py
-kernel_topk wire_codec fanout hierarchy refresh overlap budget local``
-(which
-overwrite the repo-root ``BENCH_*.json``), then runs this checker. Alongside the
+CI stashes the committed baselines, re-runs the benches (one parallel
+shard per registered bench — ``benchmarks/run.py --list`` is the shard
+matrix's source of truth; each shard overwrites its repo-root
+``BENCH_*.json`` and uploads it as an artifact), then a downstream gate
+job downloads every shard payload and runs this checker ONCE. A run
+that produces only some fresh payloads (a PR bench shard) restricts the
+gate with ``--only <stems>``. Alongside the
 pass/fail verdict it emits a markdown comparison table (baseline vs
 fresh per tracked metric) to ``$GITHUB_STEP_SUMMARY`` and to
 ``--summary-file`` for artifact upload. A check FAILS when:
@@ -27,7 +30,11 @@ fresh per tracked metric) to ``$GITHUB_STEP_SUMMARY`` and to
 * a correctness bit recorded in the payload flipped
   (``bitwise_equal``, ``roundtrip_exact``, snapshot ``exact``);
 * a tracked key present in the baseline disappears from the fresh
-  payload (a renamed metric must not silently disable its gate).
+  payload (a renamed metric must not silently disable its gate);
+* a scenario in the convergence matrix (``BENCH_matrix.json``) goes
+  unhealthy — loss spike or NaN/inf, rolling loss median no longer
+  decreasing, a declared arch x preset cell missing or corrupt, the
+  compression win vs the dense wire lost or regressed.
 
 Baselines that do not exist yet (a bench added in the same PR) are
 skipped with a warning so the gate never blocks its own introduction.
@@ -303,6 +310,64 @@ def check_local(base: dict, fresh: dict, max_slowdown: float,
     return errs
 
 
+MATRIX_REQUIRED = ("healthy", "median_decreased", "nonfinite", "spikes",
+                   "compression", "compression_win", "bytes_per_step")
+
+
+def check_matrix(base: dict, fresh: dict, max_slowdown: float,
+                 kernel_retention: float = 0.5) -> List[str]:
+    """Scenario convergence matrix (BENCH_matrix.json): every declared
+    arch x preset cell must be present and structurally complete
+    (a missing or corrupt scenario is a NAMED failure, not a silently
+    skipped gate), every scenario must be healthy (no loss spikes, no
+    NaN/inf) with a decreasing rolling loss median and a compression
+    win over the dense wire, and for scenarios the baseline also covers
+    the compression ratio must not regress. The fresh payload may
+    legitimately cover a SUBSET of the baseline's zoo (PR CI runs one
+    arch, the weekly schedule runs all) — the cross-product is
+    validated against the fresh run's own declared archs/presets."""
+    archs, presets = fresh.get("archs"), fresh.get("presets")
+    scen = fresh.get("scenarios")
+    if (not isinstance(archs, list) or not archs
+            or not isinstance(presets, list) or not presets
+            or not isinstance(scen, dict)):
+        return ["matrix: corrupt payload — archs/presets/scenarios "
+                "missing or empty (the declared coverage is the gate's "
+                "ground truth)"]
+    errs: List[str] = []
+    for arch in archs:
+        for preset in presets:
+            sid = f"{arch}/{preset}"
+            label = f"matrix[{sid}]"
+            s = scen.get(sid)
+            if s is None:
+                errs.append(
+                    f"{label}: declared scenario missing from fresh payload")
+                continue
+            if not isinstance(s, dict):
+                errs.append(f"{label}: corrupt scenario record "
+                            f"({type(s).__name__}, expected dict)")
+                continue
+            absent = [k for k in MATRIX_REQUIRED if k not in s]
+            if absent:
+                errs.append(f"{label}: corrupt scenario record — missing "
+                            f"keys {absent}")
+                continue
+            if not s["healthy"]:
+                reason = s.get("stop_reason") or (
+                    f"nonfinite={s['nonfinite']} spikes={s['spikes']}")
+                errs.append(f"{label}: unhealthy run ({reason})")
+            if not s["median_decreased"]:
+                errs.append(
+                    f"{label}: rolling loss median no longer decreasing")
+            if not s["compression_win"]:
+                errs.append(f"{label}: no compression win vs the dense wire")
+            b = (base.get("scenarios") or {}).get(sid, {})
+            if isinstance(b, dict):
+                errs += _ratio_regressed(s, b, "compression", label)
+    return errs
+
+
 CHECKS = {
     "BENCH_topk.json": check_topk,
     "BENCH_wire.json": check_wire,
@@ -312,7 +377,25 @@ CHECKS = {
     "BENCH_overlap.json": check_overlap,
     "BENCH_budget.json": check_budget,
     "BENCH_local.json": check_local,
+    "BENCH_matrix.json": check_matrix,
 }
+
+
+def select_checks(only: str):
+    """Restrict the gate to a comma-separated subset of payload stems
+    (``"matrix"`` or ``"topk,local"``) — for CI runs that produce only
+    some fresh payloads (a PR bench shard). Unknown stems raise."""
+    if not only:
+        return CHECKS
+    stems = {f: f[len("BENCH_"):-len(".json")] for f in CHECKS}
+    want = {w.strip() for w in only.split(",") if w.strip()}
+    unknown = want - set(stems.values()) - set(CHECKS)
+    if unknown:
+        raise SystemExit(
+            f"[gate] unknown --only selection {sorted(unknown)}; "
+            f"options: {sorted(stems.values())}")
+    return {f: c for f, c in CHECKS.items()
+            if f in want or stems[f] in want}
 
 
 def _load_payload(path: str, role: str, fname: str):
@@ -330,9 +413,9 @@ def _load_payload(path: str, role: str, fname: str):
 
 
 def run(baseline_dir: str, fresh_dir: str, max_slowdown: float,
-        kernel_retention: float = 0.5) -> List[str]:
+        kernel_retention: float = 0.5, checks=None) -> List[str]:
     errors: List[str] = []
-    for fname, checker in CHECKS.items():
+    for fname, checker in (checks if checks is not None else CHECKS).items():
         bpath = os.path.join(baseline_dir, fname)
         fpath = os.path.join(fresh_dir, fname)
         if not os.path.exists(bpath):
@@ -377,10 +460,11 @@ def _fmt(v) -> str:
 
 
 def write_summary(baseline_dir: str, fresh_dir: str, errors: List[str],
-                  fh) -> None:
+                  fh, checks=None) -> None:
     """Markdown comparison table (baseline vs fresh, per tracked file)
     for ``$GITHUB_STEP_SUMMARY`` / the uploaded artifact — bench
     regressions should be readable without log-diving."""
+    checks = checks if checks is not None else CHECKS
     fh.write("## Bench regression gate\n\n")
     if errors:
         fh.write(f"**FAIL** — {len(errors)} regression(s):\n\n")
@@ -439,7 +523,33 @@ def write_summary(baseline_dir: str, fresh_dir: str, errors: List[str],
                 f"step {amort['1']:.0f}B at H=1 -> {amort['8']:.0f}B at "
                 f"H=8 (exact 1/H), QSGD wire x{comp:.2f} smaller than "
                 f"the exact f32 tier{conv}\n\n")
-    for fname in CHECKS:
+    mpath = os.path.join(fresh_dir, "BENCH_matrix.json")
+    if os.path.exists(mpath):
+        payload, errs = _load_payload(mpath, "fresh", "BENCH_matrix.json")
+        scen = {} if errs else payload.get("scenarios", {})
+        cells = {k: s for k, s in scen.items() if isinstance(s, dict)}
+        if cells:
+            n_ok = sum(1 for s in cells.values()
+                       if s.get("healthy") and s.get("median_decreased"))
+            fh.write(
+                f"**Scenario matrix:** {n_ok}/{len(cells)} scenarios "
+                f"healthy + converging over "
+                f"{len(payload.get('archs', []))} arch(s) x "
+                f"{len(payload.get('presets', []))} preset(s), "
+                f"{payload.get('steps', '?')} steps each\n\n")
+            fh.write("| scenario | healthy | median ↓ | spikes | "
+                     "compression |\n|---|---|---|---:|---:|\n")
+            for sid in sorted(cells):
+                s = cells[sid]
+                fh.write(
+                    f"| {sid} | {_fmt(s.get('healthy'))} | "
+                    f"{_fmt(s.get('median_decreased'))} | "
+                    f"{_fmt(s.get('spikes'))} | "
+                    f"x{s.get('compression') or 0:.1f} |\n")
+            fh.write("\n")
+    for fname in checks:
+        if fname == "BENCH_matrix.json":
+            continue  # has its own per-scenario table above
         fpath = os.path.join(fresh_dir, fname)
         if not os.path.exists(fpath):
             continue
@@ -484,9 +594,14 @@ def main() -> int:
                          "(uploaded as a CI artifact); "
                          "$GITHUB_STEP_SUMMARY is appended to "
                          "automatically when set")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of gates by payload stem "
+                         "(e.g. 'matrix' or 'topk,local') for CI runs "
+                         "that produce only some fresh payloads")
     args = ap.parse_args()
+    checks = select_checks(args.only)
     errors = run(args.baseline_dir, args.fresh_dir, args.max_slowdown,
-                 args.kernel_retention)
+                 args.kernel_retention, checks=checks)
     targets = []
     if args.summary_file:
         targets.append((args.summary_file, "w"))
@@ -495,7 +610,8 @@ def main() -> int:
         targets.append((step_summary, "a"))
     for path, mode in targets:
         with open(path, mode) as fh:
-            write_summary(args.baseline_dir, args.fresh_dir, errors, fh)
+            write_summary(args.baseline_dir, args.fresh_dir, errors, fh,
+                          checks=checks)
     for e in errors:
         print(f"[gate] REGRESSION: {e}", file=sys.stderr)
     if errors:

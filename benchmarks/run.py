@@ -1583,6 +1583,135 @@ def local(full: bool = False):
     return payload
 
 
+# the config-zoo scenario matrix: architecture family coverage (MoE is
+# the top-k + ragged-bucket stress case) x the shipped sync presets
+MATRIX_ARCHS = (
+    "rwkv6-3b",
+    "qwen3-moe-30b-a3b",
+    "granite-moe-3b-a800m",
+    "recurrentgemma-9b",
+    "internvl2-26b",
+    "musicgen-medium",
+)
+MATRIX_PRESETS = ("topk", "pod_budgeted", "qsparse_local")
+
+
+def matrix(full: bool = False, archs=None):
+    """Scenario convergence matrix: config-zoo smoke plans x sync
+    presets, each trained for a few dozen steps on the 2-pod smoke mesh
+    with a ``Telemetry`` sink watching every step. Per scenario we
+    record convergence health (no loss spikes, no NaN/inf, rolling loss
+    median decreasing) and the exact per-step wire bytes vs the dense
+    all-reduce baseline (compression win). PR CI runs ``--archs
+    rwkv6-3b`` only; the weekly schedule sweeps the full zoo.
+    """
+    import subprocess
+    import textwrap
+
+    arch_list = list(archs) if archs else list(MATRIX_ARCHS)
+    bad = [a for a in arch_list if a not in MATRIX_ARCHS]
+    assert not bad, f"unknown matrix arch(s) {bad}; options: {MATRIX_ARCHS}"
+    steps = 48 if full else 24
+    script = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys, json, time
+        sys.path.insert(0, {src!r})
+        import jax
+        from repro.configs import MESHES, get_smoke_config
+        from repro.core import buckets as bk
+        from repro.core.distributed import SyncConfig
+        from repro.data import token_batches
+        from repro.data.pipeline import ShardedBatcher, take
+        from repro.launch.mesh import mesh_from_config
+        from repro.launch.train import TrainConfig, train
+        from repro.models import build_model
+        from repro.utils.telemetry import NonFiniteLossError, Telemetry
+
+        STEPS = {steps}
+        ARCHS = {archs!r}
+        PRESETS = {presets!r}
+        mesh = mesh_from_config(MESHES["smoke_2pod"])
+        scenarios = {{}}
+        for arch in ARCHS:
+            cfg = get_smoke_config(arch)
+            model = build_model(cfg)
+            plan = bk.make_plan(model.param_shapes())
+            # dense data-parallel baseline: the all-reduce moves the
+            # full f32 buffers every step
+            dense_bytes = 4 * sum(s.rows * s.cols for s in plan.buckets)
+            batch_list = list(take(iter(ShardedBatcher(
+                mesh, token_batches(cfg.vocab_size, 8, 32, seed=11),
+                batch_axes=("pod", "data"), prefetch=0)), STEPS))
+            for preset in PRESETS:
+                sync = SyncConfig.preset(preset, ratio=0.02)
+                tc = TrainConfig(optimizer="memsgd", eta=0.3, sync=sync)
+                tel = Telemetry()
+                t0 = time.time()
+                try:
+                    train(model, mesh, tc, iter(batch_list),
+                          n_steps=STEPS, log_every=0,
+                          rng=jax.random.PRNGKey(0), telemetry=tel)
+                except NonFiniteLossError:
+                    pass  # recorded in the sink; healthy=False below
+                s = tel.summary()
+                bps = s["bytes_per_step"] or {{}}
+                total = bps.get("total")
+                comp = (dense_bytes / total) if total else None
+                scenarios[arch + "/" + preset] = {{
+                    "arch": arch, "preset": preset,
+                    "healthy": (not s["nonfinite"]) and s["spikes"] == 0,
+                    "median_decreased": s["median_decreased"],
+                    "nonfinite": s["nonfinite"],
+                    "spikes": s["spikes"],
+                    "loss_first_median": s["loss_first_median"],
+                    "loss_last_median": s["loss_last_median"],
+                    "stop_reason": s["stop_reason"],
+                    "bytes_per_step": bps,
+                    "dense_bytes_per_step": dense_bytes,
+                    "compression": comp,
+                    "compression_win": bool(comp and comp > 1.0),
+                    "wall_s": time.time() - t0,
+                }}
+        print(json.dumps({{"scenarios": scenarios}}))
+        """
+    ).format(src=os.path.join(_ROOT, "src"), steps=steps,
+             archs=arch_list, presets=list(MATRIX_PRESETS))
+    t0 = time.time()
+    out = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        timeout=7200,
+    )
+    assert out.returncode == 0, out.stderr[-4000:]
+    scenarios = json.loads(out.stdout.strip().splitlines()[-1])["scenarios"]
+    wall_us = (time.time() - t0) * 1e6
+    n_ok = sum(1 for s in scenarios.values()
+               if s["healthy"] and s["median_decreased"])
+    _emit("matrix", wall_us / max(1, len(scenarios) * steps),
+          f"scenarios={len(scenarios)};healthy_converging={n_ok};"
+          f"archs={len(arch_list)};presets={len(MATRIX_PRESETS)}")
+    payload = {
+        "plan": "config-zoo-smoke", "mesh": "smoke_2pod", "steps": steps,
+        "archs": arch_list, "presets": list(MATRIX_PRESETS),
+        "scenarios": scenarios,
+    }
+    _save("matrix", payload)
+    with open(os.path.join(_ROOT, "BENCH_matrix.json"), "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    # acceptance: every scenario trains healthily (no spikes, no
+    # NaN/inf, rolling loss median strictly decreasing) and every
+    # sparse preset beats the dense wire
+    unhealthy = {k: s["stop_reason"] or f"spikes={s['spikes']}"
+                 for k, s in scenarios.items() if not s["healthy"]}
+    assert not unhealthy, unhealthy
+    stalled = [k for k, s in scenarios.items() if not s["median_decreased"]]
+    assert not stalled, f"loss median not decreasing: {stalled}"
+    no_win = [k for k, s in scenarios.items() if not s["compression_win"]]
+    assert not no_win, f"no compression win vs dense: {no_win}"
+    return payload
+
+
 BENCHES = {
     "fig2_convergence": fig2_convergence,
     "fig3_qsgd": fig3_qsgd,
@@ -1597,7 +1726,14 @@ BENCHES = {
     "budget": budget,
     "local": local,
     "remark23_ultra": remark23_ultra,
+    "matrix": matrix,
 }
+
+# benches whose BENCH_*.json payload check_regression.py gates — the CI
+# shard matrix runs exactly these (``--list --tracked --json``), so a
+# bench joins CI by appearing here and in check_regression.CHECKS
+TRACKED = ("kernel_topk", "wire_codec", "fanout", "hierarchy", "refresh",
+           "overlap", "budget", "local", "matrix")
 
 
 def main() -> None:
@@ -1609,7 +1745,22 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names (same as the "
                          "positional form)")
+    ap.add_argument("--list", action="store_true",
+                    help="print the registered benchmark names and exit")
+    ap.add_argument("--tracked", action="store_true",
+                    help="with --list, restrict to the benches whose "
+                         "payload the regression gate tracks")
+    ap.add_argument("--json", action="store_true",
+                    help="with --list, emit a JSON array (the CI shard "
+                         "matrix reads this — one source of truth)")
+    ap.add_argument("--archs", default=None,
+                    help="matrix bench only: comma-separated subset of "
+                         f"the config-zoo archs {MATRIX_ARCHS}")
     args = ap.parse_args()
+    if args.list:
+        listed = list(TRACKED) if args.tracked else list(BENCHES)
+        print(json.dumps(listed) if args.json else "\n".join(listed))
+        return
     names = list(args.names)
     if args.only:
         names += args.only.split(",")
@@ -1619,7 +1770,10 @@ def main() -> None:
     names = names or list(BENCHES)
     print("name,us_per_call,derived")
     for name in names:
-        BENCHES[name](full=args.full)
+        kwargs = {"full": args.full}
+        if name == "matrix" and args.archs:
+            kwargs["archs"] = args.archs.split(",")
+        BENCHES[name](**kwargs)
 
 
 if __name__ == "__main__":

@@ -38,6 +38,7 @@ from repro.core.distributed import (
 )
 from repro.launch import sharding as shd
 from repro.utils import compat
+from repro.utils.telemetry import Telemetry
 
 Array = jax.Array
 
@@ -677,11 +678,35 @@ def _cache_sizes(step, H: int):
     return total
 
 
+def _telemetry_bytes(tc: TrainConfig, plan, mesh, pod_ks=None):
+    """Per-step wire accounting for the telemetry sink: the exact
+    ``amortized_bytes_per_step`` dict (1/H under local steps), split
+    ``{"intra", "cross", "total"}`` on a (pod, data) mesh. Best-effort
+    — returns None for non-bucketed syncs or config combinations with
+    no defined accounting, because observe-only telemetry must never
+    turn an accounting edge case into a training failure."""
+    if plan is None:
+        return None
+    from repro.core.distributed import amortized_bytes_per_step
+
+    try:
+        if "pod" in mesh.axis_names:
+            acct = amortized_bytes_per_step(
+                tc.sync.with_pod(axis="pod"), plan, by_level=True,
+                n_data=int(mesh.shape["data"]), pod_ks=pod_ks,
+            )
+        else:
+            acct = {"total": amortized_bytes_per_step(tc.sync, plan)}
+    except (ValueError, TypeError):
+        return None
+    return acct
+
+
 def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
           checkpointer=None, ckpt_every: int = 0, log_every: int = 10,
           rng=None, delta_sink=None, ckpt_wire: bool = False,
           ckpt_memory_ratio: float = 0.05, refresh_cb=None,
-          pod_k_schedule=None, diagnostics=None):
+          pod_k_schedule=None, diagnostics=None, telemetry=None):
     """End-to-end training loop. ``batches``: iterator of device-ready
     global batches (see repro.data.pipeline.ShardedBatcher).
 
@@ -708,6 +733,17 @@ def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
     receive ``step_cache_size`` (the jit cache population after the
     run — 1 means zero recompiles past the first trace), the applied
     ``pod_refresh_schedule`` and the ``initial_pod_ks``.
+
+    ``telemetry`` — a ``repro.utils.telemetry.Telemetry`` sink fed
+    every step (loss + rolling medians, spike/non-finite detection,
+    per-step bytes, pod-k refreshes, jit-cache sizes); when omitted an
+    internal sink with the default config runs, so a NaN/inf loss
+    raises ``NonFiniteLossError`` instead of training to the step
+    budget on garbage (pass a sink configured with
+    ``stop_on_nonfinite=False`` to restore observe-only behaviour).
+    Telemetry is observe-only: enabling it never changes the applied
+    params/memory — bitwise (DESIGN.md invariant 13). The legacy
+    ``diagnostics`` dict is filled from the sink, keys unchanged.
     """
     plan = _bucket_plan(tc, model.param_shapes())
     if ckpt_wire and plan is None:
@@ -770,8 +806,10 @@ def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
         )
         pod_ks = jnp.asarray(live_ks, jnp.int32)
     history = []
-    applied_schedule = []
     initial_pod_ks = live_ks
+    tel = telemetry if telemetry is not None else Telemetry()
+    tel.initial_pod_ks = initial_pod_ks
+    tel.set_bytes_per_step(_telemetry_bytes(tc, plan, mesh, pod_ks=live_ks))
     from repro.data.pipeline import take
 
     # take() consumes EXACTLY n_steps from the (typically shared,
@@ -793,7 +831,9 @@ def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
                 for k, c in zip(sched[i], k_caps)
             )
             pod_ks = jnp.asarray(live_ks, jnp.int32)
-            applied_schedule.append((i, live_ks))
+            tel.pod_refresh(i, live_ks)
+            tel.set_bytes_per_step(
+                _telemetry_bytes(tc, plan, mesh, pod_ks=live_ks))
         elif (dyn and sched is None and refresh is not None and is_sync
               and j > 0 and j % refresh.every == 0):
             # live re-calibration (an explicit pod_k_schedule REPLACES
@@ -832,7 +872,9 @@ def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
                 + ",".join(str(k) for k in live_ks)
                 + f"  effective cross-pod {lv['cross']}B /step/worker"
             )
-            applied_schedule.append((i, live_ks))
+            tel.pod_refresh(i, live_ks, cross_bytes=lv["cross"])
+            tel.set_bytes_per_step(
+                _telemetry_bytes(tc, plan, mesh, pod_ks=live_ks))
             if refresh_cb is not None:
                 refresh_cb(i, live_ks)
         if H > 1:
@@ -845,10 +887,9 @@ def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
         else:
             out = (step(params, memory, opt, count, batch, pod_ks)
                    if dyn else step(params, memory, opt, count, batch))
+        cache = _cache_sizes(step, H)
         if diagnostics is not None:
-            diagnostics.setdefault("step_cache_sizes", []).append(
-                _cache_sizes(step, H)
-            )
+            diagnostics.setdefault("step_cache_sizes", []).append(cache)
         if H > 1:
             if tc.emit_deltas and is_sync:
                 params, memory, acc, opt, count, metrics, delta = out
@@ -862,10 +903,18 @@ def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
                 delta_sink(i, delta)
         else:
             params, memory, opt, count, metrics = out
-        if log_every and (i % log_every == 0 or i == n_steps - 1):
-            loss = float(metrics["loss"])
+        # the sink sees EVERY step's loss (spike/non-finite detection
+        # can't run on a log_every subsample); it owns the per-step
+        # print, so a NaN/inf loss raises NonFiniteLossError here
+        # instead of printing garbage to the step budget
+        loss = float(metrics["loss"])
+        do_log = bool(log_every and (i % log_every == 0 or i == n_steps - 1))
+        if do_log:
             history.append((i, loss))
-            print(f"step {i:5d}  loss {loss:.4f}")
+        tel.step(i, loss, cache_size=cache, log=do_log)
+        if tel.should_stop:
+            print(f"telemetry early stop @ step {i}: {tel.stop_reason}")
+            break
         if checkpointer is not None and ckpt_every and (i + 1) % ckpt_every == 0:
             if ckpt_wire:
                 checkpointer.save_wire(
@@ -875,22 +924,14 @@ def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
                 )
             else:
                 checkpointer.save(i + 1, {"params": params})
+    tel.close()
     if diagnostics is not None:
-        diagnostics["step_cache_size"] = _cache_sizes(step, H)
-        diagnostics["pod_refresh_schedule"] = applied_schedule
-        diagnostics["initial_pod_ks"] = initial_pod_ks
-        # steady-state compile check: entries added after the first full
-        # sync round settles are REAL recompiles — a live pod-k refresh
-        # must never add one. At H == 1 that's after the second step
-        # (the first call traces; the second may re-trace once as
-        # donated/committed shardings settle); at H > 1 both the accum
-        # and sync steps need their trace + settle, so the baseline sits
-        # at the end of the second round (index 2H - 1)
-        sizes = diagnostics.get("step_cache_sizes") or []
-        diagnostics["steady_state_recompiles"] = (
-            (sizes[-1] - sizes[min(2 * H - 1, len(sizes) - 1)])
-            if sizes and sizes[0] is not None else None
-        )
+        # legacy ad-hoc dict, now sourced from the telemetry sink (same
+        # keys and values as before the sink absorbed the bookkeeping)
+        d = tel.diagnostics(H)
+        for key in ("step_cache_size", "pod_refresh_schedule",
+                    "initial_pod_ks", "steady_state_recompiles"):
+            diagnostics[key] = d[key]
     return params, memory, opt, count, history
 
 

@@ -7,6 +7,11 @@ from repro.utils.tree import (
     tree_dot,
 )
 from repro.utils.shapes import parse_hlo_shape_bytes, human_bytes
+from repro.utils.telemetry import (
+    NonFiniteLossError,
+    Telemetry,
+    TelemetryConfig,
+)
 from repro.utils.platform import (
     backend,
     pallas_interpret_default,
@@ -15,6 +20,9 @@ from repro.utils.platform import (
 )
 
 __all__ = [
+    "NonFiniteLossError",
+    "Telemetry",
+    "TelemetryConfig",
     "backend",
     "pallas_interpret_default",
     "setup_platform",

@@ -408,3 +408,122 @@ def test_run_end_to_end(tmp_path):
     assert len(errs) == 1 and "BENCH_fanout.json" in errs[0]
     os.remove(basedir / "BENCH_fanout.json")
     assert gate.run(str(basedir), str(freshdir), 1.15) == []
+
+
+MATRIX = {
+    "plan": "config-zoo-smoke", "mesh": "smoke_2pod", "steps": 24,
+    "archs": ["rwkv6-3b", "qwen3-moe-30b-a3b"],
+    "presets": ["topk", "qsparse_local"],
+    "scenarios": {
+        f"{a}/{p}": {
+            "arch": a, "preset": p, "healthy": True,
+            "median_decreased": True, "nonfinite": False, "spikes": 0,
+            "loss_first_median": 6.9, "loss_last_median": 5.1,
+            "stop_reason": None,
+            "bytes_per_step": {"intra": 4000.0, "cross": 1000.0,
+                               "total": 5000.0},
+            "dense_bytes_per_step": 500000, "compression": 100.0,
+            "compression_win": True,
+        }
+        for a in ("rwkv6-3b", "qwen3-moe-30b-a3b")
+        for p in ("topk", "qsparse_local")
+    },
+}
+
+
+def test_matrix_identical_payload_passes():
+    assert gate.check_matrix(MATRIX, copy.deepcopy(MATRIX), 1.15) == []
+
+
+def test_matrix_unhealthy_scenario_fails():
+    # each health dimension flips to a named per-scenario failure
+    fresh = copy.deepcopy(MATRIX)
+    fresh["scenarios"]["rwkv6-3b/topk"].update(
+        healthy=False, nonfinite=True,
+        stop_reason="non-finite loss at step 7")
+    errs = gate.check_matrix(MATRIX, fresh, 1.15)
+    assert any("matrix[rwkv6-3b/topk]" in e and "non-finite loss" in e
+               for e in errs)
+    fresh2 = copy.deepcopy(MATRIX)
+    fresh2["scenarios"]["qwen3-moe-30b-a3b/topk"]["median_decreased"] = False
+    assert any("median no longer decreasing" in e
+               for e in gate.check_matrix(MATRIX, fresh2, 1.15))
+    fresh3 = copy.deepcopy(MATRIX)
+    fresh3["scenarios"]["rwkv6-3b/qsparse_local"]["compression_win"] = False
+    assert any("no compression win" in e
+               for e in gate.check_matrix(MATRIX, fresh3, 1.15))
+
+
+def test_matrix_compression_regression_fails():
+    fresh = copy.deepcopy(MATRIX)
+    fresh["scenarios"]["rwkv6-3b/topk"]["compression"] = 50.0
+    assert any("compression" in e and "regressed" in e
+               for e in gate.check_matrix(MATRIX, fresh, 1.15))
+
+
+def test_matrix_missing_scenario_fails_with_named_error():
+    # a declared arch x preset cell missing from the payload is a loud
+    # failure, not a silently skipped gate
+    fresh = copy.deepcopy(MATRIX)
+    del fresh["scenarios"]["qwen3-moe-30b-a3b/qsparse_local"]
+    errs = gate.check_matrix(MATRIX, fresh, 1.15)
+    assert any("matrix[qwen3-moe-30b-a3b/qsparse_local]" in e
+               and "missing" in e for e in errs)
+
+
+def test_matrix_subset_fresh_run_passes():
+    # PR CI runs one arch: the fresh payload declares only what it ran,
+    # and the full-zoo baseline's extra scenarios must NOT fail the gate
+    fresh = copy.deepcopy(MATRIX)
+    fresh["archs"] = ["rwkv6-3b"]
+    fresh["scenarios"] = {k: v for k, v in fresh["scenarios"].items()
+                          if v["arch"] == "rwkv6-3b"}
+    assert gate.check_matrix(MATRIX, fresh, 1.15) == []
+
+
+def test_matrix_corrupt_payload_fails_with_named_error():
+    # structurally broken payloads: missing coverage declaration,
+    # non-dict scenario record, record with missing tracked keys
+    assert any("corrupt payload" in e
+               for e in gate.check_matrix(MATRIX, {"scenarios": {}}, 1.15))
+    fresh = copy.deepcopy(MATRIX)
+    fresh["scenarios"]["rwkv6-3b/topk"] = "garbage"
+    assert any("corrupt scenario record" in e
+               for e in gate.check_matrix(MATRIX, fresh, 1.15))
+    fresh2 = copy.deepcopy(MATRIX)
+    del fresh2["scenarios"]["rwkv6-3b/topk"]["compression"]
+    del fresh2["scenarios"]["rwkv6-3b/topk"]["healthy"]
+    errs = gate.check_matrix(MATRIX, fresh2, 1.15)
+    assert any("missing keys" in e and "compression" in e for e in errs)
+
+
+def test_matrix_gate_without_baseline_scenarios():
+    # a brand-new scenario (no baseline coverage) still self-validates
+    assert gate.check_matrix({}, copy.deepcopy(MATRIX), 1.15) == []
+
+
+def test_select_checks_subset_and_unknown():
+    only = gate.select_checks("matrix")
+    assert list(only) == ["BENCH_matrix.json"]
+    both = gate.select_checks("topk,local")
+    assert set(both) == {"BENCH_topk.json", "BENCH_local.json"}
+    assert gate.select_checks(None) is gate.CHECKS
+    try:
+        gate.select_checks("nope")
+    except SystemExit as e:
+        assert "nope" in str(e)
+    else:
+        raise AssertionError("unknown --only stem did not raise")
+
+
+def test_matrix_headline_in_summary(tmp_path):
+    freshdir = tmp_path / "fresh"
+    freshdir.mkdir()
+    (freshdir / "BENCH_matrix.json").write_text(json.dumps(MATRIX))
+    out = tmp_path / "summary.md"
+    with open(out, "w") as fh:
+        gate.write_summary(str(tmp_path / "nobase"), str(freshdir), [], fh)
+    text = out.read_text()
+    assert "Scenario matrix:" in text
+    assert "4/4 scenarios healthy + converging" in text
+    assert "rwkv6-3b/topk" in text

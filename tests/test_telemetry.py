@@ -1,0 +1,236 @@
+"""Telemetry sink (repro.utils.telemetry): rolling-median/spike
+detector properties (hypothesis-fallback), named non-finite errors,
+JSONL series, diagnostics back-compat — and DESIGN.md invariant 13:
+telemetry is observe-only, so enabling a fully-instrumented sink is
+bitwise inert on the applied params + memory of a real train run."""
+import json
+import math
+
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.utils.telemetry import (
+    NonFiniteLossError,
+    RollingMedian,
+    SpikeDetector,
+    Telemetry,
+    TelemetryConfig,
+    is_spike,
+)
+
+
+# -- rolling median -----------------------------------------------------------
+
+def test_rolling_median_window():
+    m = RollingMedian(3)
+    assert m.value is None
+    assert m.push(1.0) == 1.0
+    assert m.push(9.0) == 5.0
+    assert m.push(5.0) == 5.0
+    # window slides: the 1.0 falls out
+    assert m.push(9.0) == 9.0
+    assert len(m) == 3
+
+
+def test_rolling_median_rejects_bad_window():
+    with pytest.raises(ValueError, match="window"):
+        RollingMedian(0)
+
+
+@settings(max_examples=25)
+@given(x=st.floats(min_value=0.1, max_value=100.0),
+       n=st.integers(min_value=1, max_value=20))
+def test_median_constant_under_constant_streams(x, n):
+    """Property: a constant stream keeps a constant median (monotone:
+    it never drifts off the stream value), and never flags a spike."""
+    det = SpikeDetector(window=8, factor=4.0, min_history=3)
+    for _ in range(n):
+        assert det.observe(x) is False
+        assert det.median.value == x
+
+
+@settings(max_examples=25)
+@given(base=st.floats(min_value=0.5, max_value=10.0),
+       excess=st.floats(min_value=1.1, max_value=20.0))
+def test_spike_flagged_iff_excess_over_window_median(base, excess):
+    """Property: after a steady window at ``base``, a new value is
+    flagged iff it exceeds factor * median — values at or below the
+    threshold never flag, values above always do."""
+    factor = 4.0
+    det = SpikeDetector(window=8, factor=factor, min_history=3)
+    for _ in range(8):
+        det.observe(base)
+    probe = factor * base * excess
+    fresh = SpikeDetector(window=8, factor=factor, min_history=3)
+    for _ in range(8):
+        fresh.observe(base)
+    assert fresh.observe(probe) is True
+    assert det.observe(factor * base * 0.99) is False
+
+
+def test_spike_detection_arms_after_min_history():
+    det = SpikeDetector(window=8, factor=2.0, min_history=3)
+    # the first min_history observations never flag, however extreme
+    assert det.observe(1.0) is False
+    assert det.observe(100.0) is False
+    assert det.observe(1.0) is False
+    # armed now: median of {1, 100, 1} = 1 -> 50 is a spike
+    assert det.observe(50.0) is True
+
+
+def test_is_spike_nonfinite_inputs():
+    # NaN/inf are non-finite EVENTS, not spikes — and never poison the
+    # median window
+    assert is_spike(float("nan"), 1.0, 4.0) is False
+    assert is_spike(float("inf"), 1.0, 4.0) is False
+    assert is_spike(5.0, None, 4.0) is False
+    det = SpikeDetector(window=4, factor=4.0, min_history=1)
+    det.observe(1.0)
+    det.observe(float("nan"))
+    assert det.median.value == 1.0  # NaN not pushed
+
+
+# -- Telemetry sink -----------------------------------------------------------
+
+def test_nonfinite_loss_raises_named_error():
+    tel = Telemetry()
+    tel.step(0, 2.0)
+    with pytest.raises(NonFiniteLossError, match="step 1") as exc:
+        tel.step(1, float("nan"))
+    assert exc.value.step == 1
+    assert tel.nonfinite_step == 1
+    assert "non-finite loss at step 1" in tel.stop_reason
+
+
+def test_nonfinite_observe_only_mode():
+    tel = Telemetry(TelemetryConfig(stop_on_nonfinite=False))
+    tel.step(0, 2.0)
+    tel.step(1, float("inf"))  # records, does not raise
+    tel.step(2, 1.9)
+    s = tel.summary()
+    assert s["nonfinite"] and s["nonfinite_step"] == 1
+    assert not tel.should_stop  # observe-only: driver keeps looping
+
+
+def test_spike_budget_early_stop():
+    prints = []
+    tel = Telemetry(TelemetryConfig(window=4, spike_factor=2.0,
+                                    min_history=2, max_spikes=2),
+                    printer=prints.append)
+    for i, x in enumerate([1.0, 1.0, 9.0, 1.0, 9.0]):
+        tel.step(i, x)
+    assert tel.should_stop
+    assert tel.summary()["spikes"] == 2
+    assert "max_spikes=2" in tel.stop_reason
+    assert any("loss spike at step 2" in p for p in prints)
+
+
+def test_step_print_routed_through_sink():
+    prints = []
+    tel = Telemetry(printer=prints.append)
+    tel.step(0, 3.25, log=True)
+    tel.step(1, 3.0, log=False)
+    assert prints == ["step     0  loss 3.2500"]
+
+
+def test_jsonl_series_and_refresh_events(tmp_path):
+    path = tmp_path / "tel.jsonl"
+    with Telemetry(TelemetryConfig(jsonl_path=str(path))) as tel:
+        tel.set_bytes_per_step({"intra": 100, "cross": 10, "total": 110})
+        tel.step(0, 5.0, cache_size=1)
+        tel.pod_refresh(1, (32, 16), cross_bytes=123.0)
+        tel.step(1, 4.0, cache_size=2)
+    recs = [json.loads(line) for line in path.read_text().splitlines()]
+    assert len(recs) == 3
+    assert recs[0]["loss"] == 5.0 and recs[0]["bytes"]["total"] == 110
+    assert recs[1] == {"event": "pod_refresh", "step": 1,
+                       "pod_ks": [32, 16], "cross_bytes": 123.0}
+    s = tel.summary()
+    assert s["bytes_total"] == {"intra": 200, "cross": 20, "total": 220}
+    assert s["pod_refresh_schedule"] == [[1, [32, 16]]]
+
+
+def test_summary_median_decreased():
+    tel = Telemetry(TelemetryConfig(window=4))
+    for i, x in enumerate([8.0, 8.1, 7.9, 8.0, 4.0, 4.1, 3.9, 4.0]):
+        tel.step(i, x)
+    s = tel.summary()
+    assert s["loss_first_median"] == pytest.approx(8.0)
+    assert s["loss_last_median"] == pytest.approx(4.0)
+    assert s["median_decreased"]
+    flat = Telemetry(TelemetryConfig(window=4))
+    for i in range(8):
+        flat.step(i, 5.0)
+    assert not flat.summary()["median_decreased"]
+
+
+def test_diagnostics_back_compat_keys():
+    """The sink reproduces the historical ``train(diagnostics=)`` dict:
+    same keys, and the steady-state recompile formula anchored at the
+    end of the second sync round (index 2H - 1)."""
+    tel = Telemetry()
+    tel.initial_pod_ks = (8, 4)
+    sizes = [1, 2, 2, 2, 3]
+    for i, c in enumerate(sizes):
+        tel.step(i, 5.0 - 0.1 * i, cache_size=c)
+    tel.pod_refresh(3, (16, 8))
+    d = tel.diagnostics(local_steps=1)
+    assert set(d) == {"step_cache_sizes", "step_cache_size",
+                      "pod_refresh_schedule", "initial_pod_ks",
+                      "steady_state_recompiles"}
+    assert d["step_cache_sizes"] == sizes
+    assert d["step_cache_size"] == 3
+    assert d["initial_pod_ks"] == (8, 4)
+    assert d["pod_refresh_schedule"] == [(3, (16, 8))]
+    # baseline index min(2*1-1, 4) = 1 -> sizes[-1] - sizes[1] = 1
+    assert d["steady_state_recompiles"] == 1
+    # H=2: baseline index min(3, 4) = 3 -> 3 - 2 = 1; H large clamps
+    assert tel.diagnostics(local_steps=2)["steady_state_recompiles"] == 1
+    assert tel.diagnostics(local_steps=9)["steady_state_recompiles"] == 0
+    # unknown cache sizes -> None, not a crash
+    blind = Telemetry()
+    blind.step(0, 1.0)
+    assert blind.diagnostics()["steady_state_recompiles"] is None
+
+
+# -- invariant 13: observe-only, bitwise --------------------------------------
+
+def test_telemetry_is_observe_only_bitwise(tmp_path):
+    """Selfcheck-style probe: a fully-instrumented sink (tiny window,
+    hair-trigger spike detector, JSONL series) vs the default internal
+    sink on the same seeded run — applied params AND error-feedback
+    memory must match BITWISE."""
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.core.distributed import SyncConfig
+    from repro.core.selfcheck import bitwise_equal
+    from repro.data import token_batches
+    from repro.data.pipeline import ShardedBatcher, take
+    from repro.launch.train import TrainConfig, train
+    from repro.models import build_model
+    from repro.utils.compat import make_mesh
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = get_smoke_config("rwkv6-3b")
+    model = build_model(cfg)
+    tc = TrainConfig(optimizer="memsgd", eta=0.3,
+                     sync=SyncConfig.preset("topk", ratio=0.02))
+    batch_list = list(take(iter(ShardedBatcher(
+        mesh, token_batches(cfg.vocab_size, 2, 16, seed=3), prefetch=0)), 6))
+
+    def run(telemetry):
+        p, m, _, _, _ = train(model, mesh, tc, iter(batch_list), n_steps=6,
+                              log_every=0, rng=jax.random.PRNGKey(0),
+                              telemetry=telemetry)
+        return p, m
+
+    baseline = run(None)  # default internal sink
+    tel = Telemetry(TelemetryConfig(window=2, spike_factor=1.0001,
+                                    min_history=1,
+                                    jsonl_path=str(tmp_path / "t.jsonl")),
+                    printer=lambda s: None)
+    instrumented = run(tel)
+    assert bitwise_equal(baseline, instrumented)
+    assert tel.summary()["steps"] == 6
+    assert (tmp_path / "t.jsonl").exists()
