@@ -54,6 +54,11 @@ from typing import List
 RATIO_SLACK = 0.999  # deterministic byte ratios, float-serialization slack
 
 
+def _is_num(v) -> bool:
+    """True for real JSON numbers (bool is an int subclass — exclude)."""
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
 def _missing(fresh: dict, base: dict, key: str, label: str) -> List[str]:
     """A key the baseline tracks must exist in the fresh payload —
     renaming a metric must not silently disable its gate."""
@@ -364,7 +369,20 @@ def check_matrix(base: dict, fresh: dict, max_slowdown: float,
                 errs.append(f"{label}: no compression win vs the dense wire")
             b = (base.get("scenarios") or {}).get(sid, {})
             if isinstance(b, dict):
-                errs += _ratio_regressed(s, b, "compression", label)
+                # run.py emits compression: null when the byte
+                # accounting lacks a truthy total — never feed that to
+                # the numeric ratio check: against a numeric baseline
+                # it is a NAMED failure (the metric silently vanished),
+                # against a null/absent baseline there is nothing to
+                # compare
+                cf, cb = s.get("compression"), b.get("compression")
+                if _is_num(cb) and _is_num(cf):
+                    errs += _ratio_regressed(s, b, "compression", label)
+                elif _is_num(cb):
+                    errs.append(
+                        f"{label}: compression {cf!r} is not numeric "
+                        f"but the baseline tracks {cb:.3f} (byte "
+                        "accounting lost its total?)")
     return errs
 
 
@@ -568,9 +586,7 @@ def write_summary(baseline_dir: str, fresh_dir: str, errors: List[str],
         for key in sorted(set(base) | set(fresh)):
             b, f = base.get(key), fresh.get(key)
             delta = ""
-            if (isinstance(b, (int, float)) and not isinstance(b, bool)
-                    and isinstance(f, (int, float))
-                    and not isinstance(f, bool) and b):
+            if _is_num(b) and _is_num(f) and b:
                 delta = f"{(f - b) / abs(b) * 100:+.1f}%"
             fh.write(f"| {key} | {_fmt(b)} | {_fmt(f)} | {delta} |\n")
         fh.write("\n")

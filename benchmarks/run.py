@@ -49,7 +49,14 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
     if _p not in sys.path:
         sys.path.insert(0, _p)
 
-import numpy as np
+# the ``--list`` fast path is CI's shard-matrix source of truth and runs
+# on a bare hosted runner with NO deps installed — it must import
+# cleanly without numpy; only the bench bodies need it (main() refuses
+# to run benches when it is absent)
+try:
+    import numpy as np
+except ModuleNotFoundError:
+    np = None
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
 
@@ -1761,6 +1768,9 @@ def main() -> None:
         listed = list(TRACKED) if args.tracked else list(BENCHES)
         print(json.dumps(listed) if args.json else "\n".join(listed))
         return
+    if np is None:
+        ap.error("numpy is required to RUN benches (only --list works "
+                 "without it) — pip install numpy / the dev requirements")
     names = list(args.names)
     if args.only:
         names += args.only.split(",")

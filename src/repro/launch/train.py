@@ -38,7 +38,7 @@ from repro.core.distributed import (
 )
 from repro.launch import sharding as shd
 from repro.utils import compat
-from repro.utils.telemetry import Telemetry
+from repro.utils.telemetry import NonFiniteLossError, Telemetry
 
 Array = jax.Array
 
@@ -741,9 +741,17 @@ def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
     raises ``NonFiniteLossError`` instead of training to the step
     budget on garbage (pass a sink configured with
     ``stop_on_nonfinite=False`` to restore observe-only behaviour).
+    The raised error carries the partial ``history`` accumulated before
+    the stop, so a crash at step N does not discard N-1 steps of
+    signal. A caller-provided sink stays OPEN after train() returns
+    (reuse it across runs, close it yourself / via its context
+    manager); only the internal default sink is closed here.
     Telemetry is observe-only: enabling it never changes the applied
-    params/memory — bitwise (DESIGN.md invariant 13). The legacy
-    ``diagnostics`` dict is filled from the sink, keys unchanged.
+    params/memory — bitwise (DESIGN.md invariant 13), and never blocks
+    async dispatch — each step's device loss is drained only after the
+    NEXT step is dispatched, so detection/printing lag one step while
+    the host keeps running ahead. The legacy ``diagnostics`` dict is
+    filled from the sink, keys unchanged.
     """
     plan = _bucket_plan(tc, model.param_shapes())
     if ckpt_wire and plan is None:
@@ -807,10 +815,41 @@ def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
         pod_ks = jnp.asarray(live_ks, jnp.int32)
     history = []
     initial_pod_ks = live_ks
+    tel_owned = telemetry is None
     tel = telemetry if telemetry is not None else Telemetry()
     tel.initial_pod_ks = initial_pod_ks
-    tel.set_bytes_per_step(_telemetry_bytes(tc, plan, mesh, pod_ks=live_ks))
+    # bytes_live is the driver's own record of the accounting currently
+    # in effect (the sink's copy gets rewound to per-step snapshots by
+    # the drains below, so it cannot serve as the source of truth)
+    bytes_live = _telemetry_bytes(tc, plan, mesh, pod_ks=live_ks)
+    tel.set_bytes_per_step(bytes_live)
     from repro.data.pipeline import take
+
+    # one-step-late loss readback: float(loss) blocks on the device
+    # value, so the driver holds each step's loss as a device array and
+    # drains it only after the NEXT step has been dispatched — the host
+    # keeps running ahead of the device (the async-dispatch overlap the
+    # double-buffered bucket pipeline depends on) at the cost of
+    # detection/printing lagging one step. The bytes accounting in
+    # effect at dispatch rides along so a pod refresh between dispatch
+    # and drain still attributes the step's bytes correctly.
+    pending = None
+
+    def _drain(rec):
+        idx, dev_loss, cache_rec, log_rec, bytes_rec = rec
+        loss = float(dev_loss)
+        tel.set_bytes_per_step(bytes_rec)
+        try:
+            tel.step(idx, loss, cache_size=cache_rec, log=log_rec)
+        except NonFiniteLossError as e:
+            # a crash at step N must not discard N-1 steps of signal
+            # (the garbage step itself stays out of the history)
+            e.history = list(history)
+            if tel_owned:
+                tel.close()
+            raise
+        if log_rec:
+            history.append((idx, loss))
 
     # take() consumes EXACTLY n_steps from the (typically shared,
     # typically infinite) stream — a bare `enumerate + break` would pull
@@ -832,8 +871,7 @@ def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
             )
             pod_ks = jnp.asarray(live_ks, jnp.int32)
             tel.pod_refresh(i, live_ks)
-            tel.set_bytes_per_step(
-                _telemetry_bytes(tc, plan, mesh, pod_ks=live_ks))
+            bytes_live = _telemetry_bytes(tc, plan, mesh, pod_ks=live_ks)
         elif (dyn and sched is None and refresh is not None and is_sync
               and j > 0 and j % refresh.every == 0):
             # live re-calibration (an explicit pod_k_schedule REPLACES
@@ -873,8 +911,7 @@ def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
                 + f"  effective cross-pod {lv['cross']}B /step/worker"
             )
             tel.pod_refresh(i, live_ks, cross_bytes=lv["cross"])
-            tel.set_bytes_per_step(
-                _telemetry_bytes(tc, plan, mesh, pod_ks=live_ks))
+            bytes_live = _telemetry_bytes(tc, plan, mesh, pod_ks=live_ks)
             if refresh_cb is not None:
                 refresh_cb(i, live_ks)
         if H > 1:
@@ -905,13 +942,14 @@ def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
             params, memory, opt, count, metrics = out
         # the sink sees EVERY step's loss (spike/non-finite detection
         # can't run on a log_every subsample); it owns the per-step
-        # print, so a NaN/inf loss raises NonFiniteLossError here
-        # instead of printing garbage to the step budget
-        loss = float(metrics["loss"])
+        # print, so a NaN/inf loss raises NonFiniteLossError from the
+        # drain instead of printing garbage to the step budget. Step i
+        # is already dispatched when step i-1's loss is drained, so the
+        # blocking float() never stalls the dispatch queue.
         do_log = bool(log_every and (i % log_every == 0 or i == n_steps - 1))
-        if do_log:
-            history.append((i, loss))
-        tel.step(i, loss, cache_size=cache, log=do_log)
+        if pending is not None:
+            _drain(pending)
+        pending = (i, metrics["loss"], cache, do_log, bytes_live)
         if tel.should_stop:
             print(f"telemetry early stop @ step {i}: {tel.stop_reason}")
             break
@@ -924,7 +962,13 @@ def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
                 )
             else:
                 checkpointer.save(i + 1, {"params": params})
-    tel.close()
+    if pending is not None:
+        _drain(pending)  # the last dispatched step's loss
+    if tel_owned:
+        # caller-provided sinks stay open for reuse (they own their
+        # lifetime via the context-manager protocol); only the
+        # internally-created default sink is closed here
+        tel.close()
     if diagnostics is not None:
         # legacy ad-hoc dict, now sourced from the telemetry sink (same
         # keys and values as before the sink absorbed the bookkeeping)

@@ -15,7 +15,11 @@ Telemetry is **observe-only** (DESIGN.md invariant 13): it reads host
 floats after the step has already been dispatched and never touches
 params, memory, or the traced computation — enabling it is bitwise
 inert on training state (``tests/test_telemetry.py`` pins this with a
-selfcheck-style probe).
+selfcheck-style probe) AND inert on wall-clock: the driver drains each
+step's device loss only after the next step is dispatched, so the
+blocking host read never stalls JAX async dispatch (step records in
+the JSONL series therefore lag events like ``pod_refresh`` by one
+step; every record carries its own ``step`` field).
 
 Series go to a JSONL file when ``TelemetryConfig.jsonl_path`` is set
 (one record per step, one per event), and ``summary()`` returns the
@@ -32,11 +36,14 @@ from typing import Callable, List, Optional, Sequence
 
 
 class NonFiniteLossError(RuntimeError):
-    """Loss went NaN/inf. Carries the offending step index."""
+    """Loss went NaN/inf. Carries the offending step index; when raised
+    out of ``launch.train.train()``, ``history`` additionally carries
+    the partial ``(step, loss)`` log accumulated before the stop."""
 
     def __init__(self, step: int, loss: float):
         self.step = step
         self.loss = loss
+        self.history: Optional[list] = None
         super().__init__(
             f"non-finite loss {loss!r} at step {step} — stopping instead "
             "of training to the step budget on garbage (pass "
@@ -210,7 +217,11 @@ class Telemetry:
             if self.stop_reason is None:
                 self.stop_reason = f"non-finite loss at step {i}"
             if self.config.stop_on_nonfinite:
-                self.close()
+                # flush (not close): the record is durable on disk, but
+                # a caller-owned sink stays open so it can be reused
+                # across runs / keep receiving events after the raise
+                if self._fh is not None:
+                    self._fh.flush()
                 raise NonFiniteLossError(i, loss)
         return rec
 

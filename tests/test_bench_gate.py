@@ -461,6 +461,24 @@ def test_matrix_compression_regression_fails():
                for e in gate.check_matrix(MATRIX, fresh, 1.15))
 
 
+def test_matrix_non_numeric_compression_is_named_error():
+    # run.py emits compression: null when the byte accounting lacks a
+    # total — against a numeric baseline that is a NAMED failure, not a
+    # TypeError stack trace out of the ratio check
+    fresh = copy.deepcopy(MATRIX)
+    fresh["scenarios"]["rwkv6-3b/topk"]["compression"] = None
+    errs = gate.check_matrix(MATRIX, fresh, 1.15)
+    assert any("matrix[rwkv6-3b/topk]" in e and "not numeric" in e
+               for e in errs)
+    # a null BASELINE value skips the ratio check (nothing to compare)
+    base = copy.deepcopy(MATRIX)
+    base["scenarios"]["rwkv6-3b/topk"]["compression"] = None
+    assert gate.check_matrix(base, copy.deepcopy(MATRIX), 1.15) == []
+    both = copy.deepcopy(MATRIX)
+    both["scenarios"]["rwkv6-3b/topk"]["compression"] = None
+    assert gate.check_matrix(base, both, 1.15) == []
+
+
 def test_matrix_missing_scenario_fails_with_named_error():
     # a declared arch x preset cell missing from the payload is a loud
     # failure, not a silently skipped gate

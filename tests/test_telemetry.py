@@ -102,6 +102,21 @@ def test_nonfinite_loss_raises_named_error():
     assert "non-finite loss at step 1" in tel.stop_reason
 
 
+def test_nonfinite_raise_flushes_and_keeps_sink_open(tmp_path):
+    # the raise path FLUSHES the JSONL handle (record durable on disk)
+    # but does not close it: a caller-owned sink survives the error and
+    # can keep receiving events / be reused across runs
+    path = tmp_path / "tel.jsonl"
+    tel = Telemetry(TelemetryConfig(jsonl_path=str(path)))
+    tel.step(0, 1.0)
+    with pytest.raises(NonFiniteLossError):
+        tel.step(1, float("nan"))
+    assert len(path.read_text().splitlines()) == 2  # flushed, durable
+    tel.step(2, 1.1)  # still open: no ValueError on a closed file
+    tel.close()
+    assert len(path.read_text().splitlines()) == 3
+
+
 def test_nonfinite_observe_only_mode():
     tel = Telemetry(TelemetryConfig(stop_on_nonfinite=False))
     tel.step(0, 2.0)
@@ -233,4 +248,47 @@ def test_telemetry_is_observe_only_bitwise(tmp_path):
     instrumented = run(tel)
     assert bitwise_equal(baseline, instrumented)
     assert tel.summary()["steps"] == 6
+    # train() must NOT close a caller-provided sink (only the internal
+    # default one it created itself) — the caller owns the lifetime
+    assert tel._fh is not None
+    tel.close()
     assert (tmp_path / "t.jsonl").exists()
+
+
+def test_nonfinite_train_run_attaches_history(tmp_path):
+    """An exploding run raises the named error mid-loop, and the error
+    carries the partial (step, loss) history accumulated before the
+    stop — plus the caller's sink survives for post-mortem readback."""
+    import jax
+    import math as _math
+
+    from repro.configs import get_smoke_config
+    from repro.core.distributed import SyncConfig
+    from repro.data import token_batches
+    from repro.data.pipeline import ShardedBatcher, take
+    from repro.launch.train import TrainConfig, train
+    from repro.models import build_model
+    from repro.utils.compat import make_mesh
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = get_smoke_config("rwkv6-3b")
+    model = build_model(cfg)
+    # eta=inf: step 0's loss is finite (initial params), the update
+    # poisons the params, step 1's loss is NaN — a deterministic blowup
+    tc = TrainConfig(optimizer="memsgd", eta=float("inf"),
+                     sync=SyncConfig.preset("topk", ratio=0.02))
+    batch_list = list(take(iter(ShardedBatcher(
+        mesh, token_batches(cfg.vocab_size, 2, 16, seed=3), prefetch=0)), 4))
+    tel = Telemetry(TelemetryConfig(jsonl_path=str(tmp_path / "t.jsonl")),
+                    printer=lambda s: None)
+    with pytest.raises(NonFiniteLossError) as exc:
+        train(model, mesh, tc, iter(batch_list), n_steps=4, log_every=1,
+              rng=jax.random.PRNGKey(0), telemetry=tel)
+    e = exc.value
+    assert e.step == 1 and not _math.isfinite(e.loss)
+    # the partial history: step 0's finite loss is NOT discarded
+    assert [i for i, _ in e.history] == [0]
+    assert _math.isfinite(e.history[0][1])
+    assert tel._fh is not None  # caller sink spared on the raise path
+    assert tel.summary()["nonfinite_step"] == 1
+    tel.close()
