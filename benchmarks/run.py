@@ -598,11 +598,19 @@ def hierarchy(full: bool = False):
             memory = jax.device_put(memory, mshard)
             step = make_train_step(model, mesh, tc)
             losses = []
+            pending = None
             for i, batch in enumerate(it):
                 if i >= STEPS: break
                 params, memory, opt, count, m = step(
                     params, memory, opt, count, batch)
-                losses.append(float(m["loss"]))
+                # one-step-late drain: step i+1 is already dispatched
+                # when step i's loss crosses to host, so the float()
+                # never stalls the dispatch queue (RL001)
+                if pending is not None:
+                    losses.append(float(pending))
+                pending = m["loss"]
+            if pending is not None:
+                losses.append(float(pending))
             return params, tc.sync.pod_ratios, losses
 
         p_pk, ratios_pk, loss_pk = run("packed")

@@ -1,0 +1,37 @@
+"""``repro.analysis`` — AST-based invariant linter for this repo.
+
+Stdlib-only (the CI lint job runs it without jax). Public surface:
+
+* :func:`analyze_paths` / :func:`analyze_source` — run the rules.
+* :class:`Finding`, :func:`all_rules`, :func:`register` — the registry.
+* ``baseline`` — grandfathered-finding bookkeeping.
+* CLI: ``python -m repro.analysis`` (see ``repro.analysis.cli``).
+
+Rule ids (each guards a DESIGN.md invariant — see the "Invariant
+registry" table there):
+
+* RL001 host-sync-in-hot-path
+* RL002 use-after-donate
+* RL003 prng-key-reuse
+* RL004 recompile-hazard
+* RL005 wire-header-literal
+* RL006 silent-fallback
+"""
+from repro.analysis.registry import Finding, RuleInfo, all_rules, register
+from repro.analysis.walker import (
+    ModuleContext,
+    analyze_paths,
+    analyze_source,
+    iter_py_files,
+)
+
+__all__ = [
+    "Finding",
+    "RuleInfo",
+    "all_rules",
+    "register",
+    "ModuleContext",
+    "analyze_paths",
+    "analyze_source",
+    "iter_py_files",
+]

@@ -1,0 +1,99 @@
+"""Committed baseline of grandfathered findings.
+
+The baseline lets the linter land with a hard ``exit 1`` on NEW findings
+while legacy ones are tracked (not blessed) in a committed JSON file.
+Entries are keyed by a content fingerprint — rule id + repo-relative
+path + the stripped source line text + an occurrence counter — so line
+drift from unrelated edits does not invalidate the baseline, while any
+edit to the offending line itself surfaces the finding again (the edit
+is the natural moment to fix it).
+
+Workflow:
+    python -m repro.analysis --write-baseline   # grandfather current
+    python -m repro.analysis                    # fails only on NEW
+Fixing a baselined finding leaves a stale entry behind; the CLI reports
+stale entries so the file shrinks monotonically toward empty.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from typing import Dict, Iterable, List, Tuple
+
+from repro.analysis.registry import Finding
+
+DEFAULT_BASELINE = ".repro-lint-baseline.json"
+_VERSION = 1
+
+
+def fingerprint(finding: Finding, occurrence: int) -> str:
+    """Stable id for one finding: line-number independent, content
+    dependent. ``occurrence`` disambiguates identical lines in one file
+    (two textually equal offending lines get entries 0 and 1)."""
+    h = hashlib.sha256()
+    key = "\x1f".join(
+        (finding.rule, finding.path, finding.text, str(occurrence)))
+    h.update(key.encode("utf-8"))
+    return h.hexdigest()[:16]
+
+
+def _fingerprint_all(findings: Iterable[Finding]) -> List[Tuple[str, Finding]]:
+    counts: Dict[Tuple[str, str, str], int] = {}
+    out = []
+    for f in sorted(findings, key=lambda f: (f.path, f.line, f.col, f.rule)):
+        key = (f.rule, f.path, f.text)
+        occ = counts.get(key, 0)
+        counts[key] = occ + 1
+        out.append((fingerprint(f, occ), f))
+    return out
+
+
+def write_baseline(findings: Iterable[Finding], path: str) -> int:
+    entries = {
+        fp: {"rule": f.rule, "path": f.path, "line": f.line,
+             "text": f.text, "message": f.message}
+        for fp, f in _fingerprint_all(findings)
+    }
+    payload = {"version": _VERSION, "findings": entries}
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(payload, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    return len(entries)
+
+
+def load_baseline(path: str) -> Dict[str, dict]:
+    """Fingerprint -> entry. Corrupt baselines raise a named error (a
+    silently-ignored baseline would wave every finding through)."""
+    with open(path, encoding="utf-8") as fh:
+        try:
+            payload = json.load(fh)
+        except json.JSONDecodeError as e:
+            raise ValueError(
+                f"corrupt baseline file {path!r}: {e} — regenerate with "
+                "--write-baseline") from e
+    if not isinstance(payload, dict) or "findings" not in payload:
+        raise ValueError(
+            f"baseline file {path!r} has no 'findings' key — regenerate "
+            "with --write-baseline")
+    return dict(payload["findings"])
+
+
+def split_by_baseline(findings: Iterable[Finding], baseline: Dict[str, dict]
+                      ) -> Tuple[List[Finding], List[Finding], List[str]]:
+    """-> (new, grandfathered, stale_fingerprints)."""
+    new: List[Finding] = []
+    old: List[Finding] = []
+    seen = set()
+    for fp, f in _fingerprint_all(findings):
+        if fp in baseline:
+            seen.add(fp)
+            old.append(f)
+        else:
+            new.append(f)
+    stale = sorted(set(baseline) - seen)
+    return new, old, stale
+
+
+def default_baseline_path(root: str) -> str:
+    return os.path.join(root, DEFAULT_BASELINE)

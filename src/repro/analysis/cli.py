@@ -1,0 +1,179 @@
+"""CLI for the repro invariant linter.
+
+    python -m repro.analysis [paths...] [--format=text|json|github]
+                             [--baseline PATH | --no-baseline]
+                             [--write-baseline] [--list-rules]
+
+Default paths are ``src benchmarks tests`` (those that exist under the
+current directory). Exit status: 0 when no non-baselined findings, 1
+when new findings (or malformed suppression directives) exist, 2 on
+usage errors. Stdlib-only — the CI lint job runs this without jax.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List
+
+from repro.analysis import baseline as bl
+from repro.analysis import walker
+from repro.analysis.registry import Finding, all_rules
+
+
+def _default_paths(root: str) -> List[str]:
+    found = [p for p in walker.DEFAULT_ROOTS
+             if os.path.isdir(os.path.join(root, p))]
+    return found or ["."]
+
+
+def _format_text(findings: List[Finding]) -> str:
+    return "\n".join(
+        f"{f.location()}: {f.rule} {f.message}" for f in findings)
+
+
+def _format_json(findings: List[Finding], grandfathered: List[Finding],
+                 stale: List[str]) -> str:
+    return json.dumps(
+        {
+            "findings": [
+                {"rule": f.rule, "path": f.path, "line": f.line,
+                 "col": f.col, "message": f.message, "text": f.text}
+                for f in findings
+            ],
+            "grandfathered": len(grandfathered),
+            "stale_baseline_entries": stale,
+        },
+        indent=2,
+    )
+
+
+def _format_github(findings: List[Finding]) -> str:
+    # workflow-command annotations render inline on the PR diff; the
+    # message field must not contain raw newlines or '::'
+    out = []
+    for f in findings:
+        msg = f.message.replace("%", "%25").replace("\n", "%0A")
+        out.append(
+            f"::error file={f.path},line={f.line},col={f.col},"
+            f"title={f.rule} {_rule_name(f.rule)}::{msg}"
+        )
+    return "\n".join(out)
+
+
+def _rule_name(rule_id: str) -> str:
+    from repro.analysis.registry import get_rule
+
+    info = get_rule(rule_id)
+    return info.name if info else ""
+
+
+def _list_rules() -> str:
+    lines = []
+    for r in all_rules():
+        lines.append(f"{r.id}  {r.name}")
+        lines.append(f"    guards: {r.invariant}")
+        doc = " ".join(r.doc.split())
+        lines.append(f"    {doc}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="AST-based invariant linter for the repro codebase "
+                    "(see DESIGN.md 'Invariant registry').",
+    )
+    ap.add_argument("paths", nargs="*",
+                    help="files/directories to analyze (default: "
+                         "src benchmarks tests)")
+    ap.add_argument("--format", choices=("text", "json", "github"),
+                    default="text")
+    ap.add_argument("--baseline", default=None, metavar="PATH",
+                    help="baseline file of grandfathered findings "
+                         f"(default: {bl.DEFAULT_BASELINE} at the repo "
+                         "root when present)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report every finding, baselined or not")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="grandfather the current findings into the "
+                         "baseline file and exit 0")
+    ap.add_argument("--rules", default=None, metavar="RL001,RL002",
+                    help="run only these rule ids")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("--include-skipped", action="store_true",
+                    help="analyze files carrying a 'repro-lint: "
+                         "skip-file' marker too (fixture corpora)")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        print(_list_rules())
+        return 0
+
+    rules = all_rules()
+    if args.rules:
+        wanted = {r.strip() for r in args.rules.split(",") if r.strip()}
+        unknown = wanted - {r.id for r in rules}
+        if unknown:
+            print(f"unknown rule ids: {sorted(unknown)}", file=sys.stderr)
+            return 2
+        rules = [r for r in rules if r.id in wanted]
+
+    root = os.getcwd()
+    paths = args.paths or _default_paths(root)
+    findings = walker.analyze_paths(
+        paths, rules=rules, root=root,
+        honor_markers=not args.include_skipped)
+
+    # malformed suppression directives are findings too: a typo'd
+    # disable= suppresses nothing, silently
+    for path in walker.iter_py_files(
+            paths, honor_markers=not args.include_skipped):
+        try:
+            with open(path, encoding="utf-8", errors="replace") as fh:
+                text = fh.read()
+        except OSError:
+            continue
+        rel = os.path.relpath(os.path.abspath(path), root).replace(
+            os.sep, "/")
+        for line, msg in walker.directive_problems(text):
+            findings.append(Finding("RL000", rel, line, 1, msg, ""))
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+
+    baseline_path = args.baseline or bl.default_baseline_path(root)
+    if args.write_baseline:
+        n = bl.write_baseline(findings, baseline_path)
+        print(f"baseline written: {n} finding(s) grandfathered in "
+              f"{baseline_path}")
+        return 0
+
+    grandfathered: List[Finding] = []
+    stale: List[str] = []
+    if not args.no_baseline and os.path.exists(baseline_path):
+        try:
+            entries = bl.load_baseline(baseline_path)
+        except ValueError as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
+        findings, grandfathered, stale = bl.split_by_baseline(
+            findings, entries)
+
+    if args.format == "json":
+        print(_format_json(findings, grandfathered, stale))
+    elif args.format == "github":
+        out = _format_github(findings)
+        if out:
+            print(out)
+    else:
+        out = _format_text(findings)
+        if out:
+            print(out)
+
+    summary = (f"{len(findings)} finding(s)"
+               + (f", {len(grandfathered)} baselined" if grandfathered else "")
+               + (f", {len(stale)} stale baseline entrie(s) — "
+                  "rerun --write-baseline to shrink the file"
+                  if stale else ""))
+    print(summary, file=sys.stderr)
+    return 1 if findings else 0

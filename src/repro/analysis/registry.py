@@ -1,0 +1,79 @@
+"""Checker registry for the repro invariant linter.
+
+Every rule is a plain function ``check(ctx) -> list[Finding]`` registered
+under a stable ``RL00x`` id via the :func:`register` decorator. The ids
+are part of the repo's public surface: suppression comments
+(``# repro-lint: disable=RL001``), the committed baseline file, and the
+DESIGN.md invariant registry all key on them, so an id is never reused
+for a different class of defect.
+
+The registry is intentionally stdlib-only (``ast`` + friends): the CI
+``lint`` job runs the analyzer on a bare runner with no jax installed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One reported defect, anchored to a source location.
+
+    ``text`` carries the stripped source line so the baseline can match
+    grandfathered findings across line-number drift (see
+    ``repro.analysis.baseline.fingerprint``).
+    """
+
+    rule: str
+    path: str  # repo-relative posix path
+    line: int
+    col: int
+    message: str
+    text: str = ""
+
+    def location(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}"
+
+
+@dataclasses.dataclass(frozen=True)
+class RuleInfo:
+    """A registered checker: id, human name, the DESIGN.md invariant it
+    guards, a one-paragraph doc, and the check callable."""
+
+    id: str
+    name: str
+    invariant: str
+    doc: str
+    check: Callable  # (walker.ModuleContext) -> List[Finding]
+
+
+REGISTRY: Dict[str, RuleInfo] = {}
+
+
+def register(rule_id: str, name: str, invariant: str, doc: str):
+    """Class decorator-free registration: ``@register("RL001", ...)`` on
+    a ``check(ctx)`` function."""
+
+    def deco(fn: Callable) -> Callable:
+        if rule_id in REGISTRY:
+            raise ValueError(f"duplicate rule id {rule_id!r}")
+        REGISTRY[rule_id] = RuleInfo(rule_id, name, invariant, doc, fn)
+        return fn
+
+    return deco
+
+
+def all_rules() -> List[RuleInfo]:
+    """Registered rules in id order (import ``rules`` first)."""
+    # the import is deferred so `registry` has no import-time dependency
+    # on the rule implementations (tests register throwaway rules too)
+    from repro.analysis import rules  # noqa: F401
+
+    return [REGISTRY[k] for k in sorted(REGISTRY)]
+
+
+def get_rule(rule_id: str) -> Optional[RuleInfo]:
+    from repro.analysis import rules  # noqa: F401
+
+    return REGISTRY.get(rule_id)

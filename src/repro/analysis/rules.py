@@ -1,0 +1,820 @@
+"""The RL00x checkers: repo-specific JAX-discipline invariants.
+
+Each rule cross-references the DESIGN.md invariant it guards (see the
+"Invariant registry" table there). The rules are deliberately tuned to
+THIS repo's idioms — ``make_train_step`` factories, bucket-space wire
+buffers, the sanctioned one-step-late telemetry drain — rather than
+being a general JAX linter: the last two PRs each shipped a bug from one
+of these mechanically-detectable classes, and the goal is to catch the
+next one at lint time instead of review time.
+
+False-positive policy: every heuristic here errs toward silence. The
+suppression comment (``# repro-lint: disable=RL00x``) is the blessed
+escape for *deliberate* violations (bench timing loops that sync on
+purpose, determinism tests that reuse a key on purpose) and must carry
+a human reason next to it; the committed baseline grandfathers legacy
+findings without blessing them.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from repro.analysis import scopes
+from repro.analysis.registry import Finding, register
+from repro.analysis.scopes import (
+    FUNC_NODES,
+    LinearWalker,
+    assigned_names,
+    donate_argnums_of,
+    dotted_name,
+)
+
+# ---------------------------------------------------------------------------
+# shared repo knowledge
+
+# step factories: module-level functions known (or discovered) to return
+# a donating jitted step callable. make_train_step is the canonical one;
+# per-module discovery (a function that returns a name bound from
+# jax.jit(..., donate_argnums=...)) extends this set file-locally.
+KNOWN_STEP_FACTORIES: Dict[str, tuple] = {
+    "make_train_step": (0, 1, 2, 3),
+}
+
+# names treated as step-like even without visible provenance: the repo's
+# train-step naming convention (a loop dispatching `step(...)` is a hot
+# loop whether or not the factory call is in view)
+STEP_LIKE_NAMES = {"step", "train_step", "sync_step", "accum_step"}
+
+# host-sync callables: each blocks the dispatch queue on a device value.
+# jax.block_until_ready is deliberately absent — it is the sanctioned
+# explicit sync (bench timing); syncing *implicitly* via float()/item()
+# is the defect class.
+HOST_SYNC_BUILTINS = {"float", "bool", "int"}
+HOST_SYNC_CANONICAL = {
+    "numpy.asarray",
+    "numpy.array",
+    "numpy.float32",
+    "numpy.float64",
+    "jax.device_get",
+}
+HOST_SYNC_METHODS = {"item", "tolist", "__float__", "__bool__"}
+
+# the one sanctioned deep-copy escape at the donation boundary
+# (DESIGN.md invariant 7)
+REPLICA_COPY_SUFFIXES = ("replica_copy",)
+
+# jitted-callable methods that inspect rather than execute: calling them
+# donates nothing (they take ShapeDtypeStructs, not live buffers)
+AOT_METHODS = {"lower", "trace", "eval_shape"}
+
+
+def _module_step_factories(ctx) -> Dict[str, tuple]:
+    """KNOWN_STEP_FACTORIES plus per-module discovery: any function that
+    jit-wraps with ``donate_argnums`` a name it later returns is a
+    donating-step factory (the union of argnums across branches — a
+    factory with an H>1 variant donates at least the intersection, and
+    for defect *detection* over-marking is the safe direction)."""
+    out = dict(KNOWN_STEP_FACTORIES)
+    for func in ast.walk(ctx.tree):
+        if not isinstance(func, FUNC_NODES):
+            continue
+        jit_bound: Dict[str, Set[int]] = {}
+        for node in ast.walk(func):
+            if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+                canon = ctx.imports.resolve_call(node.value)
+                if canon in scopes.JIT_NAMES:
+                    nums = donate_argnums_of(node.value)
+                    if nums:
+                        for name in (n for t in node.targets
+                                     for n in assigned_names(t)):
+                            jit_bound.setdefault(name, set()).update(nums)
+        if not jit_bound:
+            continue
+        for node in ast.walk(func):
+            if isinstance(node, ast.Return) and isinstance(node.value, ast.Name):
+                nums = jit_bound.get(node.value.id)
+                if nums:
+                    merged = set(out.get(func.name, ())) | nums
+                    out[func.name] = tuple(sorted(merged))
+    return out
+
+
+def _is_host_sync_call(call: ast.Call, imports) -> Optional[str]:
+    """Return a short label when ``call`` is a host-sync, else None."""
+    name = dotted_name(call.func)
+    if name in HOST_SYNC_BUILTINS:
+        return f"{name}()"
+    canon = imports.resolve(name)
+    if canon in HOST_SYNC_CANONICAL:
+        return f"{canon}()"
+    if isinstance(call.func, ast.Attribute) and \
+            call.func.attr in HOST_SYNC_METHODS and not call.args:
+        return f".{call.func.attr}()"
+    return None
+
+
+class _Taint:
+    """A monotone set of device-tainted names with expression queries."""
+
+    def __init__(self, imports, seeds: Optional[Set[str]] = None):
+        self.imports = imports
+        self.names: Set[str] = set(seeds or ())
+
+    def expr_tainted(self, node: ast.AST) -> bool:
+        """Conservative-but-quiet taint for an expression: names in the
+        set, subscripts/attributes of tainted values, jnp/jax calls, and
+        containers/ops over tainted operands. Calls to *unknown*
+        functions never propagate taint — host-side helpers (autotune,
+        calibration) return host values, and flagging through them
+        drowned the signal when tried."""
+        if isinstance(node, ast.Name):
+            return node.id in self.names
+        if isinstance(node, ast.Subscript):
+            return self.expr_tainted(node.value)
+        if isinstance(node, ast.Attribute):
+            # step.pod_k_max etc. are host metadata on the callable —
+            # only taint attribute reads of tainted VALUES, and the
+            # step-like callables themselves are never in the set
+            return self.expr_tainted(node.value)
+        if isinstance(node, ast.Call):
+            canon = self.imports.resolve(dotted_name(node.func))
+            if canon and (canon.startswith("jax.numpy.")
+                          or canon.startswith("jnp.")
+                          or canon.startswith("jax.lax.")
+                          or canon in ("jax.grad", "jax.value_and_grad")):
+                return True
+            # method call ON a tainted object (m.astype(...), x.sum())
+            if isinstance(node.func, ast.Attribute) and \
+                    self.expr_tainted(node.func.value):
+                return True
+            return False
+        if isinstance(node, (ast.BinOp,)):
+            return self.expr_tainted(node.left) or self.expr_tainted(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.expr_tainted(node.operand)
+        if isinstance(node, ast.IfExp):
+            return self.expr_tainted(node.body) or self.expr_tainted(node.orelse)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.expr_tainted(e) for e in node.elts)
+        if isinstance(node, ast.Starred):
+            return self.expr_tainted(node.value)
+        return False
+
+    def absorb_assignments(self, func: ast.AST, step_like: Set[str]) -> None:
+        """Two fixpoint passes over ``func``'s assignments: names bound
+        from step-like call results or tainted expressions join the set
+        (flow-insensitive — quiet in practice because step outputs are
+        rebound every iteration by the repo's loop idiom)."""
+        for _ in range(2):
+            for node in ast.walk(func):
+                if not isinstance(node, ast.Assign):
+                    continue
+                v = node.value
+                from_step = (
+                    isinstance(v, ast.Call)
+                    and _callee_root_in(v, step_like)
+                ) or (
+                    isinstance(v, ast.IfExp)
+                    and any(isinstance(b, ast.Call)
+                            and _callee_root_in(b, step_like)
+                            for b in (v.body, v.orelse))
+                )
+                if from_step or self.expr_tainted(v):
+                    for t in node.targets:
+                        self.names.update(assigned_names(t))
+
+
+def _callee_root_in(call: ast.Call, names: Set[str]) -> bool:
+    """True when the call's root name (``step`` in ``step.accum(...)``)
+    is in ``names``."""
+    f = call.func
+    while isinstance(f, ast.Attribute):
+        f = f.value
+    return isinstance(f, ast.Name) and f.id in names
+
+
+# ---------------------------------------------------------------------------
+# RL001 — host-sync-in-hot-path
+
+
+@register(
+    "RL001",
+    "host-sync-in-hot-path",
+    "async dispatch (PR-9 review class; DESIGN.md invariant 13 note)",
+    "float()/bool()/.item()/np.asarray on device values inside a jitted/"
+    "shard_map body or inside a train-step dispatch loop serializes the "
+    "async dispatch queue (or breaks tracing outright). The sanctioned "
+    "pattern is the one-step-late drain: hold the device scalar, sync it "
+    "only after the NEXT step is dispatched.",
+)
+def check_host_sync(ctx) -> List[Finding]:
+    findings: List[Finding] = []
+    imports = ctx.imports
+    factories = _module_step_factories(ctx)
+
+    # --- A: inside traced (jit / shard_map) bodies -----------------------
+    traced = scopes.traced_function_defs(ctx.tree, imports)
+    traced_ids = {id(t) for t in traced}
+    for func in traced:
+        taint = _Taint(imports, seeds={a.arg for a in _all_args(func)})
+        taint.absorb_assignments(func, step_like=set())
+        for node in ast.walk(func):
+            # nested defs inside a traced def are traced too (closures
+            # built per-trace), so no need to skip them here
+            if isinstance(node, ast.Call):
+                label = _is_host_sync_call(node, imports)
+                if label and _sync_arg_tainted(node, taint):
+                    findings.append(ctx.finding(
+                        "RL001", node,
+                        f"host sync {label} on a traced value inside "
+                        f"jitted/shard_map body '{func.name}' — device "
+                        "values never cross to host under a trace",
+                    ))
+
+    # --- B: inside train-step dispatch loops -----------------------------
+    for func in ast.walk(ctx.tree):
+        if not isinstance(func, FUNC_NODES) or id(func) in traced_ids:
+            continue
+        step_like = _step_like_names(func, imports, factories)
+        if not step_like:
+            continue
+        hot_loops = [
+            loop for loop in ast.walk(func)
+            if isinstance(loop, (ast.For, ast.While))
+            and scopes.enclosing_function(loop) is func
+            and any(isinstance(c, ast.Call) and _callee_root_in(c, step_like)
+                    for c in ast.walk(loop))
+        ]
+        if not hot_loops:
+            continue
+        taint = _Taint(imports)
+        taint.absorb_assignments(func, step_like=step_like)
+        for loop in hot_loops:
+            for node in ast.walk(loop):
+                if not isinstance(node, ast.Call):
+                    continue
+                if _in_nested_def(node, loop, func):
+                    continue  # closures (the sanctioned drain) run later
+                label = _is_host_sync_call(node, imports)
+                if label and _sync_arg_tainted(node, taint):
+                    findings.append(ctx.finding(
+                        "RL001", node,
+                        f"host sync {label} on a step output inside the "
+                        "step-dispatch loop — this blocks async dispatch "
+                        "every step; drain one step late instead (see "
+                        "launch/train.py's pending/_drain pattern)",
+                    ))
+    return findings
+
+
+def _all_args(func: ast.AST):
+    a = func.args
+    return (list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)
+            + ([a.vararg] if a.vararg else [])
+            + ([a.kwarg] if a.kwarg else []))
+
+
+def _sync_arg_tainted(call: ast.Call, taint: _Taint) -> bool:
+    if isinstance(call.func, ast.Attribute) and not call.args:
+        return taint.expr_tainted(call.func.value)  # x.item()
+    for a in call.args:
+        if taint.expr_tainted(a):
+            return True
+        # a tainted NAME anywhere inside the arg — float(f(count)) —
+        # still forces the device value across to host for this call;
+        # general expressions stay shallow (unknown calls launder
+        # taint on purpose), names do not
+        for n in ast.walk(a):
+            if isinstance(n, ast.Name) and n.id in taint.names:
+                return True
+    return False
+
+
+def _in_nested_def(node: ast.AST, loop: ast.AST, func: ast.AST) -> bool:
+    for anc in scopes.ancestors(node):
+        if anc is loop or anc is func:
+            return False
+        if isinstance(anc, FUNC_NODES + (ast.Lambda,)):
+            return True
+    return False
+
+
+def _step_like_names(func: ast.AST, imports, factories: Dict[str, tuple]
+                     ) -> Set[str]:
+    names: Set[str] = set()
+    for node in ast.walk(func):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            canon = imports.resolve_call(node.value)
+            callee = dotted_name(node.value.func)
+            is_factory = callee in factories or (
+                canon is not None and canon.split(".")[-1] in factories)
+            is_jit = canon in scopes.JIT_NAMES
+            if is_factory or is_jit:
+                for t in node.targets:
+                    names.update(assigned_names(t))
+    # naming-convention fallback: loops calling step(...) are hot even
+    # when the factory call is out of view (helper functions, tests)
+    for node in ast.walk(func):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id in STEP_LIKE_NAMES:
+            names.add(node.func.id)
+    return names
+
+
+# ---------------------------------------------------------------------------
+# RL002 — use-after-donate
+
+
+@register(
+    "RL002",
+    "use-after-donate",
+    "DESIGN.md invariant 7 (replica_copy is the one sanctioned escape)",
+    "A buffer passed at a donated position of a donate_argnums-jitted "
+    "step is dead after the call — XLA may have aliased its memory into "
+    "the outputs. Reading it afterwards returns garbage (or crashes on "
+    "some backends). Copy it with serve.replica_copy BEFORE the call if "
+    "it must survive.",
+)
+def check_use_after_donate(ctx) -> List[Finding]:
+    findings: List[Finding] = []
+    imports = ctx.imports
+    factories = _module_step_factories(ctx)
+
+    for func in ast.walk(ctx.tree):
+        if not isinstance(func, FUNC_NODES):
+            continue
+
+        class W(LinearWalker):
+            def __init__(self):
+                super().__init__()
+                self.donating: Dict[str, tuple] = {}
+                self.dead: Dict[str, int] = {}  # name -> donation line
+
+            def snapshot(self):
+                return dict(self.donating), dict(self.dead)
+
+            def restore(self, snap) -> None:
+                self.donating = dict(snap[0])
+                self.dead = dict(snap[1])
+
+            def merge(self, branch_snaps) -> None:
+                # must-be-dead: dead on EVERY exclusive path. Branch
+                # conditions in this repo correlate (the same `H > 1`
+                # guards both the donating call and the rebinding
+                # unpack), so 'may' union manufactures infeasible
+                # donate-in-A / no-rebind-in-B paths; intersection errs
+                # toward silence per the rule policy, and the loop
+                # double-pass still catches real loop-carried bugs
+                self.donating = {}
+                for donating, _ in branch_snaps:
+                    self.donating.update(donating)
+                common = set.intersection(
+                    *(set(dead) for _, dead in branch_snaps))
+                self.dead = {
+                    name: min(dead[name] for _, dead in branch_snaps)
+                    for name in common
+                }
+
+            def visit_statement(self, stmt: ast.stmt) -> None:
+                bound = set(scopes.statement_bound_names(stmt))
+                # 1) reads of dead names in this statement
+                for node in self._stmt_loads(stmt):
+                    if node.id in self.dead and not self._sanctioned(node):
+                        self.report(ctx.finding(
+                            "RL002", node,
+                            f"'{node.id}' was donated to a jitted step at "
+                            f"line {self.dead[node.id]} and read here — "
+                            "its buffer may be aliased into the step's "
+                            "outputs; replica_copy it before the call "
+                            "(DESIGN.md invariant 7)",
+                        ))
+                # 2) donations performed by this statement
+                for call in (n for n in scopes.stmt_header_nodes(stmt)
+                             if isinstance(n, ast.Call)
+                             and not self._in_nested(n, stmt)):
+                    nums = self._donation_argnums(call)
+                    if nums is None:
+                        continue
+                    for i in nums:
+                        if i < len(call.args) and \
+                                isinstance(call.args[i], ast.Name):
+                            name = call.args[i].id
+                            if name not in bound:  # simultaneous rebind
+                                self.dead[name] = call.lineno
+                # 3) rebinding resurrects
+                for name in bound:
+                    self.dead.pop(name, None)
+                # 4) track donating callables
+                if isinstance(stmt, ast.Assign) and \
+                        isinstance(stmt.value, ast.Call):
+                    canon = imports.resolve_call(stmt.value)
+                    nums = None
+                    if canon in scopes.JIT_NAMES:
+                        nums = donate_argnums_of(stmt.value)
+                    else:
+                        callee = dotted_name(stmt.value.func)
+                        tail = (canon or callee or "").split(".")[-1]
+                        if callee in factories:
+                            nums = factories[callee]
+                        elif tail in factories:
+                            nums = factories[tail]
+                    if nums:
+                        for t in stmt.targets:
+                            for n in assigned_names(t):
+                                self.donating[n] = nums
+
+            def _donation_argnums(self, call: ast.Call):
+                f = call.func
+                # AOT inspection (step.lower/.trace/.eval_shape) takes
+                # abstract shapes and executes nothing — no donation
+                if isinstance(f, ast.Attribute) and f.attr in AOT_METHODS:
+                    return None
+                while isinstance(f, ast.Attribute):
+                    f = f.value  # step.accum(...) donates like step(...)
+                if isinstance(f, ast.Name) and f.id in self.donating:
+                    return self.donating[f.id]
+                return None
+
+            def _stmt_loads(self, stmt: ast.stmt):
+                for node in scopes.stmt_header_nodes(stmt):
+                    if isinstance(node, ast.Name) and \
+                            isinstance(node.ctx, ast.Load) and \
+                            not self._in_nested(node, stmt):
+                        yield node
+
+            @staticmethod
+            def _in_nested(node: ast.AST, stmt: ast.stmt) -> bool:
+                for anc in scopes.ancestors(node):
+                    if anc is stmt:
+                        return False
+                    if isinstance(anc, FUNC_NODES + (ast.Lambda,)):
+                        return True
+                return False
+
+            def _sanctioned(self, node: ast.Name) -> bool:
+                for anc in scopes.ancestors(node):
+                    if isinstance(anc, ast.Call):
+                        canon = imports.resolve(dotted_name(anc.func)) or ""
+                        if canon.endswith(REPLICA_COPY_SUFFIXES):
+                            return True
+                return False
+
+        w = W()
+        w.walk(func.body)
+        findings.extend(w.findings)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# RL003 — PRNG-key-reuse
+
+KEY_PRODUCERS = {"jax.random.PRNGKey", "jax.random.key"}
+KEY_DERIVERS = {"jax.random.split", "jax.random.fold_in", "jax.random.clone"}
+KEY_PARAM_NAMES = {"rng", "key", "prng", "prng_key"}
+
+
+@register(
+    "RL003",
+    "prng-key-reuse",
+    "DESIGN.md invariant 12 (QSGD stochastic-rounding reproducibility)",
+    "A jax.random key consumed twice (two sampling calls, or one call "
+    "per loop iteration without split/fold_in) draws the SAME noise "
+    "twice — correlated stochastic rounding silently biases the QSGD "
+    "wire and breaks seeded reproducibility. Derive a fresh key with "
+    "split/fold_in before every consumption.",
+)
+def check_prng_reuse(ctx) -> List[Finding]:
+    findings: List[Finding] = []
+    imports = ctx.imports
+
+    # the param-NAME heuristic ('key', 'rng', ...) only makes sense in
+    # modules that actually use jax — in stdlib-only tooling 'key' is a
+    # dict key, and flagging it drowned the signal when tried
+    uses_jax = any(v == "jax" or v.startswith("jax.")
+                   for v in imports.aliases.values())
+
+    for func in ast.walk(ctx.tree):
+        if not isinstance(func, FUNC_NODES):
+            continue
+
+        param_keys = {a.arg for a in _all_args(func)
+                      if a.arg.lower() in KEY_PARAM_NAMES
+                      or a.arg.lower().endswith("_key")} if uses_jax else set()
+
+        class W(LinearWalker):
+            def __init__(self):
+                super().__init__()
+                self.keys: Set[str] = set(param_keys)
+                self.consumed: Dict[str, int] = {}
+                self.literal_sampled: Dict[object, int] = {}
+
+            def snapshot(self):
+                return (set(self.keys), dict(self.consumed),
+                        dict(self.literal_sampled))
+
+            def restore(self, snap) -> None:
+                self.keys = set(snap[0])
+                self.consumed = dict(snap[1])
+                self.literal_sampled = dict(snap[2])
+
+            def merge(self, branch_snaps) -> None:
+                # a key consumed once in each exclusive arm is consumed
+                # once at runtime — no flag — but it still counts as
+                # consumed after the If (earliest line wins) so a LATER
+                # reuse flags. Must-semantics (intersection): only keys
+                # consumed on every path stay marked, erring silent on
+                # half-path reuse like RL002 does
+                self.keys = set().union(*(s[0] for s in branch_snaps))
+                common = set.intersection(
+                    *(set(s[1]) for s in branch_snaps))
+                self.consumed = {
+                    n: min(s[1][n] for s in branch_snaps) for n in common}
+                lit_common = set.intersection(
+                    *(set(s[2]) for s in branch_snaps))
+                self.literal_sampled = {
+                    k: min(s[2][k] for s in branch_snaps)
+                    for k in lit_common}
+
+            def visit_statement(self, stmt: ast.stmt) -> None:
+                for call in (n for n in scopes.stmt_header_nodes(stmt)
+                             if isinstance(n, ast.Call)
+                             and not _in_nested_stmt(n, stmt)):
+                    self._check_call(call)
+                # assignment handling AFTER uses in the statement value
+                if isinstance(stmt, ast.Assign):
+                    names = [n for t in stmt.targets
+                             for n in assigned_names(t)]
+                    canon = (imports.resolve_call(stmt.value)
+                             if isinstance(stmt.value, ast.Call) else None)
+                    produces = canon in KEY_PRODUCERS | KEY_DERIVERS
+                    for n in names:
+                        self.consumed.pop(n, None)  # rebound: fresh value
+                        if produces:
+                            self.keys.add(n)
+                        elif n in self.keys and not self._key_expr(stmt.value):
+                            self.keys.discard(n)
+
+            def _key_expr(self, v: ast.AST) -> bool:
+                # key, sub = split(key) unpacks to key-typed names;
+                # subscripts of split results are keys too
+                if isinstance(v, ast.Subscript):
+                    return self._key_expr(v.value)
+                if isinstance(v, ast.Call):
+                    return imports.resolve_call(v) in (
+                        KEY_PRODUCERS | KEY_DERIVERS)
+                if isinstance(v, ast.Name):
+                    return v.id in self.keys
+                return False
+
+            def _check_call(self, call: ast.Call) -> None:
+                canon = imports.resolve(dotted_name(call.func)) or ""
+                if canon in KEY_DERIVERS:
+                    return  # derivation, not consumption
+                # (a) a key VARIABLE passed whole into any call
+                args = list(call.args) + [kw.value for kw in call.keywords]
+                for a in args:
+                    if isinstance(a, ast.Name) and a.id in self.keys:
+                        prev = self.consumed.get(a.id)
+                        if prev is not None:
+                            self.report(ctx.finding(
+                                "RL003", a,
+                                f"PRNG key '{a.id}' consumed again (first "
+                                f"consumed at line {prev}) without an "
+                                "intervening split/fold_in — the same "
+                                "random stream is drawn twice",
+                            ))
+                        else:
+                            self.consumed[a.id] = a.lineno
+                # (b) two samplings from the same LITERAL PRNGKey(c)
+                if canon.startswith("jax.random.") and \
+                        canon not in KEY_PRODUCERS and call.args:
+                    first = call.args[0]
+                    if isinstance(first, ast.Call) and \
+                            imports.resolve_call(first) in KEY_PRODUCERS \
+                            and len(first.args) == 1 and \
+                            isinstance(first.args[0], ast.Constant):
+                        seed = first.args[0].value
+                        prev = self.literal_sampled.get(seed)
+                        if prev is not None:
+                            self.report(ctx.finding(
+                                "RL003", first,
+                                f"PRNGKey({seed!r}) sampled again (first "
+                                f"sampled at line {prev}) — two draws from "
+                                "one literal seed are the same stream; "
+                                "split or fold_in a step index",
+                            ))
+                        else:
+                            self.literal_sampled[seed] = call.lineno
+
+        w = W()
+        w.walk(func.body)
+        # literal-reuse dedupe across the double loop pass is handled by
+        # LinearWalker.report; single-pass literal map persists on purpose
+        findings.extend(w.findings)
+    return findings
+
+
+def _in_nested_stmt(node: ast.AST, stmt: ast.stmt) -> bool:
+    for anc in scopes.ancestors(node):
+        if anc is stmt:
+            return False
+        if isinstance(anc, FUNC_NODES + (ast.Lambda,)):
+            return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# RL004 — recompile-hazard
+
+
+@register(
+    "RL004",
+    "recompile-hazard",
+    "DESIGN.md invariants 9/10 (zero-recompile refresh)",
+    "Two shapes: (a) jax.jit/shard_map built inside a loop compiles a "
+    "fresh callable per iteration (the cache keys on function identity); "
+    "(b) a jitted closure capturing a variable the enclosing scope "
+    "rebinds later bakes a stale Python value into the trace — runtime-"
+    "varying inputs (live pod ks!) must ride as traced arguments, never "
+    "as closure state.",
+)
+def check_recompile_hazard(ctx) -> List[Finding]:
+    findings: List[Finding] = []
+    imports = ctx.imports
+
+    # (a) jit/shard_map constructed lexically inside a loop
+    for loop in ast.walk(ctx.tree):
+        if not isinstance(loop, (ast.For, ast.While)):
+            continue
+        for call in ast.walk(loop):
+            if not isinstance(call, ast.Call):
+                continue
+            canon = imports.resolve_call(call)
+            if canon in scopes.JIT_NAMES or (
+                    canon is not None
+                    and (canon == "shard_map"
+                         or canon.endswith(scopes.SHARD_MAP_SUFFIX))):
+                if _in_nested_stmt(call, loop) or not scopes.is_inside(
+                        call, loop):
+                    continue
+                findings.append(ctx.finding(
+                    "RL004", call,
+                    f"{canon} constructed inside a loop — the jit cache "
+                    "keys on function identity, so every iteration "
+                    "compiles from scratch; hoist the wrapped callable "
+                    "out of the loop and pass varying values as traced "
+                    "arguments",
+                ))
+
+    # (b) traced closure captures a name rebound after its definition
+    for func in scopes.traced_function_defs(ctx.tree, imports):
+        enclosing = scopes.enclosing_function(func)
+        if enclosing is None:
+            continue
+        free = _free_loads(func)
+        if not free:
+            continue
+        end = getattr(func, "end_lineno", func.lineno) or func.lineno
+        for stmt in scopes.linear_statements(enclosing.body):
+            if stmt.lineno <= end or scopes.is_inside(stmt, func):
+                continue
+            rebound = set(scopes.statement_bound_names(stmt)) & free
+            rebound.discard(func.name)  # f = jax.jit(f) is the idiom
+            for name in sorted(rebound):
+                findings.append(ctx.finding(
+                    "RL004", stmt,
+                    f"'{name}' is rebound here but captured by the "
+                    f"traced closure '{func.name}' defined at line "
+                    f"{func.lineno} — the trace baked in the OLD value; "
+                    "pass it as a traced argument instead (zero-"
+                    "recompile refresh, DESIGN.md invariants 9/10)",
+                ))
+    return findings
+
+
+def _free_loads(func: ast.AST) -> Set[str]:
+    """Names read by ``func`` that it neither binds nor receives."""
+    bound = {a.arg for a in _all_args(func)}
+    for node in ast.walk(func):
+        if isinstance(node, ast.Name) and isinstance(
+                node.ctx, (ast.Store, ast.Del)):
+            bound.add(node.id)
+        elif isinstance(node, FUNC_NODES) and node is not func:
+            bound.add(node.name)
+        elif isinstance(node, (ast.Global, ast.Nonlocal)):
+            bound.update(node.names)
+        elif isinstance(node, ast.comprehension):
+            bound.update(assigned_names(node.target))
+    import builtins
+
+    loads = set()
+    for node in ast.walk(func):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+            if node.id not in bound and not hasattr(builtins, node.id):
+                loads.add(node.id)
+    return loads
+
+
+# ---------------------------------------------------------------------------
+# RL005 — wire-header-literal
+
+HEADER_NAME_PARTS = ("buf", "header", "hdr", "wire", "msg", "packed")
+ENCODING_MODULE = "core/encoding.py"
+HEADER_WORDS = 8  # mirror of encoding.HEADER_WORDS (stdlib-only linter)
+
+
+@register(
+    "RL005",
+    "wire-header-literal",
+    "DESIGN.md invariants 1/3/11 (self-describing packed wire layout)",
+    "Integer-literal indexing into the packed wire header outside "
+    "core/encoding.py hardcodes the word layout — the next header "
+    "reshuffle silently reads the wrong field (the live_n word moved "
+    "once already). Use the named encoding.*_WORD constants, or better, "
+    "the accessor helpers (live_n_of, spec_of).",
+)
+def check_wire_header_literal(ctx) -> List[Finding]:
+    if ctx.relpath.endswith(ENCODING_MODULE):
+        return []  # the layout's single home defines the constants
+    findings: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Subscript):
+            continue
+        base = node.value
+        if not isinstance(base, ast.Name):
+            continue
+        name = base.id.lower()
+        if not any(p in name for p in HEADER_NAME_PARTS):
+            continue
+        if name.endswith("s"):
+            continue  # bufs/msgs are bucket LISTS, not wire buffers
+        sl = node.slice
+        if isinstance(sl, ast.Constant) and isinstance(sl.value, int) \
+                and 0 <= sl.value < HEADER_WORDS:
+            findings.append(ctx.finding(
+                "RL005", node,
+                f"'{base.id}[{sl.value}]' indexes a packed header word "
+                "by integer literal outside core/encoding.py — use the "
+                "named encoding constants (MAGIC/LIVE_N_WORD/...) or the "
+                "accessor helpers",
+            ))
+        elif isinstance(sl, ast.Slice) and sl.lower is None and \
+                isinstance(sl.upper, ast.Constant) and \
+                sl.upper.value == HEADER_WORDS:
+            findings.append(ctx.finding(
+                "RL005", node,
+                f"'{base.id}[:{HEADER_WORDS}]' slices the packed header "
+                "by literal width outside core/encoding.py — use "
+                "encoding.HEADER_WORDS",
+            ))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# RL006 — silent-fallback
+
+
+@register(
+    "RL006",
+    "silent-fallback",
+    "DESIGN.md invariant 9 note (named errors over silent defaults)",
+    "A bare except, or an except Exception whose handler neither raises "
+    "nor references the caught error, silently converts a real failure "
+    "into a default value — the pod_k_for_bucket global-ratio fallback "
+    "class (fixed in PR 5). Catch the narrowest type and raise a named "
+    "error, or at minimum report what was swallowed.",
+)
+def check_silent_fallback(ctx) -> List[Finding]:
+    findings: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        if node.type is None:
+            findings.append(ctx.finding(
+                "RL006", node,
+                "bare 'except:' swallows every failure (including "
+                "KeyboardInterrupt) — catch the narrowest type and "
+                "raise a named error",
+            ))
+            continue
+        broad = {"Exception", "BaseException"}
+        types = [node.type] if not isinstance(node.type, ast.Tuple) \
+            else list(node.type.elts)
+        if not any(dotted_name(t) in broad for t in types):
+            continue
+        has_raise = any(isinstance(n, ast.Raise) for n in ast.walk(node))
+        uses_err = node.name is not None and any(
+            isinstance(n, ast.Name) and n.id == node.name
+            and isinstance(n.ctx, ast.Load)
+            for n in ast.walk(node)
+        )
+        if not has_raise and not uses_err:
+            findings.append(ctx.finding(
+                "RL006", node,
+                "'except Exception' that neither re-raises nor reports "
+                "the caught error is a silent fallback — the "
+                "pod_k_for_bucket class of bug; raise a named error or "
+                "log what was swallowed",
+            ))
+    return findings

@@ -1,0 +1,356 @@
+"""Scope and dataflow helpers shared by the RL00x rules.
+
+Everything here is deliberately *approximate*: the rules trade soundness
+for a near-zero false-positive rate on this repo's idioms, because a
+linter that cries wolf gets suppressed wholesale. The helpers provide:
+
+* parent links + ancestor iteration over an ``ast`` tree,
+* import-alias resolution (``import jax.random as jr`` makes
+  ``jr.split`` resolve to the canonical ``jax.random.split``),
+* name extraction for assignment targets,
+* a linear, execution-ordered statement walk that visits loop bodies
+  twice (the cheap abstract unrolling that catches loop-carried
+  use-after-donate and PRNG reuse), and
+* detection of "traced" functions — defs that are jit-compiled or used
+  as ``shard_map`` bodies, where a host sync is always a defect.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Sequence, Set
+
+FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+# ---------------------------------------------------------------------------
+# parent links
+
+
+def add_parents(tree: ast.AST) -> ast.AST:
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child._rl_parent = node  # type: ignore[attr-defined]
+    return tree
+
+
+def parent(node: ast.AST) -> Optional[ast.AST]:
+    return getattr(node, "_rl_parent", None)
+
+
+def ancestors(node: ast.AST) -> Iterator[ast.AST]:
+    cur = parent(node)
+    while cur is not None:
+        yield cur
+        cur = parent(cur)
+
+
+def enclosing_function(node: ast.AST) -> Optional[ast.AST]:
+    for anc in ancestors(node):
+        if isinstance(anc, FUNC_NODES):
+            return anc
+    return None
+
+
+def is_inside(node: ast.AST, container: ast.AST) -> bool:
+    return any(anc is container for anc in ancestors(node))
+
+
+# ---------------------------------------------------------------------------
+# names
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for an Attribute/Name chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(call: ast.Call) -> Optional[str]:
+    return dotted_name(call.func)
+
+
+def assigned_names(target: ast.AST) -> List[str]:
+    """Plain names bound by an assignment target (tuples flattened;
+    subscript/attribute targets are ignored — they mutate, not bind)."""
+    out: List[str] = []
+
+    def rec(t: ast.AST) -> None:
+        if isinstance(t, ast.Name):
+            out.append(t.id)
+        elif isinstance(t, (ast.Tuple, ast.List)):
+            for e in t.elts:
+                rec(e)
+        elif isinstance(t, ast.Starred):
+            rec(t.value)
+
+    rec(target)
+    return out
+
+
+def statement_bound_names(stmt: ast.stmt) -> List[str]:
+    """Names (re)bound by a single statement, for taint clearing."""
+    if isinstance(stmt, ast.Assign):
+        return [n for t in stmt.targets for n in assigned_names(t)]
+    if isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        return assigned_names(stmt.target)
+    if isinstance(stmt, (ast.For, ast.AsyncFor)):
+        return assigned_names(stmt.target)
+    if isinstance(stmt, (ast.With, ast.AsyncWith)):
+        return [
+            n
+            for item in stmt.items
+            if item.optional_vars is not None
+            for n in assigned_names(item.optional_vars)
+        ]
+    if isinstance(stmt, FUNC_NODES + (ast.ClassDef,)):
+        return [stmt.name]
+    return []
+
+
+# ---------------------------------------------------------------------------
+# imports
+
+
+class Imports:
+    """Resolve local aliases to canonical dotted names.
+
+    ``import jax.random as jr``          -> jr        => jax.random
+    ``from jax import random``           -> random    => jax.random
+    ``from jax.random import fold_in``   -> fold_in   => jax.random.fold_in
+    ``from repro.utils import compat``   -> compat    => repro.utils.compat
+
+    ``resolve("jr.split")`` => ``"jax.random.split"``. Unknown roots
+    resolve to themselves, so builtins pass through unchanged.
+    """
+
+    def __init__(self, tree: ast.AST):
+        self.aliases: Dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.asname:
+                        self.aliases[a.asname] = a.name
+                    else:
+                        root = a.name.split(".")[0]
+                        self.aliases[root] = root
+            elif isinstance(node, ast.ImportFrom) and node.module and not node.level:
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    self.aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+
+    def resolve(self, dotted: Optional[str]) -> Optional[str]:
+        if dotted is None:
+            return None
+        head, _, rest = dotted.partition(".")
+        base = self.aliases.get(head, head)
+        return f"{base}.{rest}" if rest else base
+
+    def resolve_call(self, call: ast.Call) -> Optional[str]:
+        return self.resolve(call_name(call))
+
+
+# ---------------------------------------------------------------------------
+# linear statement walks
+
+
+def child_blocks(stmt: ast.stmt) -> List[Sequence[ast.stmt]]:
+    """Nested statement blocks of a compound statement, in source order.
+    Function/class bodies are NOT descended into — they run later."""
+    if isinstance(stmt, FUNC_NODES + (ast.ClassDef,)):
+        return []
+    blocks: List[Sequence[ast.stmt]] = []
+    for field in ("body", "orelse", "finalbody"):
+        b = getattr(stmt, field, None)
+        if b:
+            blocks.append(b)
+    for h in getattr(stmt, "handlers", None) or []:
+        blocks.append(h.body)
+    return blocks
+
+
+def stmt_header_nodes(stmt: ast.stmt) -> Iterator[ast.AST]:
+    """Nodes evaluated by the statement ITSELF.
+
+    For compound statements that is only the header expression (the
+    ``if``/``while`` test, the ``for`` iterable and target, the ``with``
+    items) — their nested blocks are visited as statements of their own
+    by :class:`LinearWalker`, and pre-scanning them here would break
+    execution order (a donation deep in a loop body must not be
+    processed before the statements above it have run)."""
+    if isinstance(stmt, (ast.If, ast.While)):
+        yield from ast.walk(stmt.test)
+    elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+        yield from ast.walk(stmt.iter)
+        yield from ast.walk(stmt.target)
+    elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+        for item in stmt.items:
+            yield from ast.walk(item.context_expr)
+            if item.optional_vars is not None:
+                yield from ast.walk(item.optional_vars)
+    elif isinstance(stmt, ast.Try):
+        return
+    elif isinstance(stmt, FUNC_NODES + (ast.ClassDef,)):
+        for dec in stmt.decorator_list:
+            yield from ast.walk(dec)
+    else:
+        yield from ast.walk(stmt)
+
+
+def linear_statements(body: Sequence[ast.stmt]) -> Iterator[ast.stmt]:
+    """All statements in execution order, recursing into compound
+    bodies but not into nested function/class definitions."""
+    for stmt in body:
+        yield stmt
+        for block in child_blocks(stmt):
+            yield from linear_statements(block)
+
+
+class LinearWalker:
+    """Execution-ordered walk with loop bodies visited twice.
+
+    Subclasses override :meth:`visit_statement`; the double pass over
+    ``for``/``while`` bodies is the one-line abstract interpretation
+    that surfaces loop-carried defects (a buffer donated at the bottom
+    of the body and read at the top of the next iteration, a PRNG key
+    consumed once per iteration). Findings must therefore be deduped by
+    location — use :meth:`report`.
+
+    ``if``/``else`` blocks are mutually exclusive at runtime; stateful
+    subclasses override :meth:`snapshot` / :meth:`restore` /
+    :meth:`merge` so state from the taken branch does not leak into the
+    analysis of the other (a key consumed once in each arm is consumed
+    once, not twice). The default hooks are no-ops, giving the plain
+    sequential walk.
+    """
+
+    def __init__(self) -> None:
+        self._seen: Set[tuple] = set()
+        self.findings: List = []
+
+    def report(self, finding) -> None:
+        key = (finding.rule, finding.line, finding.col)
+        if key not in self._seen:
+            self._seen.add(key)
+            self.findings.append(finding)
+
+    def visit_statement(self, stmt: ast.stmt) -> None:  # pragma: no cover
+        raise NotImplementedError
+
+    def snapshot(self):
+        """Capture mutable analysis state before a branch (override)."""
+        return None
+
+    def restore(self, snap) -> None:
+        """Reset analysis state to a :meth:`snapshot` (override)."""
+
+    def merge(self, branch_snaps) -> None:
+        """Join the post-states of mutually exclusive branches
+        (override; must-semantics — intersection — is the usual choice
+        here, since repeated branch conditions correlate)."""
+
+    def walk(self, body: Sequence[ast.stmt]) -> None:
+        for stmt in body:
+            self.visit_statement(stmt)
+            if isinstance(stmt, ast.If):
+                before = self.snapshot()
+                self.walk(stmt.body)
+                taken = self.snapshot()
+                self.restore(before)
+                if stmt.orelse:
+                    self.walk(stmt.orelse)
+                self.merge([taken, self.snapshot()])
+            elif isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+                for _ in range(2):  # unroll twice: loop-carried state
+                    for block in child_blocks(stmt):
+                        self.walk(block)
+            else:
+                for block in child_blocks(stmt):
+                    self.walk(block)
+
+
+# ---------------------------------------------------------------------------
+# traced (jit / shard_map) functions
+
+JIT_NAMES = {"jax.jit", "jax.pjit", "jit", "pjit"}
+SHARD_MAP_SUFFIX = ".shard_map"
+
+
+def _is_jit_callee(canon: Optional[str]) -> bool:
+    return canon in JIT_NAMES
+
+
+def _is_shard_map_callee(canon: Optional[str]) -> bool:
+    return canon is not None and (
+        canon == "shard_map" or canon.endswith(SHARD_MAP_SUFFIX)
+    )
+
+
+def jit_decorated(func: ast.AST, imports: Imports) -> bool:
+    """True for ``@jax.jit`` / ``@partial(jax.jit, ...)`` decorations."""
+    for dec in getattr(func, "decorator_list", []):
+        canon = imports.resolve(dotted_name(dec))
+        if _is_jit_callee(canon):
+            return True
+        if isinstance(dec, ast.Call):
+            canon = imports.resolve_call(dec)
+            if _is_jit_callee(canon):
+                return True
+            if canon in ("functools.partial", "partial") and dec.args:
+                inner = imports.resolve(dotted_name(dec.args[0]))
+                if _is_jit_callee(inner):
+                    return True
+    return False
+
+
+def traced_function_defs(tree: ast.AST, imports: Imports) -> List[ast.AST]:
+    """Defs whose bodies run under a trace: jit-decorated, or passed by
+    name to ``jax.jit(...)`` / ``*.shard_map(...)`` anywhere in the
+    module (names are matched textually — good enough at module scale,
+    where a def and its wrapping share a function or module scope)."""
+    defs_by_name: Dict[str, List[ast.AST]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, FUNC_NODES):
+            defs_by_name.setdefault(node.name, []).append(node)
+
+    traced: List[ast.AST] = []
+    traced_ids: Set[int] = set()
+
+    def mark(name: str) -> None:
+        for d in defs_by_name.get(name, []):
+            if id(d) not in traced_ids:
+                traced_ids.add(id(d))
+                traced.append(d)
+
+    for node in ast.walk(tree):
+        if isinstance(node, FUNC_NODES) and jit_decorated(node, imports):
+            if id(node) not in traced_ids:
+                traced_ids.add(id(node))
+                traced.append(node)
+        elif isinstance(node, ast.Call):
+            canon = imports.resolve_call(node)
+            if _is_jit_callee(canon) or _is_shard_map_callee(canon):
+                if node.args and isinstance(node.args[0], ast.Name):
+                    mark(node.args[0].id)
+    return traced
+
+
+def donate_argnums_of(call: ast.Call) -> Optional[tuple]:
+    """Literal ``donate_argnums`` of a jit call, else None."""
+    for kw in call.keywords:
+        if kw.arg in ("donate_argnums", "donate_argnames"):
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                return (v.value,)
+            if isinstance(v, (ast.Tuple, ast.List)):
+                out = []
+                for e in v.elts:
+                    if isinstance(e, ast.Constant) and isinstance(e.value, int):
+                        out.append(e.value)
+                return tuple(out) if out else None
+    return None

@@ -1,0 +1,253 @@
+"""File walking, suppression parsing, and the per-module analysis driver.
+
+Suppression grammar (tokenizer-based, so trailing comments on any code
+line work):
+
+    x = float(loss)  # repro-lint: disable=RL001     <- this line only
+    # repro-lint: disable=RL001,RL003               <- next line
+    # repro-lint: skip-file                          <- whole file
+                                                        (fixture corpora)
+
+A standalone directive comment applies to the next CODE line (blank and
+comment-only lines between are skipped, so a reason may continue over
+several comment lines); a trailing directive applies to its own line.
+``skip-file`` (anywhere in
+the first 20 lines) removes the file from directory walks — it marks
+fixture corpora and generated code as *input data*, not code under the
+invariants. Explicit analysis of such files (the fixture tests) passes
+``honor_markers=False``.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import os
+import re
+import tokenize
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Set
+
+from repro.analysis import scopes
+from repro.analysis.registry import Finding, RuleInfo
+
+DIRECTIVE = "repro-lint:"
+SKIP_FILE = "skip-file"
+SKIP_SCAN_LINES = 20
+
+
+class ModuleContext:
+    """Parsed view of one source file handed to every rule."""
+
+    def __init__(self, path: str, relpath: str, text: str):
+        self.path = path
+        self.relpath = relpath.replace(os.sep, "/")
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree = scopes.add_parents(ast.parse(text))
+        self.imports = scopes.Imports(self.tree)
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+    def finding(self, rule: str, node: ast.AST, message: str) -> Finding:
+        line = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0) + 1
+        return Finding(rule, self.relpath, line, col, message,
+                       self.line_text(line))
+
+
+def parse_directives(text: str):
+    """-> (suppressions: {line: set(rule_ids)}, skip_file: bool).
+
+    Malformed directives (no ``disable=``, unknown verb) are reported by
+    the CLI via :func:`directive_problems`, not silently ignored here —
+    a typo'd suppression that silently suppresses nothing is exactly the
+    kind of defect this linter exists to prevent.
+    """
+    suppressions: Dict[int, Set[str]] = {}
+    skip_file = False
+    lines = text.splitlines()
+    for line_no, is_standalone, body in _directive_comments(text):
+        if body.startswith(SKIP_FILE):
+            if line_no <= SKIP_SCAN_LINES:
+                skip_file = True
+            continue
+        if body.startswith("disable="):
+            ids = {r for r in _disable_ids(body) if _RULE_ID_RE.match(r)}
+            target = line_no
+            if is_standalone:
+                target += 1
+                while target <= len(lines) and (
+                        not lines[target - 1].strip()
+                        or lines[target - 1].lstrip().startswith("#")):
+                    target += 1
+            suppressions.setdefault(target, set()).update(ids)
+    return suppressions, skip_file
+
+
+_RULE_ID_RE = re.compile(r"^(RL\d{3}|\*)$")
+
+
+def _disable_ids(body: str) -> List[str]:
+    """Rule ids of a ``disable=...`` body: the first whitespace token
+    holds the comma list, anything after it is the human reason."""
+    rest = body[len("disable="):].split()
+    return [t.strip() for t in (rest[0] if rest else "").split(",")]
+
+
+def directive_problems(text: str) -> List[tuple]:
+    """(line, message) for malformed ``repro-lint:`` directives."""
+    problems = []
+    for line_no, _, body in _directive_comments(text):
+        if body.startswith(SKIP_FILE):
+            continue
+        if body.startswith("disable="):
+            from repro.analysis.registry import all_rules
+
+            known = {r.id for r in all_rules()} | {"*"}
+            ids = _disable_ids(body)
+            bad = [t for t in ids if t not in known]
+            if bad or not any(ids):
+                problems.append(
+                    (line_no,
+                     f"malformed repro-lint disable list {','.join(ids)!r}"
+                     " (expected comma-joined registered RL00x ids)"))
+            continue
+        problems.append(
+            (line_no,
+             f"malformed repro-lint directive {body.split()[0] if body else ''!r}"
+             " (expected 'disable=RL00x[,...]' or 'skip-file')")
+        )
+    return problems
+
+
+def _directive_comments(text: str) -> Iterator[tuple]:
+    """Yield (line, is_standalone, directive_body) for each
+    ``# repro-lint:`` comment, via the tokenizer (string literals that
+    merely contain the marker are not comments)."""
+    try:
+        tokens = list(tokenize.generate_tokens(io.StringIO(text).readline))
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        return
+    lines = text.splitlines()
+    for tok in tokens:
+        if tok.type != tokenize.COMMENT:
+            continue
+        comment = tok.string.lstrip("#").strip()
+        if not comment.startswith(DIRECTIVE):
+            continue
+        body = comment[len(DIRECTIVE):].strip()
+        line = tok.start[0]
+        prefix = lines[line - 1][: tok.start[1]] if line <= len(lines) else ""
+        yield line, not prefix.strip(), body
+
+
+def is_suppressed(finding: Finding, suppressions: Dict[int, Set[str]],
+                  end_line: Optional[int] = None) -> bool:
+    span = range(finding.line, (end_line or finding.line) + 1)
+    for line in span:
+        ids = suppressions.get(line)
+        if ids and (finding.rule in ids or "*" in ids):
+            return True
+    return False
+
+
+def analyze_source(path: str, relpath: str, text: str,
+                   rules: Sequence[RuleInfo]) -> List[Finding]:
+    """Run ``rules`` over one file's text; suppressions applied."""
+    suppressions, _ = parse_directives(text)
+    try:
+        ctx = ModuleContext(path, relpath, text)
+    except SyntaxError as e:
+        return [Finding("RL000", relpath.replace(os.sep, "/"),
+                        e.lineno or 1, (e.offset or 0) or 1,
+                        f"syntax error: {e.msg}", "")]
+    findings: List[Finding] = []
+    for rule in rules:
+        for f in rule.check(ctx):
+            node_end = None
+            # a multi-line statement may carry its trailing suppression
+            # on any physical line of the finding's anchor statement
+            if f.line <= len(ctx.lines):
+                node_end = _statement_end_line(ctx, f.line)
+            if not is_suppressed(f, suppressions, node_end):
+                findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return findings
+
+
+def _statement_end_line(ctx: ModuleContext, line: int) -> int:
+    """End line of the smallest statement starting at ``line`` (so a
+    suppression trailing a wrapped call still lands)."""
+    best = line
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.stmt) and node.lineno == line:
+            end = getattr(node, "end_lineno", line) or line
+            best = max(best, end)
+    return best
+
+
+# ---------------------------------------------------------------------------
+# file discovery
+
+DEFAULT_ROOTS = ("src", "benchmarks", "tests")
+EXCLUDED_DIRS = {"__pycache__", ".git", ".github", "node_modules"}
+
+
+def iter_py_files(paths: Iterable[str], honor_markers: bool = True
+                  ) -> Iterator[str]:
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py") and not (
+                    honor_markers and _has_skip_marker(p)):
+                yield p
+        elif os.path.isdir(p):
+            for dirpath, dirnames, filenames in os.walk(p):
+                dirnames[:] = sorted(
+                    d for d in dirnames if d not in EXCLUDED_DIRS)
+                for fn in sorted(filenames):
+                    if not fn.endswith(".py"):
+                        continue
+                    full = os.path.join(dirpath, fn)
+                    if honor_markers and _has_skip_marker(full):
+                        continue
+                    yield full
+
+
+def _has_skip_marker(path: str) -> bool:
+    try:
+        with open(path, encoding="utf-8", errors="replace") as f:
+            for _ in range(SKIP_SCAN_LINES):
+                line = f.readline()
+                if not line:
+                    break
+                if DIRECTIVE in line and SKIP_FILE in line and \
+                        line.lstrip().startswith("#"):
+                    return True
+    except OSError:
+        pass
+    return False
+
+
+def analyze_paths(paths: Sequence[str], rules: Optional[Sequence[RuleInfo]]
+                  = None, root: Optional[str] = None,
+                  honor_markers: bool = True) -> List[Finding]:
+    """Analyze files/directories; paths in findings are relative to
+    ``root`` (default: the current working directory)."""
+    from repro.analysis.registry import all_rules
+
+    rules = list(rules) if rules is not None else all_rules()
+    root = root or os.getcwd()
+    findings: List[Finding] = []
+    for path in iter_py_files(paths, honor_markers=honor_markers):
+        try:
+            with open(path, encoding="utf-8", errors="replace") as f:
+                text = f.read()
+        except OSError as e:
+            findings.append(Finding("RL000", os.path.relpath(path, root),
+                                    1, 1, f"unreadable file: {e}", ""))
+            continue
+        rel = os.path.relpath(os.path.abspath(path), root)
+        findings.extend(analyze_source(path, rel, text, rules))
+    return findings

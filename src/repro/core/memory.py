@@ -50,6 +50,9 @@ def memory_step(
     shape = grad.shape
     u = memory.reshape(-1) + eta * grad.reshape(-1).astype(memory.dtype)
     applied_flat = compressor.dense(u, key)
+    # repro-lint: disable=RL003  (dense and sparse are two encodings of
+    # the SAME compression: they must draw identical coordinates, so
+    # sharing the key is required — not a reuse bug)
     sparse = compressor.sparse(u, key) if compressor.sparse is not None else None
     new_mem = u - applied_flat
     return MemoryUpdate(

@@ -87,6 +87,20 @@ def _eta_schedule(tc: TrainConfig):
     return lambda t: jnp.asarray(tc.eta, jnp.float32)
 
 
+def _eta_at(tc: TrainConfig, t: int) -> float:
+    """Host-side mirror of ``_eta_schedule`` for the refresh path.
+
+    The calibration branch needs eta_t on host; syncing the device step
+    count with ``float(...)`` mid-loop would stall the dispatch queue
+    (RL001), and the loop index is the same value already on host —
+    ``count`` starts at 0 in ``train()`` and every step variant
+    (step/sync/accum) increments it exactly once per dispatched step.
+    """
+    if tc.eta_shift > 0:
+        return float(tc.eta * tc.eta_shift / (tc.eta_shift + float(t)))
+    return float(tc.eta)
+
+
 def _worker_count(mesh, data_axes) -> int:
     n = 1
     for a in data_axes:
@@ -880,9 +894,11 @@ def train(model, mesh, tc: TrainConfig, batches, n_steps: int,
             # materialized host-side before the donating step call),
             # at the SAME eta the step applies — the scheduled eta_t
             # (or adam's fixed 1.0); with eta decay the base eta would
-            # overweight the gradient in u = m + eta*g and mis-size k
+            # overweight the gradient in u = m + eta*g and mis-size k.
+            # Computed host-side from the loop index (== count here):
+            # float(count) would sync the dispatch queue every refresh
             eta_now = (
-                float(_eta_schedule(tc)(count))
+                _eta_at(tc, i)
                 if tc.optimizer in ("memsgd", "memsgd_momentum", "dense")
                 else 1.0
             )

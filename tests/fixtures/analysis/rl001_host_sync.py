@@ -1,0 +1,93 @@
+# repro-lint: skip-file  (linter fixture: parsed by tests, never run)
+#
+# RL001 host-sync-in-hot-path corpus. `# EXPECT: RL00x` marks lines the
+# rule must flag; every other line must stay silent.
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.train import make_train_step
+
+
+# --- true positives: host sync inside a traced body ----------------------
+
+@jax.jit
+def traced_loss(params, batch):
+    loss = jnp.mean(params["w"] * batch)
+    return float(loss)  # EXPECT: RL001
+
+
+def make_traced(spec):
+    def inner(x):
+        return np.asarray(x).sum()  # EXPECT: RL001
+
+    return jax.jit(inner)
+
+
+# --- true positives: host sync inside a step-dispatch loop ----------------
+
+def train_loop(model, mesh, tc, batches):
+    step = make_train_step(model, mesh, tc)
+    params, memory, opt, count = init_state(model)
+    losses = []
+    for batch in batches:
+        params, memory, opt, count, m = step(params, memory, opt, count, batch)
+        losses.append(float(m["loss"]))  # EXPECT: RL001
+        if bool(m["done"]):  # EXPECT: RL001
+            break
+    return losses
+
+
+def eta_through_helper(tc, batches, step):
+    for batch in batches:
+        out = step(batch)
+        # tainted name inside an unknown call still crosses to host
+        eta = float(schedule(tc)(out))  # EXPECT: RL001
+    return eta
+
+
+# --- negatives ------------------------------------------------------------
+
+def drain_pattern(step, batches):
+    """The sanctioned one-step-late drain: sync lives in a closure that
+    runs AFTER the next step is dispatched."""
+    pending = None
+
+    def _drain(p):
+        return float(p)  # closure, not the loop body: silent
+
+    out = None
+    for batch in batches:
+        out = step(batch)
+        if pending is not None:
+            _drain(pending)
+        pending = out["loss"]
+    return out
+
+
+def host_only_loop(rows):
+    # no step dispatch in sight: float() on host data is fine
+    total = 0.0
+    for r in rows:
+        total += float(r["value"])
+    return total
+
+
+def bench_timing(step, batches):
+    for batch in batches:
+        out = step(batch)
+        # block_until_ready is the sanctioned EXPLICIT sync
+        jax.block_until_ready(out)
+    return out
+
+
+# --- suppressed -----------------------------------------------------------
+
+def convergence_smoke(step, batches):
+    losses = []
+    for batch in batches:
+        m = step(batch)
+        # repro-lint: disable=RL001  (smoke test: simplicity beats
+        # throughput here, the sync is deliberate)
+        losses.append(float(m["loss"]))
+    return losses

@@ -1,0 +1,87 @@
+# repro-lint: skip-file  (linter fixture: parsed by tests, never run)
+#
+# RL002 use-after-donate corpus.
+import jax
+import jax.numpy as jnp
+
+from repro.launch.train import make_train_step
+from repro.launch import serve
+
+
+# --- true positives -------------------------------------------------------
+
+def read_after_jit_donation(params, batch):
+    step = jax.jit(update, donate_argnums=(0,))
+    new_params = step(params, batch)
+    norm = jnp.linalg.norm(params["w"])  # EXPECT: RL002
+    return new_params, norm
+
+
+def read_after_factory_donation(model, mesh, tc, batches):
+    step = make_train_step(model, mesh, tc)
+    params, memory, opt, count = init_state(model)
+    out = step(params, memory, opt, count, next(batches))
+    stale = memory  # EXPECT: RL002
+    return out, stale
+
+
+def loop_carried_donation(model, mesh, tc, batches):
+    step = make_train_step(model, mesh, tc)
+    params, memory, opt, count = init_state(model)
+    for batch in batches:
+        # `out` is never unpacked back into params: iteration 2 passes
+        # a donated buffer back into the step
+        out = step(params, memory, opt, count, batch)  # EXPECT: RL002
+    return out
+
+
+# --- negatives ------------------------------------------------------------
+
+def simultaneous_rebind(model, mesh, tc, batches):
+    step = make_train_step(model, mesh, tc)
+    params, memory, opt, count = init_state(model)
+    for batch in batches:
+        params, memory, opt, count, m = step(params, memory, opt, count, batch)
+    return params
+
+
+def sanctioned_replica_copy(model, mesh, tc, batch):
+    step = make_train_step(model, mesh, tc)
+    params, memory, opt, count = init_state(model)
+    snapshot = serve.replica_copy(params)
+    params, memory, opt, count, m = step(params, memory, opt, count, batch)
+    return snapshot, serve.replica_copy(params)
+
+
+def aot_lowering_is_not_execution(model, mesh, tc, a_params, a_batch):
+    step = make_train_step(model, mesh, tc)
+    lowered = step.lower(a_params, a_batch)
+    return lowered, a_params  # abstract shapes: nothing was donated
+
+
+def correlated_branches(model, mesh, tc, batches, H):
+    """The same condition guards the donating call and the rebinding
+    unpack — no feasible donate-then-read path exists."""
+    step = make_train_step(model, mesh, tc)
+    params, memory, opt, count = init_state(model)
+    acc = init_acc(model) if H > 1 else None
+    for batch in batches:
+        if H > 1:
+            out = step(params, memory, acc, opt, count, batch)
+        else:
+            out = step(params, memory, opt, count, batch)
+        if H > 1:
+            params, memory, acc, opt, count, m = out
+        else:
+            params, memory, opt, count, m = out
+    return params, acc
+
+
+# --- suppressed -----------------------------------------------------------
+
+def suppressed_read(params, batch):
+    step = jax.jit(update, donate_argnums=(0,))
+    new_params = step(params, batch)
+    # repro-lint: disable=RL002  (fixture: demonstrating suppression)
+    norm = jnp.linalg.norm(params["w"])
+    return new_params, norm

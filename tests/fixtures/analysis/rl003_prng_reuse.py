@@ -1,0 +1,86 @@
+# repro-lint: skip-file  (linter fixture: parsed by tests, never run)
+#
+# RL003 prng-key-reuse corpus.
+import jax
+import jax.numpy as jnp
+import jax.random as jr
+
+
+# --- true positives -------------------------------------------------------
+
+def double_sample(key):
+    a = jax.random.normal(key, (4,))
+    b = jax.random.uniform(key, (4,))  # EXPECT: RL003
+    return a + b
+
+
+def reuse_via_alias(seed):
+    k = jr.PRNGKey(seed)
+    noise = jr.normal(k, (8,))
+    jitter = jr.bernoulli(k, 0.5, (8,))  # EXPECT: RL003
+    return noise, jitter
+
+
+def loop_without_fold(key, n):
+    out = []
+    for i in range(n):
+        out.append(jax.random.normal(key, (2,)))  # EXPECT: RL003
+    return out
+
+
+def literal_seed_twice():
+    u = jax.random.normal(jax.random.PRNGKey(0), (3,))
+    v = jax.random.normal(jax.random.PRNGKey(0), (3,))  # EXPECT: RL003
+    return u, v
+
+
+# --- negatives ------------------------------------------------------------
+
+def split_before_each_use(key):
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, (4,))
+    b = jax.random.uniform(k2, (4,))
+    return a + b
+
+
+def fold_in_loop(key, n):
+    out = []
+    for i in range(n):
+        out.append(jax.random.normal(jax.random.fold_in(key, i), (2,)))
+    return out
+
+
+def exclusive_branches(key, kind):
+    k1, k2 = jax.random.split(key)
+    if kind == "rec":
+        block = jax.random.normal(k1, (4,))
+    else:
+        block = jax.random.uniform(k1, (4,))
+    tail = jax.random.normal(k2, (4,))
+    return block, tail
+
+
+def rebound_key(key, n):
+    for i in range(n):
+        noise = jax.random.normal(key, (2,))
+        key, _ = jax.random.split(key)
+    return noise
+
+
+def dict_key_is_not_prng(table, key):
+    # module imports jax, but `key` here is consumed by plain helpers —
+    # passing a name into an unknown call twice IS flagged when it looks
+    # like a key param; renaming or splitting is the fix. This negative
+    # pins the *derivation* exemption instead:
+    sub = jax.random.fold_in(key, 3)
+    other = jax.random.fold_in(key, 4)
+    return sub, other
+
+
+# --- suppressed -----------------------------------------------------------
+
+def deliberate_same_draw(key):
+    dense = jax.random.normal(key, (4,))
+    # repro-lint: disable=RL003  (two encodings of the SAME draw)
+    sparse = jax.random.normal(key, (4,))
+    return dense, sparse

@@ -1,0 +1,87 @@
+# repro-lint: skip-file  (linter fixture: parsed by tests, never run)
+#
+# RL004 recompile-hazard corpus.
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.compat import shard_map
+
+
+# --- true positives: jit/shard_map constructed inside a loop --------------
+
+def jit_per_iteration(specs, vals):
+    out = []
+    for spec in specs:
+        encode = jax.jit(lambda v: pack(spec, v))  # EXPECT: RL004
+        out.append(encode(vals))
+    return out
+
+
+def shard_map_per_iteration(mesh, kernels, x):
+    for kern in kernels:
+        y = shard_map(kern, mesh=mesh, in_specs=None, out_specs=None)(x)  # EXPECT: RL004
+    return y
+
+
+# --- true positive: traced closure over a later-rebound name --------------
+
+def stale_closure(mesh, x):
+    k_live = 4
+
+    @jax.jit
+    def step(v):
+        return jnp.sum(v) * k_live
+
+    y = step(x)
+    k_live = 8  # EXPECT: RL004
+    return step(x), y
+
+
+# --- negatives ------------------------------------------------------------
+
+def hoisted_jit(specs, vals):
+    encode = jax.jit(pack_all)
+    out = []
+    for spec in specs:
+        out.append(encode(spec, vals))
+    return out
+
+
+def self_rebind_idiom(x):
+    def step(v):
+        return jnp.sum(v)
+
+    step = jax.jit(step)  # f = jax.jit(f) is the idiom, not a hazard
+    return step(x)
+
+
+def rebind_before_definition(mesh, x):
+    k_live = 4
+    k_live = 8  # rebinding BEFORE the trace exists is fine
+
+    @jax.jit
+    def step(v):
+        return jnp.sum(v) * k_live
+
+    return step(x)
+
+
+def traced_argument_refresh(step, pod_ks, x):
+    # the sanctioned shape: runtime-varying values ride as traced args
+    for ks in pod_ks:
+        y = step(x, ks)
+    return y
+
+
+# --- suppressed -----------------------------------------------------------
+
+def deliberate_jit_in_loop(specs, vals):
+    out = []
+    for spec in specs:
+        # repro-lint: disable=RL004  (two fixed dtype variants, bench
+        # code compiles each exactly once on purpose)
+        encode = jax.jit(lambda v: pack(spec, v))
+        out.append(encode(vals))
+    return out

@@ -1,0 +1,58 @@
+# repro-lint: skip-file  (linter fixture: parsed by tests, never run)
+#
+# RL005 wire-header-literal corpus.
+import jax.numpy as jnp
+
+from repro.core import encoding
+
+
+# --- true positives -------------------------------------------------------
+
+def peek_live_n(buf):
+    return buf[7]  # EXPECT: RL005
+
+
+def check_magic(header):
+    if header[0] != 0x53505257:  # EXPECT: RL005
+        raise ValueError("bad magic")
+    return header
+
+
+def strip_header(wire_buf):
+    head = wire_buf[:8]  # EXPECT: RL005
+    return head
+
+
+# --- negatives ------------------------------------------------------------
+
+def named_constant(buf):
+    return buf[encoding.LIVE_N_WORD]
+
+
+def accessor_helpers(buf):
+    return encoding.live_n_of(buf)
+
+
+def bucket_lists(bufs):
+    # plural: a LIST of bucket buffers, first bucket — not a header word
+    return bufs[0]
+
+
+def payload_index(buf, i):
+    return buf[i]
+
+
+def beyond_header(buf):
+    # payload starts after the header; literal 8 is not a header word
+    return buf[8:]
+
+
+def unrelated_name(table):
+    return table[3]
+
+
+# --- suppressed -----------------------------------------------------------
+
+def deliberate_raw_peek(buf):
+    # repro-lint: disable=RL005  (debug dump: prints every raw word)
+    return buf[1]

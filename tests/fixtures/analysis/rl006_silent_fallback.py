@@ -1,0 +1,60 @@
+# repro-lint: skip-file  (linter fixture: parsed by tests, never run)
+#
+# RL006 silent-fallback corpus.
+
+
+# --- true positives -------------------------------------------------------
+
+def bare_except(cfg):
+    try:
+        return cfg["pod_k"]
+    except:  # EXPECT: RL006
+        return 1
+
+
+def swallowed_exception(plan, bucket):
+    try:
+        return plan.pod_k_for_bucket(bucket)
+    except Exception:  # EXPECT: RL006
+        return plan.global_ratio
+
+
+def bound_but_unused(path):
+    try:
+        return open(path).read()
+    except Exception as e:  # EXPECT: RL006
+        return ""
+
+
+# --- negatives ------------------------------------------------------------
+
+def narrow_catch(cfg):
+    try:
+        return cfg["pod_k"]
+    except KeyError:
+        return 1
+
+
+def reraised_named(plan, bucket):
+    try:
+        return plan.pod_k_for_bucket(bucket)
+    except Exception as e:
+        raise RuntimeError(f"pod_k lookup failed for {bucket}") from e
+
+
+def reported_error(path, log):
+    try:
+        return open(path).read()
+    except Exception as e:
+        log.warning("unreadable %s: %s", path, e)
+        return ""
+
+
+# --- suppressed -----------------------------------------------------------
+
+def deliberate_best_effort(sock):
+    try:
+        sock.close()
+    # repro-lint: disable=RL006  (close() on shutdown is best-effort)
+    except Exception:
+        pass

@@ -1,0 +1,343 @@
+"""Tests for the ``repro.analysis`` invariant linter.
+
+Deliberately jax-free (stdlib + pytest only): the CI lint job runs this
+file without the jax toolchain, the same way it runs the linter itself.
+
+The fixture corpora under ``tests/fixtures/analysis/`` are self-
+describing: every line a rule must flag carries ``# EXPECT: RL00x``, and
+the per-fixture test asserts the finding set EQUALS the expectation set
+— a fixture false positive fails just as loudly as a miss.
+"""
+import json
+import os
+import re
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import analyze_paths, analyze_source, all_rules
+from repro.analysis import baseline as bl
+from repro.analysis import walker
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURES = os.path.join(REPO, "tests", "fixtures", "analysis")
+EXPECT_RE = re.compile(r"#\s*EXPECT:\s*(RL\d{3}(?:\s*,\s*RL\d{3})*)\s*$")
+
+FIXTURE_FILES = sorted(
+    f for f in os.listdir(FIXTURES) if f.endswith(".py"))
+
+
+def _expected_findings(path):
+    out = set()
+    with open(path, encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, start=1):
+            m = EXPECT_RE.search(line)
+            if m:
+                for rule in m.group(1).split(","):
+                    out.add((rule.strip(), lineno))
+    return out
+
+
+def _analyze_file(path):
+    with open(path, encoding="utf-8") as fh:
+        text = fh.read()
+    rel = os.path.relpath(path, REPO)
+    return analyze_source(path, rel, text, all_rules())
+
+
+# ---------------------------------------------------------------------------
+# fixture corpora: findings == EXPECT annotations, exactly
+
+
+@pytest.mark.parametrize("name", FIXTURE_FILES)
+def test_fixture_corpus(name):
+    path = os.path.join(FIXTURES, name)
+    expected = _expected_findings(path)
+    assert expected, f"fixture {name} has no EXPECT annotations"
+    got = {(f.rule, f.line) for f in _analyze_file(path)}
+    missing = expected - got
+    unexpected = got - expected
+    assert not missing, f"{name}: rules missed {sorted(missing)}"
+    assert not unexpected, f"{name}: false positives {sorted(unexpected)}"
+
+
+def test_every_rule_has_fixture_coverage():
+    covered = set()
+    for name in FIXTURE_FILES:
+        covered.update(
+            r for r, _ in _expected_findings(os.path.join(FIXTURES, name)))
+    assert {r.id for r in all_rules()} <= covered
+
+
+def test_fixtures_carry_skip_marker():
+    # default directory walks must never see the corpora
+    assert list(walker.iter_py_files([FIXTURES])) == []
+    visible = list(walker.iter_py_files([FIXTURES], honor_markers=False))
+    assert len(visible) == len(FIXTURE_FILES)
+
+
+# ---------------------------------------------------------------------------
+# suppression directives
+
+
+def test_trailing_suppression():
+    src = (
+        "import jax\n"
+        "def f(key):\n"
+        "    a = jax.random.normal(key, (2,))\n"
+        "    b = jax.random.normal(key, (2,))  # repro-lint: disable=RL003\n"
+        "    return a, b\n"
+    )
+    assert analyze_source("x.py", "x.py", src, all_rules()) == []
+
+
+def test_standalone_suppression_skips_comment_lines():
+    src = (
+        "import jax\n"
+        "def f(key):\n"
+        "    a = jax.random.normal(key, (2,))\n"
+        "    # repro-lint: disable=RL003  (reason line one\n"
+        "    # continues over a second comment line)\n"
+        "    b = jax.random.normal(key, (2,))\n"
+        "    return a, b\n"
+    )
+    assert analyze_source("x.py", "x.py", src, all_rules()) == []
+
+
+def test_suppression_is_per_rule():
+    src = (
+        "import jax\n"
+        "def f(key):\n"
+        "    a = jax.random.normal(key, (2,))\n"
+        "    b = jax.random.normal(key, (2,))  # repro-lint: disable=RL001\n"
+        "    return a, b\n"
+    )
+    findings = analyze_source("x.py", "x.py", src, all_rules())
+    assert [f.rule for f in findings] == ["RL003"]
+
+
+def test_multiline_statement_trailing_suppression():
+    src = (
+        "import jax\n"
+        "def f(key):\n"
+        "    a = jax.random.normal(key, (2,))\n"
+        "    b = jax.random.normal(\n"
+        "        key, (2,))  # repro-lint: disable=RL003\n"
+        "    return a, b\n"
+    )
+    assert analyze_source("x.py", "x.py", src, all_rules()) == []
+
+
+def test_malformed_directive_reported():
+    src = "x = 1  # repro-lint: disable=RL01\n"
+    problems = walker.directive_problems(src)
+    assert len(problems) == 1 and problems[0][0] == 1
+
+    # format-valid but unregistered ids are typos too
+    problems = walker.directive_problems(
+        "x = 1  # repro-lint: disable=RL999\n")
+    assert len(problems) == 1
+
+    assert walker.directive_problems(
+        "x = 1  # repro-lint: disable=RL001,RL003  (reason)\n") == []
+    assert walker.directive_problems(
+        "# repro-lint: skip-file\n") == []
+
+
+def test_unknown_verb_reported():
+    problems = walker.directive_problems("# repro-lint: disalbe=RL001\n")
+    assert len(problems) == 1
+
+
+def test_skip_file_marker_must_be_near_top():
+    late = "\n" * 30 + "# repro-lint: skip-file\n"
+    _, skip = walker.parse_directives(late)
+    assert not skip
+    _, skip = walker.parse_directives("# repro-lint: skip-file\nx = 1\n")
+    assert skip
+
+
+def test_syntax_error_becomes_rl000():
+    findings = analyze_source("x.py", "x.py", "def f(:\n", all_rules())
+    assert [f.rule for f in findings] == ["RL000"]
+
+
+# ---------------------------------------------------------------------------
+# baseline
+
+
+def _rl003_findings():
+    src = (
+        "import jax\n"
+        "def f(key):\n"
+        "    a = jax.random.normal(key, (2,))\n"
+        "    b = jax.random.normal(key, (2,))\n"
+        "    return a, b\n"
+    )
+    return analyze_source("x.py", "x.py", src, all_rules())
+
+
+def test_baseline_round_trip(tmp_path):
+    findings = _rl003_findings()
+    assert findings
+    path = str(tmp_path / "baseline.json")
+    n = bl.write_baseline(findings, path)
+    assert n == len(findings)
+    new, old, stale = bl.split_by_baseline(findings, bl.load_baseline(path))
+    assert new == [] and len(old) == len(findings) and stale == []
+
+
+def test_baseline_is_line_number_independent(tmp_path):
+    findings = _rl003_findings()
+    path = str(tmp_path / "baseline.json")
+    bl.write_baseline(findings, path)
+    # unrelated edits shift line numbers but not the offending text
+    shifted = [type(f)(f.rule, f.path, f.line + 7, f.col, f.message, f.text)
+               for f in findings]
+    new, old, stale = bl.split_by_baseline(shifted, bl.load_baseline(path))
+    assert new == [] and stale == []
+
+
+def test_baseline_resurfaces_on_text_change(tmp_path):
+    findings = _rl003_findings()
+    path = str(tmp_path / "baseline.json")
+    bl.write_baseline(findings, path)
+    edited = [type(f)(f.rule, f.path, f.line, f.col, f.message,
+                      f.text + "  # touched")
+              for f in findings]
+    new, old, stale = bl.split_by_baseline(edited, bl.load_baseline(path))
+    assert len(new) == len(findings)
+    assert len(stale) == len(findings)  # the old fingerprints are gone
+
+
+def test_corrupt_baseline_raises_named_error(tmp_path):
+    path = tmp_path / "baseline.json"
+    path.write_text("{not json", encoding="utf-8")
+    with pytest.raises(ValueError, match="corrupt baseline"):
+        bl.load_baseline(str(path))
+    path.write_text('{"version": 1}', encoding="utf-8")
+    with pytest.raises(ValueError, match="no 'findings' key"):
+        bl.load_baseline(str(path))
+
+
+# ---------------------------------------------------------------------------
+# CLI (the exact CI-invoked entry point, driven via subprocess)
+
+
+def _run_cli(*args, cwd=REPO):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True, cwd=cwd, env=env, timeout=300)
+
+
+def test_cli_list_rules():
+    proc = _run_cli("--list-rules")
+    assert proc.returncode == 0
+    for rule in all_rules():
+        assert rule.id in proc.stdout
+
+
+def test_cli_json_on_fixture():
+    path = os.path.join("tests", "fixtures", "analysis",
+                        "rl005_wire_header.py")
+    proc = _run_cli(path, "--include-skipped", "--no-baseline",
+                    "--format=json")
+    assert proc.returncode == 1
+    payload = json.loads(proc.stdout)
+    got = {(f["rule"], f["line"]) for f in payload["findings"]}
+    assert got == _expected_findings(os.path.join(REPO, path))
+
+
+def test_cli_github_format():
+    path = os.path.join("tests", "fixtures", "analysis",
+                        "rl006_silent_fallback.py")
+    proc = _run_cli(path, "--include-skipped", "--no-baseline",
+                    "--format=github")
+    assert proc.returncode == 1
+    lines = [l for l in proc.stdout.splitlines() if l]
+    assert lines and all(l.startswith("::error file=") for l in lines)
+    assert any("RL006" in l for l in lines)
+
+
+def test_cli_clean_repo_with_baseline():
+    """The committed baseline makes the default CI invocation pass —
+    zero NON-baselined findings on src/ benchmarks/ tests/."""
+    proc = _run_cli("--format=github")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_unknown_rule_is_usage_error():
+    proc = _run_cli("--rules", "RL999")
+    assert proc.returncode == 2
+
+
+# ---------------------------------------------------------------------------
+# seeded-defect drills: mutate a scratch copy of launch/train.py and
+# prove the CI-invoked command catches the regression
+
+
+TRAIN = os.path.join(REPO, "src", "repro", "launch", "train.py")
+# the line right after the donating step call and BEFORE the state
+# unpack: params/memory/opt are donated-and-not-yet-rebound here
+ANCHOR = "cache = _cache_sizes(step, H)"
+
+
+def _seed_train(tmp_path, inserted_line):
+    with open(TRAIN, encoding="utf-8") as fh:
+        src = fh.read()
+    assert ANCHOR in src, "train.py drain anchor moved; update the drill"
+    indent = " " * 8
+    src = src.replace(ANCHOR, f"{inserted_line}\n{indent}{ANCHOR}", 1)
+    scratch = tmp_path / "train_scratch.py"
+    scratch.write_text(src, encoding="utf-8")
+    return str(scratch)
+
+
+def test_seeded_rl001_is_caught(tmp_path):
+    scratch = _seed_train(
+        tmp_path, 'print(float(metrics["loss"]))')
+    proc = _run_cli(scratch, "--no-baseline")
+    assert proc.returncode == 1
+    assert "RL001" in proc.stdout
+
+
+def test_seeded_rl002_is_caught(tmp_path):
+    scratch = _seed_train(tmp_path, "lint_canary = [params]")
+    proc = _run_cli(scratch, "--no-baseline")
+    assert proc.returncode == 1
+    assert "RL002" in proc.stdout
+
+
+def test_unseeded_train_is_clean():
+    proc = _run_cli(os.path.join("src", "repro", "launch", "train.py"),
+                    "--no-baseline")
+    assert proc.returncode == 0, proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# registry
+
+
+def test_registry_is_complete_and_documented():
+    rules = all_rules()
+    assert [r.id for r in rules] == sorted(r.id for r in rules)
+    assert len(rules) >= 6
+    for r in rules:
+        assert r.name and r.invariant and r.doc
+
+
+def test_analyze_paths_relative_output(tmp_path):
+    f = tmp_path / "mod.py"
+    f.write_text(
+        "import jax\n"
+        "def g(key):\n"
+        "    a = jax.random.normal(key, (2,))\n"
+        "    b = jax.random.normal(key, (2,))\n",
+        encoding="utf-8")
+    findings = analyze_paths([str(f)], root=str(tmp_path))
+    assert [f_.rule for f_ in findings] == ["RL003"]
+    assert findings[0].path == "mod.py"
